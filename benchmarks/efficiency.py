@@ -1,0 +1,107 @@
+"""Paper Fig. 4: parallel efficiency vs worker count and evaluation time.
+
+rho = s * P * M * N_E * I / (T * N_w)   (paper eq. 1)
+
+On this CPU container we cannot spread workers over real chips, so the
+measurement isolates exactly what the paper's benchmark isolates: the
+*framework overhead* (selection, variation, survivor sort, broker dispatch,
+migration, host round-trips) relative to pure fitness-evaluation time. The
+per-individual evaluation cost `s` is a calibrated on-device FLOP loop
+(fitness.delay_proxy), and N_w on one device is the number of parallel
+evaluation lanes the SPMD program carries (vectorization width).
+
+On a real pod, lanes map 1:1 to chips and the same harness measures the
+paper's Fig. 4; the dry-run proves the program shards.
+"""
+from __future__ import annotations
+
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import GAConfig
+from repro.core.broker import Broker
+from repro.core.island import evaluate_population, make_epoch_step
+from repro.core.population import init_population
+from repro.fitness import delay_proxy, sphere
+
+
+def measure_efficiency(*, workers: int, sleep_iters: int,
+                       pop_per_island: int, islands: int,
+                       generations: int, epochs: int,
+                       seed: int = 0) -> float:
+    """One Fig.-4 cell: returns rho = T_eval / T_epoch.
+
+    T_eval  — wall time of the fitness evaluations alone (M*N_E broker
+              evaluations of the full population), the paper's s*P*M*N_E*I
+              numerator measured on this hardware instead of assumed.
+    T_epoch — wall time of the full framework epochs (selection, variation,
+              survivor sort, dispatch, migration + the same evaluations).
+    rho <= 1 by construction; 1 - rho is the framework overhead fraction —
+    exactly what the paper's Fig. 4 isolates with its sleep(s) loads.
+    """
+    cfg = GAConfig(num_genes=4, pop_per_island=pop_per_island,
+                   num_islands=islands, generations_per_epoch=generations,
+                   num_epochs=epochs, lower=-1.0, upper=1.0,
+                   fused_operators=False, seed=seed)
+    fn = delay_proxy(sphere, flop_iters=sleep_iters)
+    broker = Broker(fn, num_workers=workers)
+    epoch = jax.jit(make_epoch_step(cfg, broker))
+
+    # T_eval in the SAME structural form as the epoch (a scan of M
+    # evaluations inside one jit) so dispatch/loop overheads cancel and the
+    # ratio isolates the framework's GA-ops overhead.
+    flat = cfg.global_pop
+
+    def eval_epoch(genomes):
+        def body(c, _):
+            f, _ = broker.evaluate(c.reshape(flat, cfg.num_genes))
+            # thread a data dependency so the scan isn't collapsed
+            c = c + 0.0 * f.reshape(cfg.num_islands, cfg.pop_per_island,
+                                    -1)[..., :1] * 0.0
+            return c, None
+        return jax.lax.scan(body, genomes, None,
+                            length=generations)[0]
+
+    eval_jit = jax.jit(eval_epoch)
+
+    pop = init_population(cfg, jax.random.PRNGKey(seed))
+    pop = evaluate_population(cfg, broker, pop)
+    jax.block_until_ready(epoch(pop)[0])
+    jax.block_until_ready(eval_jit(pop.genomes))
+
+    t0 = time.perf_counter()
+    out = None
+    for _ in range(epochs):
+        out = eval_jit(pop.genomes)
+    jax.block_until_ready(out)
+    t_eval = time.perf_counter() - t0
+
+    p2 = pop
+    t0 = time.perf_counter()
+    for _ in range(epochs):
+        p2, _ = epoch(p2)
+    jax.block_until_ready(p2)
+    t_epoch = time.perf_counter() - t0
+
+    return float(t_eval / t_epoch)
+
+
+def run(csv: bool = True):
+    rows = []
+    for workers, iters in [(1, 20_000), (4, 20_000), (16, 20_000),
+                           (16, 100_000), (16, 400_000), (64, 20_000)]:
+        rho = measure_efficiency(workers=workers, sleep_iters=iters,
+                                 pop_per_island=32, islands=4,
+                                 generations=3, epochs=2)
+        rows.append(("fig4_efficiency", workers, iters, round(rho, 4)))
+        if csv:
+            print(f"fig4_efficiency,workers={workers},iters={iters},"
+                  f"rho={rho:.4f}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,66 @@
+# One function per paper table/figure. Prints ``name,...,derived`` CSV.
+"""Benchmark entrypoint: ``PYTHONPATH=src python -m benchmarks.run``.
+
+  fig4_efficiency  — parallel efficiency vs workers x eval time (Fig. 4)
+  fig5_*           — horizontal vs vertical HVDC scaling (Fig. 5)
+  fig6_metaga      — meta-GA hyperparameter evolution (Fig. 6)
+  broker/operator  — framework overhead microbench (Tab. 1 / §3 claims)
+  roofline         — three-term roofline per dry-run cell (EXPERIMENTS.md)
+
+Pass --quick for the fast subset (CI); --only NAME to run one section.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args(argv)
+
+    sections = {}
+
+    def want(name):
+        return args.only is None or args.only == name
+
+    t_all = time.perf_counter()
+
+    if want("broker_overhead"):
+        from benchmarks import broker_overhead
+        print("# --- framework overhead (paper §3 / Tab. 1) ---")
+        sections["broker_overhead"] = broker_overhead.run()
+
+    if want("efficiency"):
+        from benchmarks import efficiency
+        print("# --- Fig. 4: parallel efficiency ---")
+        sections["efficiency"] = efficiency.run()
+
+    if want("hvdc_scaling"):
+        from benchmarks import hvdc_scaling
+        print("# --- Fig. 5: horizontal vs vertical HVDC ---")
+        sections["hvdc_scaling"] = hvdc_scaling.run(
+            grid_buses=30 if args.quick else 40,
+            epochs=2 if args.quick else 4)
+
+    if want("meta_ga"):
+        from benchmarks import meta_ga
+        print("# --- Fig. 6: meta-GA hyperparameters ---")
+        sections["meta_ga"] = meta_ga.run(
+            epochs=1 if args.quick else 2,
+            pop=6 if args.quick else 8,
+            inner_generations=4 if args.quick else 6)
+
+    if want("roofline"):
+        from benchmarks import roofline
+        print("# --- roofline terms from the dry-run ---")
+        sections["roofline"] = roofline.run()
+
+    print(f"# total {time.perf_counter() - t_all:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

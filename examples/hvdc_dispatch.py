@@ -1,0 +1,66 @@
+"""HVDC dispatch optimization (paper §4.2) end to end.
+
+Builds a synthetic transmission grid, wraps the batched Newton AC powerflow
+as the GA's fitness (with optional N-1 contingency penalties + LODF
+screening), and optimizes the HVDC setpoints with the island engine. The
+broker balances predicted Newton cost across evaluation lanes.
+
+    PYTHONPATH=src python examples/hvdc_dispatch.py [--contingencies 12]
+"""
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import GAConfig
+from repro.core.engine import GAEngine
+from repro.fitness.powerflow import HVDCDispatchFitness
+from repro.powerflow.grid import make_synthetic_grid
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--buses", type=int, default=60)
+    ap.add_argument("--hvdc", type=int, default=4)
+    ap.add_argument("--contingencies", type=int, default=0)
+    ap.add_argument("--screen-top-k", type=int, default=0)
+    ap.add_argument("--epochs", type=int, default=10)
+    args = ap.parse_args()
+
+    grid = make_synthetic_grid(
+        n_bus=args.buses, n_line=int(args.buses * 1.9),
+        n_gen=max(6, args.buses // 4), n_hvdc=args.hvdc, seed=1)
+    fitness = HVDCDispatchFitness(
+        grid, contingencies=args.contingencies,
+        screen_top_k=args.screen_top_k, newton_iters=10)
+    jfit = jax.jit(fitness)
+
+    zero = float(jfit(jnp.zeros((1, grid.n_hvdc)))[0, 0])
+    print(f"zero-dispatch objective (sum line flows): {zero:.3f} p.u.")
+
+    cfg = GAConfig(
+        num_genes=grid.n_hvdc, pop_per_island=24, num_islands=2,
+        generations_per_epoch=5, num_epochs=args.epochs,
+        lower=-1.0, upper=1.0,
+        mutation_prob=0.7, mutation_eta=34.6,     # paper Tab. 3 (a)
+        crossover_prob=1.0, crossover_eta=97.5,
+        seed=0)
+    engine = GAEngine(cfg, jfit, cost_fn=fitness.cost_model(),
+                      log_fn=lambda r: print(
+                          f"epoch {r['epoch']:3d}  best {r['best']:.4f}  "
+                          f"dispatch-skew {r['skew']:.3f}"))
+    pop, _ = engine.run()
+    genome, f = engine.best(pop)
+    mw = np.asarray(jax.device_get(
+        genome * np.asarray(grid.hvdc_pmax))) * 100.0
+    print(f"\noptimized objective: {f[0]:.3f} p.u. "
+          f"({100 * (zero - f[0]) / zero:+.1f}% vs zero dispatch)")
+    print(f"HVDC setpoints (MW): {np.round(mw, 1)}")
+
+
+if __name__ == "__main__":
+    main()

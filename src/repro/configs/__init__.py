@@ -1,0 +1,48 @@
+"""Config registry: ``get_config(arch_id)`` / ``list_archs()``.
+
+Each assigned architecture has its own module defining ``CONFIG``; the paper's
+GA experiment settings live in ``hvdc_ga.py``.
+"""
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import (GAConfig, ModelConfig, ShapeConfig, SHAPES,
+                                shape_applicable)
+
+# arch-id -> module name
+_ARCH_MODULES = {
+    "mamba2-780m":          "mamba2_780m",
+    "llava-next-34b":       "llava_next_34b",
+    "jamba-1.5-large-398b": "jamba_1_5_large_398b",
+    "granite-8b":           "granite_8b",
+    "gemma2-2b":            "gemma2_2b",
+    "minicpm-2b":           "minicpm_2b",
+    "tinyllama-1.1b":       "tinyllama_1_1b",
+    "qwen2-moe-a2.7b":      "qwen2_moe_a2_7b",
+    "granite-moe-1b-a400m": "granite_moe_1b_a400m",
+    "whisper-large-v3":     "whisper_large_v3",
+}
+
+_cache: dict[str, ModelConfig] = {}
+
+
+def list_archs() -> list[str]:
+    return sorted(_ARCH_MODULES)
+
+
+def get_config(arch: str) -> ModelConfig:
+    if arch not in _ARCH_MODULES:
+        raise KeyError(f"unknown arch {arch!r}; known: {list_archs()}")
+    if arch not in _cache:
+        mod = importlib.import_module(f"repro.configs.{_ARCH_MODULES[arch]}")
+        _cache[arch] = mod.CONFIG
+    return _cache[arch]
+
+
+def get_shape(name: str) -> ShapeConfig:
+    return SHAPES[name]
+
+
+__all__ = ["GAConfig", "ModelConfig", "ShapeConfig", "SHAPES",
+           "get_config", "get_shape", "list_archs", "shape_applicable"]

@@ -1,0 +1,12 @@
+"""CHAMB-GA core: the paper's contribution as composable JAX modules.
+
+Population/operators/NSGA-II are pure array programs; `island` adds the
+asynchronous island model (collective-free generations + ring migration);
+`broker` is the TPU-native analogue of the paper's RabbitMQ shared
+evaluation queue; `engine` orchestrates epochs, checkpoints and termination;
+`meta` implements the hierarchical meta-GA (paper §4.2.2).
+"""
+from repro.core.engine import GAEngine
+from repro.core.population import Population, init_population
+
+__all__ = ["GAEngine", "Population", "init_population"]

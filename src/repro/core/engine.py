@@ -1,0 +1,115 @@
+"""GAEngine: epoch orchestration, termination, checkpointing, logging.
+
+The engine is the paper's "CHAMB-GA scripts" control hub (Fig. 1): it owns
+the jitted epoch step (cluster side) and handles user-facing concerns —
+run control, wall-clock/target termination, checkpoint/restart, history.
+
+Async manager/worker note: JAX dispatch is asynchronous — the host enqueues
+epoch e+1 while the devices still execute epoch e; the engine only blocks
+when it *reads* metrics (controlled by ``sync_every``). That is the
+manager-side counterpart of the paper's non-blocking queue submission.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import GAConfig
+from repro.core.broker import Broker
+from repro.core.island import (evaluate_population, make_epoch_step,
+                               constrain_pop)
+from repro.core.population import Population, best_of, init_population
+from repro.models.sharding import ShardingCtx
+
+
+class GAEngine:
+    def __init__(self, cfg: GAConfig, fitness_fn: Callable, *,
+                 cost_fn: Optional[Callable] = None,
+                 ctx: Optional[ShardingCtx] = None,
+                 num_workers: Optional[int] = None,
+                 checkpointer=None, checkpoint_every: int = 0,
+                 log_fn: Optional[Callable] = None,
+                 sync_every: int = 1):
+        self.cfg = cfg
+        self.ctx = ctx
+        workers = num_workers if num_workers is not None else (
+            ctx.dp_size if ctx and ctx.mesh else 1)
+        self.broker = Broker(fitness_fn, cost_fn, num_workers=workers)
+        self.checkpointer = checkpointer
+        self.checkpoint_every = checkpoint_every
+        self.log_fn = log_fn
+        self.sync_every = max(1, sync_every)
+        self._epoch_step = jax.jit(make_epoch_step(cfg, self.broker, ctx))
+        self._init_eval = jax.jit(
+            lambda pop: evaluate_population(cfg, self.broker, pop))
+
+    # ------------------------------------------------------------------
+    def init(self, seed: Optional[int] = None) -> Population:
+        rng = jax.random.PRNGKey(self.cfg.seed if seed is None else seed)
+        pop = init_population(self.cfg, rng)
+        pop = constrain_pop(pop, self.ctx)
+        return self._init_eval(pop)
+
+    def restore(self, step: Optional[int] = None) -> Optional[Population]:
+        if self.checkpointer is None:
+            return None
+        state = self.checkpointer.restore(step)
+        return None if state is None else Population(**state)
+
+    # ------------------------------------------------------------------
+    def run(self, pop: Optional[Population] = None, *,
+            epochs: Optional[int] = None,
+            target: Optional[float] = None,
+            wallclock_s: Optional[float] = None):
+        """Run until an epoch/target/wall-clock limit. Returns
+        (population, history) where history is a list of per-epoch dicts."""
+        cfg = self.cfg
+        if pop is None:
+            pop = self.restore() or self.init()
+        epochs = epochs if epochs is not None else cfg.num_epochs
+        history = []
+        t0 = time.monotonic()
+        pending = []                                   # async metric reads
+        start_epoch = int(jax.device_get(pop.epoch))
+
+        for e in range(start_epoch, start_epoch + epochs):
+            pop, metrics = self._epoch_step(pop)
+            pending.append((e, metrics))
+            if (e + 1) % self.sync_every == 0 or e == start_epoch + epochs - 1:
+                for ee, mm in pending:
+                    mm = jax.device_get(mm)
+                    rec = {"epoch": ee,
+                           "best_per_island": np.asarray(mm["best"])[-1],
+                           "best": float(np.min(mm["best"])),
+                           "trace": np.asarray(mm["best"]),
+                           "skew": float(np.mean(mm["skew"]))}
+                    history.append(rec)
+                    if self.log_fn:
+                        self.log_fn(rec)
+                pending = []
+                if target is not None and history and history[-1]["best"] <= target:
+                    break
+            if self.checkpointer and self.checkpoint_every and \
+                    (e + 1) % self.checkpoint_every == 0:
+                self.checkpointer.save(dict(pop._asdict()), step=e + 1)
+            if wallclock_s is not None and time.monotonic() - t0 > wallclock_s:
+                break
+        for ee, mm in pending:
+            mm = jax.device_get(mm)
+            history.append({"epoch": ee,
+                            "best_per_island": np.asarray(mm["best"])[-1],
+                            "best": float(np.min(mm["best"])),
+                            "trace": np.asarray(mm["best"]),
+                            "skew": float(np.mean(mm["skew"]))})
+        if self.checkpointer and self.checkpoint_every:
+            self.checkpointer.save(dict(pop._asdict()),
+                                   step=int(jax.device_get(pop.epoch)))
+        return pop, history
+
+    def best(self, pop: Population):
+        g, f = jax.device_get(best_of(pop))
+        return np.asarray(g), np.asarray(f)

@@ -1,0 +1,137 @@
+"""Hierarchical meta-GA (paper §4.2.2, Tab. 4).
+
+A governing GA evolves hyperparameter vectors; each meta-individual's
+fitness is the best solution found by an *inner* GA configured with those
+hyperparameters, min'd over `num_seeds` seeds ("the overall best found
+solution is returned as fitness").
+
+All three stages scale independently, as in the paper:
+  meta individuals  -> sharded over the mesh data axis (vmap)
+  inner GA runs     -> vmapped over (individual x seed)
+  fitness evaluators-> the inner fitness_fn may itself be model-axis sharded
+
+Variable population size is genome-encoded: the inner GA runs at a static
+``p_max`` with the first ``round(P)`` slots active (masked selection /
+masked fitness), which keeps shapes SPMD-static — the TPU equivalent of the
+paper's dynamically sized worker-GA populations.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import GAConfig
+from repro.core import nsga2, operators
+
+# (name, low, high) — paper Tab. 4
+META_GENE_SPEC = (
+    ("pop_size", 12.0, 500.0),
+    ("cx_prob", 0.0, 1.0),
+    ("mut_prob", 0.0, 1.0),
+    ("eta_mut", 0.01, 100.0),
+    ("eta_cx", 0.01, 100.0),
+)
+
+
+def meta_bounds() -> Tuple[tuple, tuple]:
+    lo = tuple(s[1] for s in META_GENE_SPEC)
+    hi = tuple(s[2] for s in META_GENE_SPEC)
+    return lo, hi
+
+
+def decode_meta_genome(g: jax.Array) -> dict:
+    """g: (5,) raw gene values -> hyperparameter dict (traced)."""
+    return {"pop_size": g[0], "cx_prob": g[1], "mut_prob": g[2],
+            "eta_mut": g[3], "eta_cx": g[4]}
+
+
+def make_inner_ga(inner_cfg: GAConfig, fitness_fn: Callable, *,
+                  p_max: int, generations: int) -> Callable:
+    """Returns inner_run(hyper_genome (5,), rng) -> best fitness scalar.
+
+    The inner GA is a single island at static width `p_max` with masked
+    active population; fitness_fn: (N, G) -> (N,) or (N, 1).
+    """
+    lo, hi = inner_cfg.bounds()
+    lo, hi = jnp.asarray(lo), jnp.asarray(hi)
+    g = inner_cfg.num_genes
+    indpb = inner_cfg.indpb
+
+    def eval_fit(genomes):
+        f = fitness_fn(genomes)
+        return f[..., 0] if f.ndim > 1 else f
+
+    def inner_run(hgenome: jax.Array, rng: jax.Array) -> jax.Array:
+        hp = decode_meta_genome(hgenome)
+        p_act = jnp.clip(jnp.round(hp["pop_size"]), 2, p_max)
+        k_init, k_loop = jax.random.split(rng)
+        genomes = jax.random.uniform(k_init, (p_max, g), jnp.float32, 0., 1.)
+        genomes = lo + genomes * (hi - lo)
+        slot = jnp.arange(p_max)
+        fit = jnp.where(slot < p_act, eval_fit(genomes), jnp.inf)
+
+        def gen(state, k):
+            genomes, fit = state
+            k_sel, k_var = jax.random.split(k)
+            key = fit                                  # single objective
+            parents_idx = operators.tournament_select(
+                k_sel, key, p_max, active=p_act)
+            parents = genomes[parents_idx]
+            off = operators.variation(
+                k_var, parents, eta_cx=hp["eta_cx"], prob_cx=hp["cx_prob"],
+                eta_mut=hp["eta_mut"], prob_mut=hp["mut_prob"],
+                indpb=indpb, lower=lo, upper=hi, use_kernel=False)
+            off_fit = jnp.where(slot < p_act, eval_fit(off), jnp.inf)
+            cg = jnp.concatenate([genomes, off])
+            cf = jnp.concatenate([fit, off_fit])
+            order = jnp.argsort(cf)[:p_max]
+            return (cg[order], cf[order]), jnp.min(cf)
+
+        keys = jax.random.split(k_loop, generations)
+        (_, fit), best_trace = jax.lax.scan(gen, (genomes, fit), keys)
+        return jnp.min(fit)
+
+    return inner_run
+
+
+def make_meta_fitness(inner_cfg: GAConfig, fitness_fn: Callable, *,
+                      p_max: int = 64, generations: int = 20,
+                      num_seeds: int = 5, base_seed: int = 17) -> Callable:
+    """Meta fitness: (N, 5) hyperparameter genomes -> (N, 1)."""
+    inner_run = make_inner_ga(inner_cfg, fitness_fn, p_max=p_max,
+                              generations=generations)
+
+    def meta_fitness(hgenomes: jax.Array) -> jax.Array:
+        n = hgenomes.shape[0]
+        seeds = jnp.arange(num_seeds) + base_seed
+
+        def one(hg):
+            rngs = jax.vmap(lambda s: jax.random.fold_in(
+                jax.random.PRNGKey(base_seed), s))(seeds)
+            # per-seed inner runs; paper: best over seeds
+            bests = jax.vmap(lambda r: inner_run(hg, r))(rngs)
+            return jnp.min(bests)
+
+        return jax.vmap(one)(hgenomes)[:, None]
+
+    return meta_fitness
+
+
+def meta_ga_config(num_epochs: int = 4, pop_per_island: int = 32,
+                   num_islands: int = 3, seed: int = 0) -> GAConfig:
+    """Paper Fig. 6 setup: I=3 islands, NSGA-II, genes of Tab. 4."""
+    lo, hi = meta_bounds()
+    return GAConfig(
+        num_genes=len(META_GENE_SPEC),
+        pop_per_island=pop_per_island,
+        num_islands=num_islands,
+        generations_per_epoch=2,
+        num_epochs=num_epochs,
+        gene_lower=lo, gene_upper=hi,
+        mutation_prob=0.3, mutation_eta=20.0,
+        crossover_prob=0.9, crossover_eta=15.0,
+        fused_operators=False,
+        seed=seed)

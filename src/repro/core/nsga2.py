@@ -1,0 +1,100 @@
+"""NSGA-II machinery in jax.lax: non-dominated sorting (front peeling) and
+crowding distance [Deb et al. 2002, arXiv-free classic].
+
+Shapes are static; the peeling loop is a ``lax.while_loop`` over at most P
+fronts. Works for any objective count; with num_objectives == 1 it reduces
+to dense ranking by fitness (the paper's "single-objective sorting").
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+BIG = 1e30
+
+
+def domination_matrix(fitness: jax.Array) -> jax.Array:
+    """dom[i, j] = True iff i dominates j. fitness: (P, O), minimized."""
+    fi = fitness[:, None, :]                               # (P, 1, O)
+    fj = fitness[None, :, :]                               # (1, P, O)
+    leq = jnp.all(fi <= fj, axis=-1)
+    lt = jnp.any(fi < fj, axis=-1)
+    return leq & lt
+
+
+def nondominated_ranks(fitness: jax.Array) -> jax.Array:
+    """Front index per individual (0 = Pareto front). fitness: (P, O)."""
+    p = fitness.shape[0]
+    dom = domination_matrix(fitness)
+    ndom0 = jnp.sum(dom, axis=0).astype(jnp.int32)         # dominators of j
+    ranks0 = jnp.full((p,), -1, jnp.int32)
+
+    def cond(state):
+        ranks, _, it = state
+        return jnp.any(ranks < 0) & (it < p)
+
+    def body(state):
+        ranks, ndom, it = state
+        front = (ranks < 0) & (ndom == 0)
+        ranks = jnp.where(front, it, ranks)
+        dec = jnp.sum(jnp.where(front[:, None], dom, False), axis=0)
+        ndom = jnp.where(front, -1, ndom - dec.astype(jnp.int32))
+        return ranks, ndom, it + 1
+
+    ranks, _, _ = jax.lax.while_loop(cond, body, (ranks0, ndom0, jnp.int32(0)))
+    # degenerate safety: anything never assigned goes to the last front
+    return jnp.where(ranks < 0, p - 1, ranks)
+
+
+def crowding_distance(fitness: jax.Array, ranks: jax.Array) -> jax.Array:
+    """Crowding distance within each front. fitness: (P, O) -> (P,)."""
+    p, o = fitness.shape
+    dist = jnp.zeros((p,), jnp.float32)
+    fmax = jax.ops.segment_max(fitness, ranks, num_segments=p)   # (P, O)
+    fmin = jax.ops.segment_min(fitness, ranks, num_segments=p)
+    span = jnp.maximum((fmax - fmin)[ranks], 1e-12)              # (P, O)
+
+    for m in range(o):
+        obj = fitness[:, m]
+        order = jnp.lexsort((obj, ranks))
+        s_obj = obj[order]
+        s_rank = ranks[order]
+        prev_ok = jnp.concatenate([jnp.array([False]),
+                                   s_rank[1:] == s_rank[:-1]])
+        next_ok = jnp.concatenate([s_rank[:-1] == s_rank[1:],
+                                   jnp.array([False])])
+        prev_v = jnp.concatenate([s_obj[:1], s_obj[:-1]])
+        next_v = jnp.concatenate([s_obj[1:], s_obj[-1:]])
+        contrib = jnp.where(prev_ok & next_ok, next_v - prev_v, BIG)
+        add = jnp.zeros((p,), jnp.float32).at[order].set(
+            contrib / span[order, m])
+        dist = dist + add
+    return dist
+
+
+def nsga2_keys(fitness: jax.Array) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """(rank, crowding, selection key). Lower key = better.
+
+    The key is an exact integer lexicographic composite: rank * P +
+    crowding-order-rank, so the crowding tie-break survives f32 precision
+    at any front index.
+    """
+    p = fitness.shape[0]
+    ranks = nondominated_ranks(fitness)
+    crowd = crowding_distance(fitness, ranks)
+    crowd_rank = jnp.argsort(jnp.argsort(-crowd))          # 0 = most spread
+    key = (ranks * p + crowd_rank).astype(jnp.int32)
+    return ranks, crowd, key
+
+
+def survivor_select(genomes: jax.Array, fitness: jax.Array,
+                    mu: int) -> Tuple[jax.Array, jax.Array]:
+    """(mu+lambda) NSGA-II survivor selection from a combined pool.
+
+    genomes: (N, G), fitness: (N, O), returns best `mu` by (rank, -crowd).
+    """
+    _, _, key = nsga2_keys(fitness)
+    order = jnp.argsort(key)[:mu]
+    return genomes[order], fitness[order]

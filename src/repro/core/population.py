@@ -1,0 +1,45 @@
+"""Population state: a pytree of (islands, pop, ...) arrays.
+
+Layout: genomes (I, P, G) f32 — islands on the leading axis so the island
+dimension shards over the mesh `data` axis (one or more islands per device
+slice). Fitness is minimized; +inf marks unevaluated slots.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import GAConfig
+
+
+class Population(NamedTuple):
+    genomes: jax.Array        # (I, P, G) f32
+    fitness: jax.Array        # (I, P, O) f32 (minimize)
+    rng: jax.Array            # (I, 2) uint32 per-island streams
+    generation: jax.Array     # () int32
+    epoch: jax.Array          # () int32
+    evals: jax.Array          # () int64-ish f64->f32 counter of fitness evals
+
+
+def init_population(cfg: GAConfig, rng: jax.Array) -> Population:
+    i, p, g = cfg.num_islands, cfg.pop_per_island, cfg.num_genes
+    k1, k2 = jax.random.split(rng)
+    genomes = jax.random.uniform(k1, (i, p, g), jnp.float32,
+                                 cfg.lower, cfg.upper)
+    fitness = jnp.full((i, p, cfg.num_objectives), jnp.inf, jnp.float32)
+    island_rngs = jax.random.split(k2, i)
+    return Population(genomes=genomes, fitness=fitness,
+                      rng=island_rngs,
+                      generation=jnp.zeros((), jnp.int32),
+                      epoch=jnp.zeros((), jnp.int32),
+                      evals=jnp.zeros((), jnp.float32))
+
+
+def best_of(pop: Population):
+    """(genome, fitness) of the global best (first objective)."""
+    flat_f = pop.fitness[..., 0].reshape(-1)
+    idx = jnp.argmin(flat_f)
+    flat_g = pop.genomes.reshape(-1, pop.genomes.shape[-1])
+    return flat_g[idx], pop.fitness.reshape(-1, pop.fitness.shape[-1])[idx]

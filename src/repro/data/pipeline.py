@@ -1,0 +1,67 @@
+"""Synthetic sharded token pipeline.
+
+Deterministic per-step batches (seeded by (seed, step)) in two modes:
+
+* ``uniform`` — i.i.d. tokens; for shape/perf work.
+* ``bigram``  — a fixed random bigram chain, so a real model trained on it
+  shows decreasing loss (used by examples/train_lm.py).
+
+``place`` puts a host batch onto the mesh with the right NamedShardings —
+the single-process stand-in for per-host sharded loading
+(``jax.make_array_from_process_local_data`` in a real multi-host job).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models.sharding import ShardingCtx
+
+
+class SyntheticTokens:
+    def __init__(self, cfg: ModelConfig, batch_size: int, seq_len: int, *,
+                 seed: int = 0, mode: str = "bigram",
+                 frontend_seq: int = 0):
+        self.cfg = cfg
+        self.batch_size = batch_size
+        self.seq_len = seq_len
+        self.seed = seed
+        self.mode = mode
+        self.frontend_seq = frontend_seq
+        if mode == "bigram":
+            rng = np.random.default_rng(seed)
+            # sparse-ish bigram: each token has 4 plausible successors
+            self._succ = rng.integers(
+                0, cfg.vocab_size, size=(cfg.vocab_size, 4), dtype=np.int64)
+
+    def batch(self, step: int) -> Dict[str, np.ndarray]:
+        rng = np.random.default_rng((self.seed, step))
+        b, s = self.batch_size, self.seq_len
+        if self.mode == "uniform":
+            toks = rng.integers(0, self.cfg.vocab_size, size=(b, s + 1))
+        else:
+            toks = np.empty((b, s + 1), np.int64)
+            toks[:, 0] = rng.integers(0, self.cfg.vocab_size, size=b)
+            choice = rng.integers(0, 4, size=(b, s))
+            for t in range(s):
+                toks[:, t + 1] = self._succ[toks[:, t], choice[:, t]]
+        out: Dict[str, np.ndarray] = {"tokens": toks.astype(np.int32)}
+        if self.cfg.frontend != "none":
+            fs = self.frontend_seq or (576 if self.cfg.frontend == "vision_patches"
+                                       else self.cfg.encoder_seq)
+            out["frontend_embeds"] = rng.standard_normal(
+                (b, fs, self.cfg.d_model), dtype=np.float32) * 0.02
+        return out
+
+    def place(self, batch: Dict[str, np.ndarray], ctx: ShardingCtx):
+        if ctx.mesh is None:
+            return {k: jnp.asarray(v) for k, v in batch.items()}
+        out = {}
+        for k, v in batch.items():
+            spec = (ctx.dp_spec,) + (None,) * (v.ndim - 1)
+            out[k] = jax.device_put(v, ctx.named(*spec))
+        return out

@@ -1,0 +1,9 @@
+"""Pluggable fitness backends — the paper's user-supplied "simulation
+containers". Each backend exposes ``(N, G) -> (N, O)`` batched evaluation;
+vertical scaling happens inside the backend (model-axis sharding)."""
+from repro.fitness.benchmarks import (ackley, griewank, rastrigin,
+                                      rosenbrock, sphere, get_benchmark,
+                                      delay_proxy)
+
+__all__ = ["ackley", "griewank", "rastrigin", "rosenbrock", "sphere",
+           "get_benchmark", "delay_proxy"]

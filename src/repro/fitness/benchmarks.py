@@ -1,0 +1,88 @@
+"""Standard continuous benchmark functions + the paper's sleep-proxy load.
+
+All functions take genomes (N, G) and return (N, 1) (minimization, global
+optimum 0 at the stated point). ``delay_proxy`` reproduces the paper §4.1
+overhead study: a calibrated on-device FLOP loop standing in for
+``sleep(s)`` (no host sleep exists inside jit).
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+def sphere(x: jax.Array) -> jax.Array:
+    return jnp.sum(x * x, axis=-1, keepdims=True)
+
+
+def rastrigin(x: jax.Array) -> jax.Array:
+    return (10.0 * x.shape[-1]
+            + jnp.sum(x * x - 10.0 * jnp.cos(2 * jnp.pi * x), axis=-1,
+                      keepdims=True))
+
+
+def rosenbrock(x: jax.Array) -> jax.Array:
+    x0, x1 = x[..., :-1], x[..., 1:]
+    return jnp.sum(100.0 * (x1 - x0 ** 2) ** 2 + (1 - x0) ** 2, axis=-1,
+                   keepdims=True)
+
+
+def ackley(x: jax.Array) -> jax.Array:
+    g = x.shape[-1]
+    s1 = jnp.sqrt(jnp.sum(x * x, -1) / g)
+    s2 = jnp.sum(jnp.cos(2 * jnp.pi * x), -1) / g
+    return (-20.0 * jnp.exp(-0.2 * s1) - jnp.exp(s2)
+            + 20.0 + jnp.e)[..., None]
+
+
+def griewank(x: jax.Array) -> jax.Array:
+    i = jnp.sqrt(jnp.arange(1, x.shape[-1] + 1, dtype=x.dtype))
+    return (jnp.sum(x * x, -1) / 4000.0
+            - jnp.prod(jnp.cos(x / i), -1) + 1.0)[..., None]
+
+
+_BENCH = {"sphere": sphere, "rastrigin": rastrigin,
+          "rosenbrock": rosenbrock, "ackley": ackley, "griewank": griewank}
+
+
+def get_benchmark(name: str) -> Callable:
+    return _BENCH[name]
+
+
+def delay_proxy(base_fn: Callable | None = None, *,
+                flop_iters: int = 0,
+                iters_fn: Callable | None = None) -> Callable:
+    """Wrap a fitness with a calibrated compute delay (the paper's sleep s).
+
+    flop_iters: fixed per-individual iteration count, or `iters_fn(genomes)
+    -> (N,) int` for *heterogeneous* evaluation times (exercises the
+    broker's balanced dispatch). The loop is a data-dependent chain XLA
+    cannot elide.
+    """
+    inner = base_fn or sphere
+
+    def fn(genomes: jax.Array) -> jax.Array:
+        out = inner(genomes)
+        if flop_iters or iters_fn is not None:
+            n = genomes.shape[0]
+            iters = (iters_fn(genomes) if iters_fn is not None
+                     else jnp.full((n,), flop_iters, jnp.int32))
+            # seed the delay chain from the genomes so XLA cannot hoist the
+            # loop out of the generations scan (it must re-run per batch)
+            acc0 = 1.0 + jnp.sum(genomes.astype(jnp.float32), -1) * 1e-6
+            # per-individual masked delay loop (SPMD: all lanes run the max,
+            # which is exactly why the broker balances `iters` first)
+            upper = jnp.max(iters)
+            acc = jax.lax.fori_loop(
+                0, upper,
+                lambda i, a: a + (i < iters).astype(a.dtype)
+                * jnp.sin(a) * 1e-6,
+                acc0)
+            # 1e-30 * acc underflows against out in f32 (no fitness change)
+            # but keeps a true data dependency on the loop result
+            out = out + (acc[:, None] * 1e-30)
+        return out
+
+    return fn

@@ -1,0 +1,106 @@
+"""LM-training fitness backend: GA-driven hyperparameter search over the
+model zoo (the modern analogue of the paper's meta-GA, DESIGN.md §3).
+
+Genome (4 genes, in [0, 1], decoded below):
+    g0 -> log10 lr      in [-4.5, -2.0]
+    g1 -> beta1         in [0.80, 0.99]
+    g2 -> warmup frac   in [0.0, 0.3]
+    g3 -> weight decay  in [0.0, 0.3]
+
+Fitness = final training loss of a reduced-config model trained for
+``steps`` on the synthetic bigram stream. Vertical scaling: each training
+run is model-axis sharded exactly like full training; horizontal: the
+genome batch vmaps/shards over data.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.data.pipeline import SyntheticTokens
+from repro.models.model import Model
+from repro.train.loss import lm_loss
+from repro.train.train_step import make_loss_fn
+
+
+LM_GENE_SPEC = (
+    ("log10_lr", -4.5, -2.0),
+    ("beta1", 0.80, 0.99),
+    ("warmup_frac", 0.0, 0.3),
+    ("weight_decay", 0.0, 0.3),
+)
+NUM_LM_GENES = len(LM_GENE_SPEC)
+
+
+def decode_lm_genome(g01: jax.Array) -> dict:
+    vals = {}
+    for i, (name, lo, hi) in enumerate(LM_GENE_SPEC):
+        vals[name] = lo + g01[i] * (hi - lo)
+    return vals
+
+
+class LMTrainFitness:
+    """Callable (N, 4) genomes in [0,1] -> (N, 1) final training losses."""
+
+    def __init__(self, arch: str = "tinyllama-1.1b", *, steps: int = 8,
+                 batch_size: int = 4, seq_len: int = 32, seed: int = 0):
+        self.cfg = get_config(arch).reduced()
+        self.model = Model(self.cfg, max_seq=seq_len + 8)
+        self.steps = steps
+        self.loss_fn = make_loss_fn(self.model)
+        data = SyntheticTokens(self.cfg, batch_size, seq_len, seed=seed,
+                               mode="bigram")
+        self._batches = [
+            {k: jnp.asarray(v) for k, v in data.batch(i).items()}
+            for i in range(steps)]
+        self._init = self.model.init_params(jax.random.PRNGKey(seed))
+
+    def _train_one(self, g01: jax.Array) -> jax.Array:
+        hp = decode_lm_genome(g01)
+        lr0 = 10.0 ** hp["log10_lr"]
+        b1 = hp["beta1"]
+        b2 = 0.95
+        wd = hp["weight_decay"]
+        warm = jnp.maximum(hp["warmup_frac"] * self.steps, 1.0)
+        params = self._init
+        m = jax.tree_util.tree_map(lambda p: jnp.zeros_like(p, jnp.float32),
+                                   params)
+        v = jax.tree_util.tree_map(lambda p: jnp.zeros_like(p, jnp.float32),
+                                   params)
+
+        def step(carry, inp):
+            params, m, v, _ = carry
+            i, batch = inp
+            (loss, _), grads = jax.value_and_grad(
+                self.loss_fn, has_aux=True)(params, batch)
+            lr = lr0 * jnp.minimum((i + 1.0) / warm, 1.0)
+
+            def upd(p, g, mm, vv):
+                g = g.astype(jnp.float32)
+                mm = b1 * mm + (1 - b1) * g
+                vv = b2 * vv + (1 - b2) * g * g
+                delta = mm / (jnp.sqrt(vv) + 1e-8) + wd * p.astype(jnp.float32)
+                return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), mm, vv
+
+            out = jax.tree_util.tree_map(upd, params, grads, m, v)
+            params = jax.tree_util.tree_map(
+                lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+            m = jax.tree_util.tree_map(
+                lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+            v = jax.tree_util.tree_map(
+                lambda t: t[2], out, is_leaf=lambda t: isinstance(t, tuple))
+            return (params, m, v, loss), loss
+
+        batches = jax.tree_util.tree_map(
+            lambda *xs: jnp.stack(xs), *self._batches)
+        steps_i = jnp.arange(self.steps, dtype=jnp.float32)
+        (params, _, _, final_loss), _ = jax.lax.scan(
+            step, (params, m, v, jnp.zeros(())), (steps_i, batches))
+        return final_loss
+
+    def __call__(self, genomes: jax.Array) -> jax.Array:
+        return jax.vmap(self._train_one)(genomes)[:, None]

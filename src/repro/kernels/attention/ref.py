@@ -1,0 +1,19 @@
+"""Oracle for the flash attention kernel: the dense masked GQA attention
+(models.layers.gqa_attention) and the blocked XLA formulation
+(models.attention.flash_attention_xla) — the kernel must match both."""
+from repro.models.attention import flash_attention_xla
+from repro.models.layers import attention_scores_mask, gqa_attention
+
+import jax.numpy as jnp
+
+
+def dense_reference(q, k, v, *, scale, causal=True, window=0,
+                    attn_softcap=0.0, q_offset=0):
+    qpos = q_offset + jnp.arange(q.shape[1])
+    kpos = jnp.arange(k.shape[1])
+    mask = attention_scores_mask(qpos, kpos, causal=causal, window=window)
+    return gqa_attention(q, k, v, mask=mask, scale=scale,
+                         attn_softcap=attn_softcap)
+
+
+__all__ = ["dense_reference", "flash_attention_xla"]

@@ -1,0 +1,72 @@
+"""Pure-jnp oracle for the fused variation kernel.
+
+Identical math to operators.sbx_crossover + operators.polynomial_mutation,
+but phrased over pre-drawn uniforms so the Pallas kernel (which receives
+the same uniforms) can be compared bit-for-bit-ish (1e-6)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+EPS = 1e-14
+
+
+def fused_variation_ref(x1, x2, rnd, *, eta_cx, prob_cx, eta_mut, prob_mut,
+                        indpb, lower, upper):
+    """x1/x2: (P2, G) parent pairs; rnd: dict of pre-drawn uniforms:
+       u_cx (P2, G), m_pair (P2, 1), m_gene (P2, G),
+       u_mut (P, G), m_ind (P, 1), m_genem (P, G)  [P = 2*P2]
+    Returns offspring (P, G) interleaved (o1, o2 per pair)."""
+    u = rnd["u_cx"]
+    y1 = jnp.minimum(x1, x2)
+    y2 = jnp.maximum(x1, x2)
+    span = jnp.maximum(y2 - y1, EPS)
+
+    def betaq(beta):
+        alpha = 2.0 - jnp.power(beta, -(eta_cx + 1.0))
+        return jnp.where(
+            u <= 1.0 / alpha,
+            jnp.power(u * alpha, 1.0 / (eta_cx + 1.0)),
+            jnp.power(1.0 / jnp.maximum(2.0 - u * alpha, EPS),
+                      1.0 / (eta_cx + 1.0)))
+
+    b1 = 1.0 + 2.0 * (y1 - lower) / span
+    b2 = 1.0 + 2.0 * (upper - y2) / span
+    c1 = jnp.clip(0.5 * ((y1 + y2) - betaq(b1) * (y2 - y1)), lower, upper)
+    c2 = jnp.clip(0.5 * ((y1 + y2) + betaq(b2) * (y2 - y1)), lower, upper)
+
+    apply_cx = (rnd["m_pair"] < prob_cx) & (rnd["m_gene"] < 0.5)
+    o1 = jnp.where(apply_cx, c1, x1)
+    o2 = jnp.where(apply_cx, c2, x2)
+    off = jnp.stack([o1, o2], axis=1).reshape(-1, x1.shape[-1])   # (P, G)
+
+    # polynomial mutation
+    u2 = rnd["u_mut"]
+    span2 = upper - lower
+    d1 = (off - lower) / span2
+    d2 = (upper - off) / span2
+    mp = 1.0 / (eta_mut + 1.0)
+    lo_b = jnp.power(jnp.maximum(
+        2.0 * u2 + (1.0 - 2.0 * u2) * jnp.power(1.0 - d1, eta_mut + 1.0),
+        EPS), mp) - 1.0
+    hi_b = 1.0 - jnp.power(jnp.maximum(
+        2.0 * (1.0 - u2) + 2.0 * (u2 - 0.5) * jnp.power(1.0 - d2,
+                                                        eta_mut + 1.0),
+        EPS), mp)
+    deltaq = jnp.where(u2 < 0.5, lo_b, hi_b)
+    mut = jnp.clip(off + deltaq * span2, lower, upper)
+    apply_m = (rnd["m_ind"] < prob_mut) & (rnd["m_genem"] < indpb)
+    return jnp.where(apply_m, mut, off)
+
+
+def draw_uniforms(rng: jax.Array, p: int, g: int) -> dict:
+    ks = jax.random.split(rng, 6)
+    p2 = p // 2
+    return {
+        "u_cx": jax.random.uniform(ks[0], (p2, g)),
+        "m_pair": jax.random.uniform(ks[1], (p2, 1)),
+        "m_gene": jax.random.uniform(ks[2], (p2, g)),
+        "u_mut": jax.random.uniform(ks[3], (p, g)),
+        "m_ind": jax.random.uniform(ks[4], (p, 1)),
+        "m_genem": jax.random.uniform(ks[5], (p, g)),
+    }

@@ -1,0 +1,6 @@
+"""Oracle for the SSD kernel: the pure-jnp chunked scan in
+models.ssm.ssd_chunked_ref (used directly by the model when the kernel is
+disabled)."""
+from repro.models.ssm import ssd_chunked_ref, ssd_decode_step
+
+__all__ = ["ssd_chunked_ref", "ssd_decode_step"]

@@ -1,0 +1,35 @@
+"""Production mesh factory.
+
+Defined as a FUNCTION so importing this module never touches jax device
+state. The dry-run entrypoint (dryrun.py) sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
+import; real deployments get the mesh from the TPU topology.
+
+Single pod: v5e 16x16 (256 chips), axes (data, model).
+Multi-pod:  2 pods = 512 chips, axes (pod, data, model) — `pod` is pure
+data parallelism across the inter-pod links (optionally with compressed
+gradient reduction, train/compress.py).
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = 1
+    for s in shape:
+        n *= s
+    devices = jax.devices()[:n]
+    return jax.make_mesh(shape, axes, devices=devices,
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_local_mesh(data: int = 1, model: int = 1):
+    """Mesh over whatever devices exist locally (tests / examples)."""
+    n = data * model
+    devices = jax.devices()[:n]
+    return jax.make_mesh((data, model), ("data", "model"), devices=devices,
+                         axis_types=(AxisType.Auto,) * 2)

@@ -1,0 +1,99 @@
+"""ShapeDtypeStruct input stand-ins + shardings for every dry-run cell.
+
+No device allocation happens here — everything is eval_shape /
+ShapeDtypeStruct, so lowering a 398B-parameter cell is pure metadata work.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models.model import Model
+from repro.models.sharding import (ShardingCtx, cache_shardings,
+                                   param_shardings)
+from repro.train.train_step import train_state_shapes
+
+VLM_PATCHES = 576           # llava anyres base grid (24 x 24)
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def token_seq_len(cfg: ModelConfig, shape: ShapeConfig) -> int:
+    """Token positions inside the decoder stream for this cell."""
+    if cfg.frontend == "vision_patches":
+        return shape.seq_len - VLM_PATCHES
+    return shape.seq_len
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig, ctx: ShardingCtx,
+                *, train: bool, compute_dtype=jnp.bfloat16):
+    """(ShapeDtypeStruct batch, NamedSharding batch) for fwd/train/prefill."""
+    b = shape.global_batch
+    s = token_seq_len(cfg, shape)
+    batch = {"tokens": sds((b, s + (1 if train else 0)), jnp.int32)}
+    shard = {"tokens": ctx.named(ctx.dp_spec, None)}
+    if cfg.frontend == "vision_patches":
+        batch["frontend_embeds"] = sds((b, VLM_PATCHES, cfg.d_model),
+                                       compute_dtype)
+        shard["frontend_embeds"] = ctx.named(ctx.dp_spec, None, None)
+    elif cfg.is_encoder_decoder:
+        batch["frontend_embeds"] = sds((b, cfg.encoder_seq, cfg.d_model),
+                                       compute_dtype)
+        shard["frontend_embeds"] = ctx.named(ctx.dp_spec, None, None)
+    return batch, shard
+
+
+def train_specs(model: Model, moment_dtype: str = "float32"):
+    """(state shapes, state shardings) for train_step."""
+    ctx = model.ctx
+    shapes = train_state_shapes(model, moment_dtype)
+    p_sh = param_shardings(shapes["params"], ctx)
+    rep = ctx.named()
+    opt_sh = {"m": p_sh, "v": p_sh, "step": rep}
+    return shapes, {"params": p_sh, "opt": opt_sh, "rng": rep}
+
+
+def decode_specs(cfg: ModelConfig, shape: ShapeConfig, model: Model):
+    """(cache shapes, cache shardings, tokens spec/shard, pos spec)."""
+    ctx = model.ctx
+    b = shape.global_batch
+    cache = model.cache_shapes(b, shape.seq_len,
+                               dtype=model.compute_dtype)
+    c_sh = cache_shardings(cache, ctx)
+    tokens = sds((b, 1), jnp.int32)
+    tok_sh = ctx.named(ctx.dp_spec, None)
+    pos = sds((), jnp.int32)
+    return cache, c_sh, tokens, tok_sh, pos
+
+
+def input_specs(arch, shape, ctx: Optional[ShardingCtx] = None,
+                model: Optional[Model] = None):
+    """Public stand-in factory (multi-pod dry-run contract): every model
+    input for the given (arch x shape) cell as ShapeDtypeStructs —
+    weak-type-correct, shardable, no device allocation.
+
+    Returns a dict: train -> {"batch", "batch_shardings"}; prefill -> same;
+    decode -> {"cache", "cache_shardings", "tokens", "pos", ...}.
+    """
+    from repro.configs import SHAPES, get_config
+    from repro.models.sharding import ShardingCtx as _Ctx
+    cfg = get_config(arch) if isinstance(arch, str) else arch
+    shp = SHAPES[shape] if isinstance(shape, str) else shape
+    ctx = ctx or _Ctx()
+    if shp.kind == "train":
+        batch, sh = batch_specs(cfg, shp, ctx, train=True)
+        return {"batch": batch, "batch_shardings": sh}
+    if shp.kind == "prefill":
+        batch, sh = batch_specs(cfg, shp, ctx, train=False)
+        return {"batch": batch, "batch_shardings": sh}
+    model = model or Model(cfg, ctx, compute_dtype="bfloat16",
+                           max_seq=shp.seq_len + 8)
+    cache, c_sh, tokens, tok_sh, pos = decode_specs(cfg, shp, model)
+    return {"cache": cache, "cache_shardings": c_sh, "tokens": tokens,
+            "tokens_sharding": tok_sh, "pos": pos}

@@ -1,0 +1,5 @@
+"""Model zoo: the LM-family "embedded simulation" substrate (DESIGN.md §3)."""
+from repro.models.model import (build_model, init_params, param_shapes,
+                                Model)
+
+__all__ = ["build_model", "init_params", "param_shapes", "Model"]

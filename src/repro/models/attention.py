@@ -1,0 +1,121 @@
+"""Blocked ("XLA-flash") attention: O(S·block) memory, GSPMD-partitionable,
+AD-compatible.
+
+This is the default lowering path for long sequences (prefill_32k, train_4k)
+— a lax.scan over KV blocks with running (max, denom, acc), i.e. the flash
+algorithm expressed in XLA ops. The Pallas TPU kernel in
+``repro.kernels.attention`` implements the same contract with explicit VMEM
+BlockSpecs and *does* skip fully-masked blocks; this version masks them
+(wasted FLOPs on the upper causal triangle are visible in the roofline's
+MODEL_FLOPS/HLO_FLOPs ratio and discussed in EXPERIMENTS.md §Perf).
+
+Numerics: scores/softmax in f32 with the clamped-max trick so fully-masked
+rows (sliding-window early blocks) produce zeros, not NaNs.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import softcap as _softcap
+
+_MIN = -0.7 * jnp.finfo(jnp.float32).max
+
+
+def flash_attention_xla(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        scale: float, causal: bool = True, window: int = 0,
+                        attn_softcap: float = 0.0, q_offset: int = 0,
+                        block: int = 1024, unroll: bool = False) -> jax.Array:
+    """q: (B, Sq, H, hd); k/v: (B, T, KV, hd) -> (B, Sq, H, hd)."""
+    b, sq, h, hd = q.shape
+    t, kvh = k.shape[1], k.shape[2]
+    g = h // kvh
+    block = min(block, t)
+    nb = -(-t // block)
+    tpad = nb * block
+
+    if tpad != t:
+        k = jnp.pad(k, ((0, 0), (0, tpad - t), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, tpad - t), (0, 0), (0, 0)))
+    kpos = jnp.where(jnp.arange(tpad) < t, jnp.arange(tpad), -1)
+
+    qg = (q.astype(jnp.float32) * scale).reshape(b, sq, kvh, g, hd)
+    qpos = q_offset + jnp.arange(sq)
+
+    kb = jnp.moveaxis(k.reshape(b, nb, block, kvh, hd), 1, 0)
+    vb = jnp.moveaxis(v.reshape(b, nb, block, kvh, hd), 1, 0)
+    kposb = kpos.reshape(nb, block)
+
+    def body(carry, inp):
+        m, l, acc = carry
+        kblk, vblk, kp = inp
+        s = jnp.einsum("bskgd,btkd->bkgst", qg, kblk.astype(jnp.float32))
+        s = _softcap(s, attn_softcap)
+        rel = qpos[:, None] - kp[None, :]
+        msk = kp[None, :] >= 0
+        if causal:
+            msk &= rel >= 0
+        if window:
+            msk &= rel < window
+        s = jnp.where(msk[None, None, None], s, -jnp.inf)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        m_safe = jnp.maximum(m_new, _MIN)
+        p = jnp.exp(s - m_safe[..., None])
+        corr = jnp.exp(jnp.maximum(m, _MIN) - m_safe)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        acc_new = (acc * corr[..., None]
+                   + jnp.einsum("bkgst,btkd->bkgsd", p,
+                                vblk.astype(jnp.float32)))
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, kvh, g, sq), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((b, kvh, g, sq), jnp.float32)
+    a0 = jnp.zeros((b, kvh, g, sq, hd), jnp.float32)
+    if unroll:
+        # python loop (dry-run depth probe: exact op counts, no while loop)
+        carry = (m0, l0, a0)
+        for i in range(nb):
+            carry, _ = body(carry, (kb[i], vb[i], kposb[i]))
+        m, l, acc = carry
+    else:
+        (m, l, acc), _ = jax.lax.scan(
+            jax.checkpoint(body), (m0, l0, a0), (kb, vb, kposb))
+    l_safe = jnp.where(l == 0.0, 1.0, l)
+    out = acc / l_safe[..., None]
+    out = jnp.moveaxis(out, -2, 1).reshape(b, sq, h, hd)
+    return out.astype(q.dtype)
+
+
+def attend(q, k, v, *, scale, causal=True, window=0, attn_softcap=0.0,
+           q_offset=0, impl="auto", block=1024, unroll=False):
+    """Dispatch between the dense reference and the blocked path.
+
+    impl: "auto" (blocked when T > 2*block), "dense", "flash_xla",
+    "pallas" (TPU kernel; falls back to flash_xla off-TPU).
+    """
+    t = k.shape[1]
+    if impl == "pallas":
+        try:
+            from repro.kernels.attention import ops as attn_ops
+            return attn_ops.flash_attention(
+                q, k, v, scale=scale, causal=causal, window=window,
+                attn_softcap=attn_softcap, q_offset=q_offset)
+        except Exception:
+            impl = "flash_xla"
+    if impl == "auto":
+        impl = "flash_xla" if t > 2 * block else "dense"
+    if impl == "flash_xla":
+        return flash_attention_xla(
+            q, k, v, scale=scale, causal=causal, window=window,
+            attn_softcap=attn_softcap, q_offset=q_offset, block=block,
+            unroll=unroll)
+    # dense reference
+    from repro.models.layers import gqa_attention, attention_scores_mask
+    qpos = q_offset + jnp.arange(q.shape[1])
+    kpos = jnp.arange(t)
+    mask = attention_scores_mask(qpos, kpos, causal=causal, window=window)
+    return gqa_attention(q, k, v, mask=mask, scale=scale,
+                         attn_softcap=attn_softcap)

@@ -1,0 +1,200 @@
+"""Core layers: norms, RoPE, embeddings, dense FFN, and GQA attention.
+
+Everything is a pure function over explicit parameter dicts — no module
+framework. Compute is done in the input dtype except where f32 is required
+for numerics (norm statistics, attention softmax, logits).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    # gemma-style (1 + scale) parametrization is folded at init; we use the
+    # plain scale form uniformly.
+    return (x * scale.astype(jnp.float32)).astype(dtype)
+
+
+def layer_norm(x: jax.Array, scale: jax.Array, bias: jax.Array,
+               eps: float) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    x = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (x * scale.astype(jnp.float32)
+            + bias.astype(jnp.float32)).astype(dtype)
+
+
+def apply_norm(cfg: ModelConfig, p: dict, x: jax.Array) -> jax.Array:
+    if cfg.norm_type == "layernorm":
+        return layer_norm(x, p["scale"], p["bias"], cfg.norm_eps)
+    return rms_norm(x, p["scale"], cfg.norm_eps)
+
+
+def norm_param(cfg: ModelConfig, d: int) -> dict:
+    if cfg.norm_type == "layernorm":
+        return {"scale": jnp.ones((d,), jnp.float32),
+                "bias": jnp.zeros((d,), jnp.float32)}
+    return {"scale": jnp.ones((d,), jnp.float32)}
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embedding
+# ---------------------------------------------------------------------------
+
+def rope_tables(positions: jax.Array, head_dim: int,
+                theta: float) -> tuple[jax.Array, jax.Array]:
+    """(sin, cos) tables for integer positions, shape (..., head_dim/2)."""
+    half = head_dim // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freq     # (..., half)
+    return jnp.sin(ang), jnp.cos(ang)
+
+
+def apply_rope(x: jax.Array, sin: jax.Array, cos: jax.Array) -> jax.Array:
+    """x: (B, S, H, hd); sin/cos: (B, S, hd/2) or (S, hd/2)."""
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    if sin.ndim == 2:                                         # (S, half)
+        sin = sin[None, :, None, :]
+        cos = cos[None, :, None, :]
+    else:                                                     # (B, S, half)
+        sin = sin[:, :, None, :]
+        cos = cos[:, :, None, :]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Softcap
+# ---------------------------------------------------------------------------
+
+def softcap(x: jax.Array, cap: float) -> jax.Array:
+    if not cap:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+# ---------------------------------------------------------------------------
+# Attention (reference path; the Pallas flash kernel is a drop-in in
+# repro.kernels.attention.ops and selected in models/model.py)
+# ---------------------------------------------------------------------------
+
+NEG_INF = -2.0e38
+
+
+def attention_scores_mask(q_pos: jax.Array, k_pos: jax.Array, *,
+                          causal: bool, window: int) -> jax.Array:
+    """Boolean mask (..., S_q, S_k): True = attend."""
+    rel = q_pos[..., :, None] - k_pos[..., None, :]
+    mask = jnp.ones(rel.shape, bool)
+    if causal:
+        mask &= rel >= 0
+    if window:
+        mask &= rel < window
+    return mask
+
+
+def gqa_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  mask: jax.Array, scale: float,
+                  attn_softcap: float = 0.0) -> jax.Array:
+    """Reference grouped-query attention.
+
+    q: (B, S, H, hd); k/v: (B, T, KV, hd); mask: (B, S, T) or (S, T).
+    Returns (B, S, H, hd).
+    """
+    b, s, h, hd = q.shape
+    t, kv = k.shape[1], k.shape[2]
+    g = h // kv
+    qg = q.reshape(b, s, kv, g, hd)
+    # (B, KV, G, S, T)
+    logits = jnp.einsum("bskgd,btkd->bkgst", qg, k,
+                        preferred_element_type=jnp.float32)
+    logits *= scale
+    logits = softcap(logits, attn_softcap)
+    if mask.ndim == 2:
+        mask_b = mask[None, None, None]
+    else:
+        mask_b = mask[:, None, None]
+    logits = jnp.where(mask_b, logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgst,btkd->bskgd", probs, v)
+    return out.reshape(b, s, h, hd)
+
+
+def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                     kv_len: jax.Array | int, scale: float,
+                     attn_softcap: float = 0.0,
+                     window: int = 0,
+                     cache_pos: Optional[jax.Array] = None) -> jax.Array:
+    """Single-step decode attention against a (possibly ring-buffer) cache.
+
+    q: (B, 1, H, hd); k/v: (B, T_cache, KV, hd). `kv_len` = number of valid
+    cache entries. For ring buffers (sliding-window layers) `cache_pos`
+    gives the absolute position of each slot, (B, T_cache) or (T_cache,);
+    entries with position<0 are invalid.
+    """
+    b, _, h, hd = q.shape
+    t, kvh = k.shape[1], k.shape[2]
+    g = h // kvh
+    qg = q.reshape(b, kvh, g, hd)
+    logits = jnp.einsum("bkgd,btkd->bkgt", qg, k,
+                        preferred_element_type=jnp.float32)
+    logits *= scale
+    logits = softcap(logits, attn_softcap)
+    if cache_pos is not None:
+        valid = cache_pos >= 0
+        if valid.ndim == 1:
+            valid = valid[None]
+        mask = valid[:, None, None, :]
+    else:
+        idx = jnp.arange(t)
+        mask = (idx[None] < jnp.asarray(kv_len).reshape(-1, 1))[:, None, None, :]
+    logits = jnp.where(mask, logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgt,btkd->bkgd", probs, v)
+    return out.reshape(b, 1, h, hd)
+
+
+# ---------------------------------------------------------------------------
+# Dense FFN (SwiGLU / GeGLU)
+# ---------------------------------------------------------------------------
+
+def act_fn(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu}[name]
+
+
+def ffn(cfg: ModelConfig, p: dict, x: jax.Array) -> jax.Array:
+    """Gated FFN: wo( act(x@wg) * (x@wi) )."""
+    a = act_fn(cfg.act)
+    h = a(x @ p["wg"]) * (x @ p["wi"])
+    return h @ p["wo"]
+
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+
+def dense_init(rng: jax.Array, shape: tuple[int, ...], in_axis_dims: int,
+               dtype) -> jax.Array:
+    """Truncated-normal fan-in init."""
+    std = 1.0 / math.sqrt(max(in_axis_dims, 1))
+    return (std * jax.random.truncated_normal(
+        rng, -2.0, 2.0, shape, jnp.float32)).astype(dtype)

@@ -1,0 +1,563 @@
+"""Model assembly for all assigned architectures.
+
+One :class:`Model` class covers every family via ``ModelConfig`` dispatch:
+dense / MoE / SSM (mamba2) / hybrid (jamba) / VLM backbone (llava) /
+enc-dec (whisper). Layers are grouped into ``scan_period``-sized periods and
+``lax.scan``'d (parameters stacked on a leading period dim) so HLO size and
+compile time stay bounded at 60-72 layer depth.
+
+Modes:
+  * ``forward``  — logits over the full sequence (training / teacher-forcing)
+  * ``prefill``  — last-token logits + populated decode cache
+  * ``decode_step`` — one token against the cache
+
+No module framework: parameters are plain nested dicts, sharding is applied
+via ``ShardingCtx`` constraints (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import moe as MOE
+from repro.models import ssm as SSM
+from repro.models.attention import attend
+from repro.models.layers import (apply_norm, apply_rope, decode_attention,
+                                 dense_init, ffn, norm_param, rope_tables,
+                                 softcap)
+from repro.models.sharding import ShardingCtx
+
+Params = Dict[str, Any]
+
+
+class Model:
+    def __init__(self, cfg: ModelConfig | str, ctx: Optional[ShardingCtx] = None,
+                 *, compute_dtype: str = "float32", attn_impl: str = "auto",
+                 moe_impl: str = "auto", remat: bool = False,
+                 use_ssd_kernel: bool = False, max_seq: int = 4096,
+                 unroll: bool = False, pad_experts: bool = False,
+                 remat_policy: str = "nothing",
+                 moe_capacity_factor: float = 1.25):
+        self.cfg = get_config(cfg) if isinstance(cfg, str) else cfg
+        self.ctx = ctx or ShardingCtx()
+        self.compute_dtype = jnp.dtype(compute_dtype)
+        self.param_dtype = jnp.dtype(self.cfg.param_dtype)
+        self.attn_impl = attn_impl
+        self.remat = remat
+        self.use_ssd_kernel = use_ssd_kernel
+        self.max_seq = max_seq
+        # unroll=True replaces the period lax.scan with a Python loop
+        # (used by the dry-run depth probe: XLA cost analysis counts a
+        # while body once, unrolled layers are counted exactly)
+        self.unroll = unroll
+        # pad_experts: pad E to a multiple of 16 for even EP sharding
+        # (qwen 60 -> 64); padded experts are router-masked, never used
+        self.pad_experts = pad_experts
+        self.remat_policy = remat_policy   # nothing | dots (save matmuls)
+        self.moe_capacity_factor = moe_capacity_factor
+        if moe_impl == "auto":
+            moe_impl = "sorted" if self.cfg.num_experts > 8 else "dense"
+        self.moe_impl = moe_impl
+        cfgp = self.cfg
+        self._sub_kinds = [(cfgp.mixer_kind(s), cfgp.ffn_kind(s))
+                           for s in range(cfgp.scan_period)]
+
+    def with_ctx(self, ctx: ShardingCtx) -> "Model":
+        """A copy of this (stateless) model bound to a different sharding
+        context — used by the compressed cross-pod reduction path."""
+        m = Model.__new__(Model)
+        m.__dict__.update(self.__dict__)
+        m.ctx = ctx
+        return m
+
+    # ------------------------------------------------------------------
+    # Parameter init
+    # ------------------------------------------------------------------
+    def init_params(self, rng: jax.Array) -> Params:
+        cfg, dt = self.cfg, self.param_dtype
+        d = cfg.d_model
+        keys = iter(jax.random.split(rng, 4096))
+        nk = lambda: next(keys)
+        np_ = cfg.num_periods
+
+        def attn_p(cross: bool = False, depth: int = 0) -> dict:
+            nl = depth or np_
+            h, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+            pre = "x" if cross else ""
+            p = {"ln": _stack_norm(cfg, nl, d),
+                 f"{pre}q": dense_init(nk(), (nl, d, h * hd), d, dt),
+                 f"{pre}k": dense_init(nk(), (nl, d, kv * hd), d, dt),
+                 f"{pre}v": dense_init(nk(), (nl, d, kv * hd), d, dt),
+                 f"{pre}o": dense_init(nk(), (nl, h * hd, d), h * hd, dt)}
+            if cfg.post_norm and not cross:
+                p["post_ln"] = _stack_norm(cfg, nl, d)
+            return p
+
+        def ssm_p() -> dict:
+            d_in, n, nh = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+            w = cfg.ssm_conv_width
+            proj_out = 2 * d_in + 2 * n + nh
+            conv_ch = d_in + 2 * n
+            # dt bias init so softplus(dt_bias) spans [1e-3, 1e-1] (mamba2)
+            dtb = jnp.log(jnp.expm1(jnp.exp(jax.random.uniform(
+                nk(), (np_, nh), jnp.float32,
+                jnp.log(1e-3), jnp.log(1e-1)))))
+            return {"ln": _stack_norm(cfg, np_, d),
+                    "in_proj": dense_init(nk(), (np_, d, proj_out), d, dt),
+                    "conv": dense_init(nk(), (np_, w, conv_ch), w, dt),
+                    "conv_bias": jnp.zeros((np_, conv_ch), dt),
+                    "A_log": jnp.log(jax.random.uniform(
+                        nk(), (np_, nh), jnp.float32, 1.0, 16.0)),
+                    "D": jnp.ones((np_, nh), jnp.float32),
+                    "dt_bias": dtb,
+                    "norm_scale": jnp.ones((np_, d_in), jnp.float32),
+                    "out_proj": dense_init(nk(), (np_, d_in, d), d_in, dt)}
+
+        def ffn_p(depth: int = 0) -> dict:
+            nl = depth or np_
+            f = cfg.d_ff
+            p = {"ln": _stack_norm(cfg, nl, d),
+                 "wi": dense_init(nk(), (nl, d, f), d, dt),
+                 "wg": dense_init(nk(), (nl, d, f), d, dt),
+                 "wo": dense_init(nk(), (nl, f, d), f, dt)}
+            if cfg.post_norm:
+                p["post_ln"] = _stack_norm(cfg, nl, d)
+            return p
+
+        def moe_p() -> dict:
+            e, f = cfg.num_experts, cfg.moe_d_ff
+            if self.pad_experts:
+                e = MOE.padded_experts(cfg)
+            p = {"ln": _stack_norm(cfg, np_, d),
+                 "router": dense_init(nk(), (np_, d, e), d, jnp.float32),
+                 "wi": dense_init(nk(), (np_, e, d, f), d, dt),
+                 "wg": dense_init(nk(), (np_, e, d, f), d, dt),
+                 "wo": dense_init(nk(), (np_, e, f, d), f, dt)}
+            if cfg.num_shared_experts:
+                sf = cfg.shared_d_ff or cfg.moe_d_ff * cfg.num_shared_experts
+                p.update({"swi": dense_init(nk(), (np_, d, sf), d, dt),
+                          "swg": dense_init(nk(), (np_, d, sf), d, dt),
+                          "swo": dense_init(nk(), (np_, sf, d), sf, dt),
+                          "sgate": dense_init(nk(), (np_, d, 1), d, dt)})
+            if cfg.post_norm:
+                p["post_ln"] = _stack_norm(cfg, np_, d)
+            return p
+
+        stack: dict = {}
+        for s, (mix, f) in enumerate(self._sub_kinds):
+            sub: dict = {}
+            sub["attn" if mix == "attn" else "ssm"] = (
+                attn_p() if mix == "attn" else ssm_p())
+            if cfg.is_encoder_decoder:
+                sub["cross"] = attn_p(cross=True)
+            if f == "dense":
+                sub["ffn"] = ffn_p()
+            elif f == "moe":
+                sub["moe"] = moe_p()
+            stack[f"sub{s}"] = sub
+
+        params: Params = {
+            "embed": {"tokens": dense_init(
+                nk(), (cfg.padded_vocab, d), d, dt)},
+            "final_norm": norm_param(cfg, d),
+            "stack": stack,
+        }
+        if not cfg.tie_embeddings:
+            params["unembed"] = dense_init(nk(), (d, cfg.padded_vocab), d, dt)
+        if cfg.pos_embedding == "learned":
+            params["pos"] = {"table": dense_init(
+                nk(), (self.max_seq, d), d, dt)}
+        if cfg.is_encoder_decoder:
+            ne = cfg.encoder_layers
+            params["enc_stack"] = {"sub0": {"attn": attn_p(depth=ne),
+                                            "ffn": ffn_p(depth=ne)}}
+            params["enc_pos"] = {"table": dense_init(
+                nk(), (max(cfg.encoder_seq, 1), d), d, dt)}
+            params["enc_norm"] = norm_param(cfg, d)
+        return params
+
+    def param_shapes(self) -> Params:
+        return jax.eval_shape(lambda r: self.init_params(r),
+                              jax.ShapeDtypeStruct((2,), jnp.uint32))
+
+    # ------------------------------------------------------------------
+    # Sublayer forward (shared by all modes)
+    # ------------------------------------------------------------------
+    def _attn_sub(self, p: dict, h: jax.Array, *, sincos, local: bool,
+                  mode: str, cache: Optional[dict], pos,
+                  max_cache_len: int, causal: bool = True,
+                  enc_out: Optional[jax.Array] = None, cross: bool = False):
+        cfg, ctx = self.cfg, self.ctx
+        b, s, _ = h.shape
+        pre = "x" if cross else ""
+        nh, kvh, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+        x = apply_norm(cfg, p["ln"], h)
+        q = (x @ p[f"{pre}q"]).reshape(b, s, nh, hd)
+        scale = (cfg.query_pre_attn_scalar or hd) ** -0.5
+        window = cfg.sliding_window if local else 0
+        new_cache = {}
+
+        if cross:
+            src = enc_out if mode != "decode" else None
+            if mode == "decode":
+                k, v = cache["xk"], cache["xv"]
+                out = decode_attention(q, k, v, kv_len=k.shape[1],
+                                       scale=scale)
+                new_cache = dict(cache)
+            else:
+                t = src.shape[1]
+                k = (src @ p["xk"]).reshape(b, t, kvh, hd)
+                v = (src @ p["xv"]).reshape(b, t, kvh, hd)
+                out = attend(q, k, v, scale=scale, causal=False,
+                             impl=self.attn_impl, unroll=self.unroll)
+                if mode == "prefill":
+                    new_cache = {"xk": k, "xv": v}
+            out = out.reshape(b, s, nh * hd) @ p["xo"]
+            return out, new_cache
+
+        if mode == "decode":
+            k = (x @ p["k"]).reshape(b, 1, kvh, hd)
+            v = (x @ p["v"]).reshape(b, 1, kvh, hd)
+            if sincos is not None:
+                sin, cos = sincos
+                q = apply_rope(q, sin, cos)
+                k = apply_rope(k, sin, cos)
+            tc = cache["k"].shape[1]
+            slot = pos % tc
+            kc = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
+                                              (0, slot, 0, 0))
+            vc = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
+                                              (0, slot, 0, 0))
+            cp = jax.lax.dynamic_update_slice(
+                cache["cache_pos"], pos[None].astype(jnp.int32), (slot,))
+            out = decode_attention(q, kc, vc, kv_len=0, cache_pos=cp,
+                                   scale=scale, attn_softcap=cfg.attn_softcap)
+            new_cache = {"k": kc, "v": vc, "cache_pos": cp}
+        else:
+            t = s
+            k = (x @ p["k"]).reshape(b, t, kvh, hd)
+            v = (x @ p["v"]).reshape(b, t, kvh, hd)
+            if sincos is not None:
+                sin, cos = sincos
+                q = apply_rope(q, sin, cos)
+                k = apply_rope(k, sin, cos)
+            out = attend(q, k, v, scale=scale, causal=causal, window=window,
+                         attn_softcap=cfg.attn_softcap, impl=self.attn_impl,
+                         unroll=self.unroll)
+            if mode == "prefill":
+                tc = min(window, max_cache_len) if (local and window) else max_cache_len
+                new_cache = _build_prefill_cache(k, v, tc)
+        out = out.reshape(b, s, nh * hd) @ p["o"]
+        return out, new_cache
+
+    def _ssm_sub(self, p: dict, h: jax.Array, *, mode: str,
+                 cache: Optional[dict]):
+        cfg = self.cfg
+        x = apply_norm(cfg, p["ln"], h)
+        if mode == "decode":
+            out, nc = SSM.mamba2_decode(cfg, p, x, cache)
+            return out, nc
+        if mode == "prefill":
+            out, nc = SSM.mamba2_forward(cfg, p, x, return_cache=True,
+                                         use_kernel=self.use_ssd_kernel)
+            return out, nc
+        return SSM.mamba2_forward(cfg, p, x,
+                                  use_kernel=self.use_ssd_kernel), {}
+
+    def _ffn_sub(self, kind: str, p: dict, h: jax.Array):
+        cfg, ctx = self.cfg, self.ctx
+        x = apply_norm(cfg, p["ln"], h)
+        if kind == "dense":
+            return ffn(cfg, p, x), jnp.zeros((), jnp.float32)
+        if self.moe_impl == "dense":
+            out, aux = MOE.moe_dense(cfg, p, x)
+        else:
+            out, aux = MOE.moe_sorted(
+                cfg, p, x, num_groups=max(ctx.dp_size, 1),
+                capacity_factor=self.moe_capacity_factor)
+        return out, aux
+
+    def _residual(self, h, out, post_ln):
+        cfg = self.cfg
+        if post_ln is not None:
+            out = apply_norm(cfg, post_ln, out)
+        return h + cfg.residual_scale * out
+
+    def _cast(self, tree):
+        """Cast float params to the compute dtype (mixed-precision matmuls
+        keep the carry dtype stable; norms/SSM re-promote internally)."""
+        cd = self.compute_dtype
+        return jax.tree_util.tree_map(
+            lambda x: x.astype(cd)
+            if jnp.issubdtype(x.dtype, jnp.floating) else x, tree)
+
+    def _period_body(self, h, period_params, *, sincos, mode, period_cache,
+                     pos, max_cache_len, enc_out, causal=True):
+        """Applies the scan_period sublayers of one period."""
+        period_params = self._cast(period_params)
+        cfg = self.cfg
+        aux_total = jnp.zeros((), jnp.float32)
+        new_cache: dict = {}
+        for s, (mix, f) in enumerate(self._sub_kinds):
+            sub = period_params[f"sub{s}"]
+            sc = period_cache[f"sub{s}"] if period_cache is not None else None
+            nc: dict = {}
+            if mix == "attn":
+                p = sub["attn"]
+                out, c = self._attn_sub(
+                    p, h, sincos=sincos, local=cfg.is_local_layer(s),
+                    mode=mode, cache=sc.get("attn") if sc else None, pos=pos,
+                    max_cache_len=max_cache_len, causal=causal)
+                h = self._residual(h, out, p.get("post_ln"))
+                if c:
+                    nc["attn"] = c
+            else:
+                p = sub["ssm"]
+                out, c = self._ssm_sub(p, h, mode=mode,
+                                       cache=sc.get("ssm") if sc else None)
+                h = self._residual(h, out, p.get("post_ln"))
+                if c:
+                    nc["ssm"] = c
+            if "cross" in sub:
+                out, c = self._attn_sub(
+                    sub["cross"], h, sincos=None, local=False, mode=mode,
+                    cache=sc.get("cross") if sc else None, pos=pos,
+                    max_cache_len=max_cache_len, enc_out=enc_out, cross=True)
+                h = self._residual(h, out, None)
+                if c:
+                    nc["cross"] = c
+            if f != "none":
+                key = "moe" if f == "moe" else "ffn"
+                out, aux = self._ffn_sub(f, sub[key], h)
+                h = self._residual(h, out, sub[key].get("post_ln"))
+                aux_total = aux_total + aux
+            if new_cache is not None:
+                new_cache[f"sub{s}"] = nc
+            h = self.ctx.cs_hidden(h)
+        return h, aux_total, new_cache
+
+    # ------------------------------------------------------------------
+    # Stacks
+    # ------------------------------------------------------------------
+    def _run_stack(self, params, h, *, sincos, mode, cache, pos,
+                   max_cache_len, enc_out):
+        def body(carry, xs):
+            hh, aux = carry
+            if mode == "decode" or mode == "prefill":
+                pp, cc = xs if mode == "decode" else (xs, None)
+            else:
+                pp, cc = xs, None
+            hh, a, nc = self._period_body(
+                hh, pp, sincos=sincos, mode=mode, period_cache=cc, pos=pos,
+                max_cache_len=max_cache_len, enc_out=enc_out)
+            return (hh, aux + a), nc
+
+        if self.remat and mode == "fwd":
+            policy = (jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+                      if self.remat_policy == "dots"
+                      else jax.checkpoint_policies.nothing_saveable)
+            body = jax.checkpoint(body, policy=policy)
+        xs = (params["stack"], cache) if mode == "decode" else params["stack"]
+        if self.unroll:
+            carry = (h, jnp.zeros((), jnp.float32))
+            caches = []
+            for i in range(self.cfg.num_periods):
+                xi = jax.tree_util.tree_map(lambda x: x[i], xs)
+                carry, nc = body(carry, xi)
+                caches.append(nc)
+            h, aux = carry
+            new_cache = (jax.tree_util.tree_map(
+                lambda *ys: jnp.stack(ys), *caches) if caches and
+                jax.tree_util.tree_leaves(caches[0]) else caches[0])
+        else:
+            (h, aux), new_cache = jax.lax.scan(
+                body, (h, jnp.zeros((), jnp.float32)), xs)
+        return h, aux, (new_cache if mode in ("decode", "prefill") else None)
+
+    def _encode(self, params, frames):
+        """Whisper encoder: bidirectional attention over frame embeddings."""
+        cfg = self.cfg
+        b, t, _ = frames.shape
+        h = frames.astype(self.compute_dtype)
+        h = h + params["enc_pos"]["table"][None, :t].astype(h.dtype)
+
+        def body(carry, pp):
+            hh = carry
+            pp = self._cast(pp)
+            out, _ = self._attn_sub(pp["attn"], hh, sincos=None, local=False,
+                                    mode="fwd", cache=None, pos=None,
+                                    max_cache_len=0, causal=False)
+            hh = self._residual(hh, out, None)
+            out, _ = self._ffn_sub("dense", pp["ffn"], hh)
+            hh = self._residual(hh, out, None)
+            return hh, None
+
+        if self.unroll:
+            for i in range(cfg.encoder_layers):
+                h, _ = body(h, jax.tree_util.tree_map(
+                    lambda x: x[i], params["enc_stack"]["sub0"]))
+        else:
+            h, _ = jax.lax.scan(body, h, params["enc_stack"]["sub0"])
+        return apply_norm(cfg, params["enc_norm"], h)
+
+    # ------------------------------------------------------------------
+    # Public API
+    # ------------------------------------------------------------------
+    def _embed(self, params, tokens):
+        emb = params["embed"]["tokens"].astype(self.compute_dtype)
+        h = jnp.take(emb, tokens, axis=0)
+        if self.cfg.embed_scale != 1.0:
+            h = h * jnp.asarray(self.cfg.embed_scale, h.dtype)
+        return h
+
+    def _assemble_inputs(self, params, batch):
+        """Token embeddings (+ frontend concat for VLM)."""
+        cfg = self.cfg
+        h = self._embed(params, batch["tokens"])
+        enc_out = None
+        if cfg.frontend == "vision_patches":
+            fe = batch["frontend_embeds"].astype(self.compute_dtype)
+            h = jnp.concatenate([fe, h], axis=1)
+        elif cfg.is_encoder_decoder:
+            enc_out = self._encode(params, batch["frontend_embeds"])
+        return h, enc_out
+
+    def _pos_tables(self, params, h, start: int = 0, positions=None):
+        cfg = self.cfg
+        s = h.shape[1]
+        if positions is None:
+            positions = start + jnp.arange(s)
+        sincos = None
+        if cfg.pos_embedding == "rope" and cfg.num_heads:
+            sincos = rope_tables(positions, cfg.head_dim, cfg.rope_theta)
+        elif cfg.pos_embedding == "learned":
+            tab = params["pos"]["table"].astype(h.dtype)
+            h = h + jnp.take(tab, positions, axis=0)[None]
+        return h, sincos
+
+    def _logits(self, params, h, last_only: bool = False):
+        cfg, ctx = self.cfg, self.ctx
+        if last_only:
+            h = h[:, -1:]
+        h = apply_norm(cfg, params["final_norm"], h)
+        if cfg.tie_embeddings:
+            w = params["embed"]["tokens"].astype(self.compute_dtype)
+            logits = jnp.einsum("bsd,vd->bsv", h, w)
+        else:
+            logits = h @ params["unembed"].astype(self.compute_dtype)
+        logits = softcap(logits.astype(jnp.float32), cfg.final_softcap)
+        return ctx.cs(logits, ctx.dp_spec, None, ctx.tp)
+
+    def forward(self, params, batch) -> Tuple[jax.Array, jax.Array]:
+        """Full-sequence logits (training). Returns (logits_f32, moe_aux)."""
+        h, enc_out = self._assemble_inputs(params, batch)
+        h, sincos = self._pos_tables(params, h)
+        h = self.ctx.cs_hidden(h)
+        h, aux, _ = self._run_stack(params, h, sincos=sincos, mode="fwd",
+                                    cache=None, pos=None, max_cache_len=0,
+                                    enc_out=enc_out)
+        return self._logits(params, h), aux
+
+    def prefill(self, params, batch, max_cache_len: int):
+        """Populate the decode cache; returns (last_logits, cache)."""
+        h, enc_out = self._assemble_inputs(params, batch)
+        h, sincos = self._pos_tables(params, h)
+        h = self.ctx.cs_hidden(h)
+        h, _, cache = self._run_stack(params, h, sincos=sincos,
+                                      mode="prefill", cache=None, pos=None,
+                                      max_cache_len=max_cache_len,
+                                      enc_out=enc_out)
+        return self._logits(params, h, last_only=True), cache
+
+    def decode_step(self, params, cache, tokens, pos):
+        """One decode step. tokens: (B, 1); pos: scalar int32 (next index).
+        Returns (logits (B,1,V), new_cache)."""
+        h = self._embed(params, tokens)
+        h, sincos = self._pos_tables(params, h, positions=pos[None])
+        h, _, new_cache = self._run_stack(params, h, sincos=sincos,
+                                          mode="decode", cache=cache,
+                                          pos=pos, max_cache_len=0,
+                                          enc_out=None)
+        return self._logits(params, h), new_cache
+
+    # ------------------------------------------------------------------
+    # Cache init (for decode-only entry, e.g. the decode dry-run cells)
+    # ------------------------------------------------------------------
+    def init_cache(self, batch_size: int, max_cache_len: int,
+                   dtype=None) -> Params:
+        cfg = self.cfg
+        dtype = dtype or self.compute_dtype
+        np_ = cfg.num_periods
+        kvh, hd = cfg.num_kv_heads, cfg.head_dim
+        stack_cache: dict = {}
+        for s, (mix, _) in enumerate(self._sub_kinds):
+            sub: dict = {}
+            if mix == "attn":
+                tc = (min(cfg.sliding_window, max_cache_len)
+                      if cfg.is_local_layer(s) and cfg.sliding_window
+                      else max_cache_len)
+                sub["attn"] = {
+                    "k": jnp.zeros((np_, batch_size, tc, kvh, hd), dtype),
+                    "v": jnp.zeros((np_, batch_size, tc, kvh, hd), dtype),
+                    "cache_pos": jnp.full((np_, tc), -1, jnp.int32),
+                }
+            else:
+                c = SSM.mamba2_init_cache(cfg, batch_size, dtype)
+                sub["ssm"] = jax.tree_util.tree_map(
+                    lambda x: jnp.broadcast_to(x[None], (np_,) + x.shape), c)
+            if cfg.is_encoder_decoder:
+                sub["cross"] = {
+                    "xk": jnp.zeros((np_, batch_size, cfg.encoder_seq, kvh, hd), dtype),
+                    "xv": jnp.zeros((np_, batch_size, cfg.encoder_seq, kvh, hd), dtype),
+                }
+            stack_cache[f"sub{s}"] = sub
+        return stack_cache
+
+    def cache_shapes(self, batch_size: int, max_cache_len: int, dtype=None):
+        return jax.eval_shape(
+            lambda: self.init_cache(batch_size, max_cache_len, dtype))
+
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+
+def _stack_norm(cfg: ModelConfig, np_: int, d: int) -> dict:
+    p = norm_param(cfg, d)
+    return {k: jnp.broadcast_to(v[None], (np_,) + v.shape) + 0.0
+            for k, v in p.items()}
+
+
+def _build_prefill_cache(k: jax.Array, v: jax.Array, tc: int) -> dict:
+    """Pack computed K/V (B, S, KV, hd) into a ring cache of length tc."""
+    b, s, kvh, hd = k.shape
+    if s <= tc:
+        pad = ((0, 0), (0, tc - s), (0, 0), (0, 0))
+        kc, vc = jnp.pad(k, pad), jnp.pad(v, pad)
+        cp = jnp.where(jnp.arange(tc) < s, jnp.arange(tc), -1)
+    else:
+        # keep the last tc entries, laid out at slot = abs_pos % tc
+        kl, vl = k[:, s - tc:], v[:, s - tc:]
+        shift = s % tc
+        kc, vc = jnp.roll(kl, shift, axis=1), jnp.roll(vl, shift, axis=1)
+        cp = jnp.roll(jnp.arange(s - tc, s), shift)
+    return {"k": kc, "v": vc, "cache_pos": cp.astype(jnp.int32)}
+
+
+def init_params(model: Model, rng: jax.Array) -> Params:
+    return model.init_params(rng)
+
+
+def param_shapes(model: Model) -> Params:
+    return model.param_shapes()
+
+
+def build_model(arch: str | ModelConfig, ctx: Optional[ShardingCtx] = None,
+                **kw) -> Model:
+    return Model(arch, ctx, **kw)

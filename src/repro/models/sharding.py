@@ -1,0 +1,277 @@
+"""Sharding rules: map every parameter / activation / cache tensor to a
+PartitionSpec on the production mesh (DESIGN.md §4 "Distribution design").
+
+Axes semantics:
+  dp   — batch data-parallel axes (("pod","data") multi-pod, ("data",) else)
+  tp   — tensor-parallel axis ("model"): heads, d_ff, vocab, experts
+  fsdp — ZeRO param/optimizer sharding axes (== dp for train, () for serve)
+  seq  — axis used to shard long decode KV caches / activation seq dim
+
+GSPMD allows non-divisible dims (it pads), so rules stay uniform; padding
+waste shows up in memory_analysis and is a hillclimb lever (EXPERIMENTS.md).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingCtx:
+    mesh: Optional[Mesh] = None
+    dp: Tuple[str, ...] = ()
+    tp: Optional[str] = None
+    fsdp: Tuple[str, ...] = ()
+    seq: Optional[str] = None        # shard seq dim of caches/activations
+    shard_cache_seq: bool = False    # long-context decode: KV seq over `seq`
+    seq_parallel: bool = False       # train: carry activations seq-sharded
+
+    @property
+    def dp_spec(self):
+        return self.dp if self.dp else None
+
+    @property
+    def dp_size(self) -> int:
+        if not self.mesh or not self.dp:
+            return 1
+        n = 1
+        for a in self.dp:
+            n *= self.mesh.shape[a]
+        return n
+
+    @property
+    def tp_size(self) -> int:
+        if not self.mesh or not self.tp:
+            return 1
+        return self.mesh.shape[self.tp]
+
+    def named(self, *spec) -> Optional[NamedSharding]:
+        if self.mesh is None:
+            return None
+        return NamedSharding(self.mesh, P(*spec))
+
+    def axes_size(self, axes) -> int:
+        if self.mesh is None or axes is None:
+            return 1
+        if isinstance(axes, str):
+            axes = (axes,)
+        n = 1
+        for a in axes:
+            n *= self.mesh.shape[a]
+        return n
+
+    def if_div(self, dim: int, axes):
+        """`axes` if `dim` divides evenly across them, else None (pjit
+        arguments require exact divisibility, unlike intermediates)."""
+        if axes is None:
+            return None
+        n = self.axes_size(axes)
+        return axes if (n > 0 and dim % n == 0) else None
+
+    def cs(self, x: jax.Array, *spec) -> jax.Array:
+        """with_sharding_constraint if a mesh is configured, else no-op."""
+        if self.mesh is None:
+            return x
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, P(*spec)))
+
+    def cs_hidden(self, h: jax.Array) -> jax.Array:
+        """Activation constraint (B, S, D) at layer boundaries."""
+        if self.mesh is None:
+            return h
+        if self.seq_parallel and self.tp:
+            return self.cs(h, self.dp_spec, self.tp, None)
+        return self.cs(h, self.dp_spec, None, None)
+
+
+REPLICATED = P()
+
+# Leaf-name -> spec template. `F`=fsdp axes, `T`=tp axis, None=replicated dim.
+_RULES: list[tuple[re.Pattern, tuple]] = [
+    (re.compile(r"tokens$"),     ("T", "F")),       # embed (V, D)
+    (re.compile(r"unembed$"),    ("F", "T")),       # (D, V)
+    (re.compile(r"^(x?)[qkv]$"), ("F", "T")),       # (D, H*hd)
+    (re.compile(r"^(x?)o$"),     ("T", "F")),       # (H*hd, D)
+    (re.compile(r"^w[ig]$"),     ("F", "T")),       # dense ffn (D, F) / moe (E,D,F) handled below
+    (re.compile(r"^wo$"),        ("T", "F")),
+    (re.compile(r"^sw[ig]$"),    ("F", "T")),
+    (re.compile(r"^swo$"),       ("T", "F")),
+    (re.compile(r"^sgate$"),     ("F", None)),
+    (re.compile(r"^router$"),    ("F", None)),
+    (re.compile(r"^in_proj$"),   ("F", "T")),
+    (re.compile(r"^out_proj$"),  ("T", "F")),
+    (re.compile(r"^conv$"),      (None, "T")),
+    (re.compile(r"^(conv_bias|A_log|D|dt_bias|norm_scale)$"), ("T",)),
+    (re.compile(r"^(scale|bias)$"), (None,)),       # norms
+    (re.compile(r"table$"),      (None, None)),     # learned pos
+]
+
+
+def _leaf_spec(path_names: list[str], shape: tuple, ctx: ShardingCtx) -> P:
+    name = path_names[-1]
+    ndim = len(shape)
+    stacked = any(n in ("stack", "enc_stack") for n in path_names)
+    is_moe = any(n == "moe" for n in path_names)
+    body = shape[1:] if stacked else shape       # dims after the period dim
+
+    def ax(sym):
+        if sym == "F":
+            return ctx.fsdp if ctx.fsdp else None
+        if sym == "T":
+            return ctx.tp
+        return None
+
+    spec: Optional[tuple] = None
+    for pat, tmpl in _RULES:
+        if pat.search(name):
+            spec = tuple(ax(s) for s in tmpl)
+            break
+    if spec is None:
+        spec = (None,) * ndim
+
+    if is_moe and name in ("wi", "wg", "wo"):
+        # (E, D, F) / (E, F, D). Expert-parallel over tp when E divides the
+        # model axis (jamba 16e, granite-moe 32e); otherwise (qwen 60e)
+        # fall back to tensor parallelism on the expert d_ff dim.
+        e = body[0]
+        ep = ctx.if_div(e, ctx.tp)
+        if ep is not None:
+            spec = ((ep, None, ax("F")) if name in ("wi", "wg")
+                    else (ep, ax("F"), None))
+        else:
+            spec = ((None, ax("F"), ctx.tp) if name in ("wi", "wg")
+                    else (None, ctx.tp, ax("F")))
+
+    # pjit arguments need exact divisibility: drop axes that don't divide
+    spec = tuple(ctx.if_div(d, a) if a is not None else None
+                 for d, a in zip(body, spec))
+
+    if stacked:
+        spec = (None,) + spec                    # leading period dim
+    spec = tuple(spec[:ndim]) + (None,) * max(0, ndim - len(spec))
+    return P(*spec)
+
+
+def param_specs(params: Any, ctx: ShardingCtx):
+    """PartitionSpec pytree mirroring `params` (works on ShapeDtypeStructs)."""
+    def f(path, leaf):
+        names = [_key_name(k) for k in path]
+        return _leaf_spec(names, tuple(leaf.shape), ctx)
+    return jax.tree_util.tree_map_with_path(f, params)
+
+
+def param_shardings(params: Any, ctx: ShardingCtx):
+    if ctx.mesh is None:
+        return None
+    return jax.tree_util.tree_map(
+        lambda spec: NamedSharding(ctx.mesh, spec), param_specs(params, ctx),
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def _key_name(k) -> str:
+    if hasattr(k, "key"):
+        return str(k.key)
+    if hasattr(k, "name"):
+        return str(k.name)
+    return str(k)
+
+
+# ---------------------------------------------------------------------------
+# Cache specs
+# ---------------------------------------------------------------------------
+
+def cache_specs(cache: Any, ctx: ShardingCtx):
+    """KV/SSM cache PartitionSpecs.
+
+    Self-attention caches (B, T, KV, hd): batch over dp, cache SEQUENCE dim
+    over tp (always divisible — 32k/500k contexts, and gemma's 4096-slot
+    ring windows) — GSPMD computes flash-decode-style partial softmax with
+    an all-reduce combine over the model axis. For long_500k (batch 1) the
+    seq dim additionally shards over the data axis. Cross-attention caches
+    (whisper, 1500 frames) shard batch only. Every rule is guarded by
+    exact-divisibility (pjit argument requirement); non-divisible dims
+    replicate.
+    """
+    def f(path, leaf):
+        names = [_key_name(k) for k in path]
+        name = names[-1]
+        shp = tuple(leaf.shape)
+        nd = len(shp)
+        # cache trees are rooted at the sublayer dicts (sub0, sub1, ...)
+        # and always carry the stacked period dim in front
+        stacked = any(n in ("stack", "enc_stack") or n.startswith("sub")
+                      for n in names)
+        lead = (None,) if stacked else ()
+        off = len(lead)
+        if name in ("k", "v"):
+            b, t = shp[off], shp[off + 1]
+            if ctx.shard_cache_seq and ctx.seq and ctx.tp:
+                # long-context: seq over data AND model (flash-decode both
+                # ways); falls back to data-only if not divisible
+                seq_axes = (ctx.if_div(t, (ctx.seq, ctx.tp))
+                            or ctx.if_div(t, ctx.seq))
+            else:
+                seq_axes = ctx.if_div(t, ctx.tp)
+            spec = lead + (ctx.if_div(b, ctx.dp_spec), seq_axes, None, None)
+        elif name in ("xk", "xv"):
+            b = shp[off]
+            spec = lead + (ctx.if_div(b, ctx.dp_spec), None, None, None)
+        elif name == "state":                    # (B, H, P, N)
+            b, h = shp[off], shp[off + 1]
+            spec = lead + (ctx.if_div(b, ctx.dp_spec),
+                           ctx.if_div(h, ctx.tp), None, None)
+        elif name == "conv":                     # (B, W-1, C)
+            b, c = shp[off], shp[off + 2]
+            spec = lead + (ctx.if_div(b, ctx.dp_spec), None,
+                           ctx.if_div(c, ctx.tp))
+        elif name == "cache_pos":
+            spec = lead + (None,)
+        else:
+            spec = lead + (None,) * (nd - len(lead))
+        spec = tuple(spec[:nd]) + (None,) * max(0, nd - len(spec))
+        return P(*spec)
+    return jax.tree_util.tree_map_with_path(f, cache)
+
+
+def cache_shardings(cache: Any, ctx: ShardingCtx):
+    if ctx.mesh is None:
+        return None
+    return jax.tree_util.tree_map(
+        lambda spec: NamedSharding(ctx.mesh, spec), cache_specs(cache, ctx),
+        is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------------------
+# Context factories
+# ---------------------------------------------------------------------------
+
+def make_train_ctx(mesh: Optional[Mesh], *, seq_parallel: bool = True) -> ShardingCtx:
+    if mesh is None:
+        return ShardingCtx()
+    axes = mesh.axis_names
+    dp = tuple(a for a in ("pod", "data") if a in axes)
+    tp = "model" if "model" in axes else None
+    return ShardingCtx(mesh=mesh, dp=dp, tp=tp, fsdp=dp, seq="data",
+                       seq_parallel=seq_parallel)
+
+
+def make_serve_ctx(mesh: Optional[Mesh], *, global_batch: int,
+                   big_model: bool = False) -> ShardingCtx:
+    """Serving: no optimizer, params TP (+2D over data for big models);
+    batch over dp when divisible, else KV-seq over data."""
+    if mesh is None:
+        return ShardingCtx()
+    axes = mesh.axis_names
+    dp = tuple(a for a in ("pod", "data") if a in axes)
+    tp = "model" if "model" in axes else None
+    dp_size = 1
+    for a in dp:
+        dp_size *= mesh.shape[a]
+    shard_seq = global_batch < dp_size
+    fsdp = dp if big_model else ()
+    return ShardingCtx(mesh=mesh, dp=() if shard_seq else dp, tp=tp,
+                       fsdp=fsdp, seq="data", shard_cache_seq=shard_seq)

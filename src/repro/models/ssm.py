@@ -1,0 +1,218 @@
+"""Mamba-2 (SSD — state-space duality) sequence mixer [arXiv:2405.21060].
+
+Block layout follows the official Mamba-2:
+
+    u -> in_proj -> [z | x | B | C | dt]
+    [x|B|C] -> causal depthwise conv (width W) -> silu
+    y = SSD(x, dt, A, B, C) + D * x
+    y = RMSNorm(y * silu(z))          (gated norm)
+    out = y @ out_proj
+
+SSD is computed with the chunked dual form: intra-chunk attention-like dense
+matmuls (MXU-friendly) + an inter-chunk state recurrence carried by
+``lax.scan``. ``n_groups = 1``: B and C are shared across heads.
+
+The pure-jnp chunked scan below is the reference; the Pallas kernel in
+``repro.kernels.ssd`` is a drop-in for the intra-chunk part.
+
+Decode maintains O(1) state: (conv tail, SSD state (H, P, N)).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import rms_norm
+
+
+def _segsum(a: jax.Array) -> jax.Array:
+    """Stable 'segment sum': out[..., i, j] = sum_{k=j+1..i} a[..., k]
+    for i >= j, -inf otherwise. a: (..., Q) -> (..., Q, Q)."""
+    q = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]            # sum_{j+1..i}
+    mask = jnp.tril(jnp.ones((q, q), bool), k=0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked_ref(x: jax.Array, dt: jax.Array, a: jax.Array,
+                    b_mat: jax.Array, c_mat: jax.Array, chunk: int,
+                    init_state: Optional[jax.Array] = None
+                    ) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD scan (pure jnp oracle).
+
+    x:     (B, L, H, P)    inputs per head
+    dt:    (B, L, H)       softplus'd timesteps (>0)
+    a:     (H,)            negative state decay rates (A = -exp(A_log))
+    b_mat: (B, L, N)       input->state projection (n_groups=1)
+    c_mat: (B, L, N)       state->output projection
+    Returns (y (B, L, H, P), final_state (B, H, P, N)).
+    """
+    bsz, l0, h, p = x.shape
+    n = b_mat.shape[-1]
+    if l0 % chunk:
+        # pad with dt=0 steps: decay exp(0)=1 and zero update, so padding is
+        # state-neutral and valid outputs are unaffected.
+        pad = chunk - l0 % chunk
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b_mat = jnp.pad(b_mat, ((0, 0), (0, pad), (0, 0)))
+        c_mat = jnp.pad(c_mat, ((0, 0), (0, pad), (0, 0)))
+    l = x.shape[1]
+    nc = l // chunk
+    f32 = jnp.float32
+
+    xc = x.reshape(bsz, nc, chunk, h, p).astype(f32)
+    dtc = dt.reshape(bsz, nc, chunk, h).astype(f32)
+    bc = b_mat.reshape(bsz, nc, chunk, n).astype(f32)
+    cc = c_mat.reshape(bsz, nc, chunk, n).astype(f32)
+    da = dtc * a.astype(f32)[None, None, None, :]          # (B,NC,Q,H) <= 0
+
+    # ---- intra-chunk (diagonal) term -------------------------------------
+    # L[i,j] = exp(sum_{j<k<=i} da[k]); Y_diag = (C_i . B_j) * L * dt_j * x_j
+    da_h = jnp.moveaxis(da, -1, 2)                         # (B,NC,H,Q)
+    lmat = jnp.exp(_segsum(da_h))                          # (B,NC,H,Q,Q)
+    cb = jnp.einsum("bcin,bcjn->bcij", cc, bc)             # (B,NC,Q,Q)
+    w = cb[:, :, None] * lmat                              # (B,NC,H,Q,Q)
+    y_diag = jnp.einsum("bchij,bcjh,bcjhp->bcihp", w, dtc, xc)
+
+    # ---- chunk states -----------------------------------------------------
+    # state_c = sum_j exp(sum_{j<k<=Q} da[k]) * dt_j * B_j x_j^T
+    cum = jnp.cumsum(da_h, axis=-1)                        # (B,NC,H,Q)
+    decay_to_end = jnp.exp(cum[..., -1:] - cum)            # exp(sum_{k>j} da)
+    sbx = jnp.einsum("bchj,bcjh,bcjn,bcjhp->bchpn",
+                     decay_to_end, dtc, bc, xc)            # (B,NC,H,P,N)
+
+    # ---- inter-chunk recurrence ------------------------------------------
+    chunk_decay = jnp.exp(jnp.sum(da_h, axis=-1))          # (B,NC,H)
+    s0 = (jnp.zeros((bsz, h, p, n), f32) if init_state is None
+          else init_state.astype(f32))
+
+    def step(carry, inp):
+        dec, snew = inp                                    # (B,H), (B,H,P,N)
+        prev = carry
+        cur = prev * dec[..., None, None] + snew
+        return cur, prev                                   # emit state BEFORE chunk
+
+    final, prev_states = jax.lax.scan(
+        step, s0, (jnp.moveaxis(chunk_decay, 1, 0), jnp.moveaxis(sbx, 1, 0)))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)          # (B,NC,H,P,N)
+
+    # ---- inter-chunk output: C_i . exp(cum_i) . state_prev ----------------
+    in_decay = jnp.exp(cum)                                # exp(sum_{k<=i} da)
+    y_off = jnp.einsum("bcin,bchpn,bchi->bcihp", cc, prev_states, in_decay)
+
+    y = (y_diag + y_off).reshape(bsz, l, h, p)[:, :l0]
+    return y.astype(x.dtype), final
+
+
+def ssd_decode_step(state: jax.Array, x: jax.Array, dt: jax.Array,
+                    a: jax.Array, b_mat: jax.Array, c_mat: jax.Array
+                    ) -> Tuple[jax.Array, jax.Array]:
+    """One-token SSD recurrence.
+
+    state: (B,H,P,N); x: (B,H,P); dt: (B,H); b/c: (B,N).
+    y_t = C . state_t ; state_t = exp(dt*a)*state_{t-1} + dt * x B^T.
+    """
+    f32 = jnp.float32
+    dec = jnp.exp(dt.astype(f32) * a.astype(f32)[None])    # (B,H)
+    upd = jnp.einsum("bh,bhp,bn->bhpn", dt.astype(f32), x.astype(f32),
+                     b_mat.astype(f32))
+    new_state = state * dec[..., None, None] + upd
+    y = jnp.einsum("bn,bhpn->bhp", c_mat.astype(f32), new_state)
+    return y.astype(x.dtype), new_state
+
+
+# ---------------------------------------------------------------------------
+# Full Mamba-2 block
+# ---------------------------------------------------------------------------
+
+def _split_proj(cfg: ModelConfig, proj: jax.Array):
+    d_in, n, nh = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    z, x, b, c, dt = jnp.split(
+        proj, [d_in, 2 * d_in, 2 * d_in + n, 2 * d_in + 2 * n], axis=-1)
+    return z, x, b, c, dt
+
+
+def mamba2_forward(cfg: ModelConfig, p: dict, u: jax.Array, *,
+                   use_kernel: bool = False, return_cache: bool = False):
+    """Train/prefill path. u: (B, L, D) -> (B, L, D) [, decode cache]."""
+    bsz, l, _ = u.shape
+    d_in, n, nh, hd = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    w = cfg.ssm_conv_width
+
+    proj = u @ p["in_proj"]                                # (B,L,2*din+2N+nh)
+    z, xbc_x, b_mat, c_mat, dt = _split_proj(cfg, proj)
+    xbc = jnp.concatenate([xbc_x, b_mat, c_mat], axis=-1)  # conv over x|B|C
+
+    # causal depthwise conv, width W
+    pad = jnp.pad(xbc, ((0, 0), (w - 1, 0), (0, 0)))
+    conv = sum(pad[:, i:i + l] * p["conv"][i][None, None] for i in range(w))
+    conv = conv + p["conv_bias"][None, None]
+    conv = jax.nn.silu(conv)
+    x, b_mat, c_mat = jnp.split(conv, [d_in, d_in + n], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"][None, None])
+    a = -jnp.exp(p["A_log"].astype(jnp.float32))           # (H,)
+
+    xh = x.reshape(bsz, l, nh, hd)
+    if use_kernel:
+        from repro.kernels.ssd import ops as ssd_ops
+        y, final_state = ssd_ops.ssd_chunked(xh, dt, a, b_mat, c_mat,
+                                             cfg.ssm_chunk)
+    else:
+        y, final_state = ssd_chunked_ref(xh, dt, a, b_mat, c_mat,
+                                         cfg.ssm_chunk)
+    y = y + xh * p["D"].astype(y.dtype)[None, None, :, None]
+    y = y.reshape(bsz, l, d_in)
+
+    y = rms_norm(y * jax.nn.silu(z), p["norm_scale"], cfg.norm_eps)
+    out = y @ p["out_proj"]
+    if not return_cache:
+        return out
+    conv_tail = xbc[:, l - (w - 1):] if l >= w - 1 else jnp.pad(
+        xbc, ((0, 0), (w - 1 - l, 0), (0, 0)))
+    return out, {"conv": conv_tail, "state": final_state}
+
+
+def mamba2_init_cache(cfg: ModelConfig, batch: int, dtype) -> dict:
+    d_conv_in = cfg.d_inner + 2 * cfg.ssm_state
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv_width - 1, d_conv_in), dtype),
+        "state": jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_head_dim,
+                            cfg.ssm_state), jnp.float32),
+    }
+
+
+def mamba2_decode(cfg: ModelConfig, p: dict, u: jax.Array,
+                  cache: dict) -> Tuple[jax.Array, dict]:
+    """One-token decode. u: (B, 1, D) -> ((B, 1, D), new cache)."""
+    bsz = u.shape[0]
+    d_in, n, nh, hd = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    w = cfg.ssm_conv_width
+
+    proj = u[:, 0] @ p["in_proj"]                          # (B, ...)
+    z, x_new, b_new, c_new, dt = _split_proj(cfg, proj)
+    xbc_new = jnp.concatenate([x_new, b_new, c_new], axis=-1)
+
+    hist = jnp.concatenate([cache["conv"],
+                            xbc_new[:, None]], axis=1)     # (B, W, C_in)
+    conv = jnp.einsum("bwc,wc->bc", hist, p["conv"]) + p["conv_bias"]
+    conv = jax.nn.silu(conv)
+    x, b_mat, c_mat = jnp.split(conv, [d_in, d_in + n], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"][None])
+    a = -jnp.exp(p["A_log"].astype(jnp.float32))
+
+    xh = x.reshape(bsz, nh, hd)
+    y, new_state = ssd_decode_step(cache["state"], xh, dt, a, b_mat, c_mat)
+    y = y + xh * p["D"].astype(y.dtype)[None, :, None]
+    y = y.reshape(bsz, d_in)
+
+    y = rms_norm(y * jax.nn.silu(z), p["norm_scale"], cfg.norm_eps)
+    out = (y @ p["out_proj"])[:, None]
+    new_cache = {"conv": hist[:, 1:], "state": new_state}
+    return out, new_cache

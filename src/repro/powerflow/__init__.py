@@ -1,0 +1,12 @@
+"""AC/DC powerflow substrate (paper §4.2's embedded simulation).
+
+Built in JAX end-to-end: synthetic German-like grid generation, batched
+full-Newton AC powerflow (dense complex linear algebra — MXU-friendly),
+DC powerflow + LODF contingency screening, and the HVDC dispatch objective.
+"""
+from repro.powerflow.grid import Grid, make_synthetic_grid, GERMAN_GRID_SPEC
+from repro.powerflow.newton import newton_powerflow, line_flows
+from repro.powerflow.hvdc import apply_hvdc
+
+__all__ = ["Grid", "make_synthetic_grid", "GERMAN_GRID_SPEC",
+           "newton_powerflow", "line_flows", "apply_hvdc"]

@@ -1,0 +1,87 @@
+"""DC powerflow, PTDF and LODF — fast contingency screening
+(beyond-paper optimization, EXPERIMENTS.md §Perf).
+
+DC approximation: B' theta = P with B' the susceptance Laplacian. PTDF maps
+injections to line flows; LODF gives post-outage flows without re-solving:
+
+    f_k(outage l) = f_k + LODF[k, l] * f_l
+
+Everything is dense matrix algebra (one n×n solve at build time, then pure
+matmuls per evaluation) — MXU-friendly, and 2004 AC Newton solves collapse
+into one (L, C) matmul for screening; full AC is then run only on the top-K
+screened cases.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class DCModel(NamedTuple):
+    ptdf: jax.Array        # (L, n)  injection -> flow sensitivity
+    lodf: jax.Array        # (L, L)  outage distribution factors
+    f0_coeff: jax.Array    # (L, n)  == ptdf (alias for clarity)
+    slack: jax.Array       # () int
+    bridge_score: jax.Array  # (L,) 1/|1 - PTDF_l|: huge for islanding lines
+
+
+def build_dc_model(gridj: dict) -> DCModel:
+    """Dense PTDF/LODF from branch data. O(n^3) once, reused per eval."""
+    f, t = gridj["f_bus"], gridj["t_bus"]
+    n = gridj["bus_type"].shape[0]
+    nl = f.shape[0]
+    b = -jnp.imag(1.0 / (1.0 / gridj["y_series"]))           # 1/x
+    b = jnp.nan_to_num(b, nan=0.0, posinf=0.0, neginf=0.0)
+
+    # incidence (L, n) and Laplacian
+    rows = jnp.arange(nl)
+    a = jnp.zeros((nl, n)).at[rows, f].set(1.0).at[rows, t].set(-1.0)
+    bdiag = b[:, None] * a                                   # (L, n)
+    lap = a.T @ bdiag                                        # (n, n)
+
+    slack = jnp.argmax(gridj["bus_type"] == 2)
+    # ground the slack row/col
+    e = jnp.zeros((n,)).at[slack].set(1.0)
+    lap_g = lap + jnp.outer(e, e) * (1.0 + jnp.max(jnp.abs(lap)))
+    x_inv = jnp.linalg.solve(lap_g, jnp.eye(n))
+    ptdf = bdiag @ x_inv                                     # (L, n)
+    ptdf = ptdf - ptdf[:, slack][:, None]                    # slack-ref
+
+    # LODF[k, l] = PTDF_k(e_f(l) - e_t(l)) / (1 - PTDF_l(e_f - e_t))
+    h = ptdf[:, f] - ptdf[:, t]                              # (L, L): k rows, l cols
+    denom_raw = 1.0 - jnp.diagonal(h)
+    denom = jnp.where(jnp.abs(denom_raw) < 1e-6,
+                      jnp.where(denom_raw < 0, -1e-6, 1e-6), denom_raw)
+    lodf = h / denom[None, :]
+    lodf = lodf * (1.0 - jnp.eye(nl))                        # outaged line: 0
+    lodf = lodf - jnp.eye(nl)                                # its own flow -> -f_l
+    # |1 - PTDF_l| -> 0 means outaging l (near-)islands the network: the
+    # post-outage flows diverge and AC Newton will not converge. Rank those
+    # outages maximally critical during screening.
+    bridge = 1.0 / jnp.maximum(jnp.abs(denom_raw), 1e-9)
+    return DCModel(ptdf=ptdf, lodf=lodf, f0_coeff=ptdf, slack=slack,
+                   bridge_score=bridge)
+
+
+def dc_flows(model: DCModel, p_inj: jax.Array) -> jax.Array:
+    """Base-case DC flows (L,) from net injections (n,)."""
+    return model.ptdf @ p_inj
+
+
+def screen_contingencies(model: DCModel, p_inj: jax.Array,
+                         rate: jax.Array, top_k: int) -> jax.Array:
+    """Rank all single-line outages by worst post-outage relative loading
+    and return the indices of the top_k most critical ones.
+
+    One (L, L) x (L,) matmul replaces L Newton solves.
+    """
+    f0 = dc_flows(model, p_inj)                              # (L,)
+    post = f0[:, None] + model.lodf * f0[None, :]            # (k lines, l outages)
+    worst = jnp.max(jnp.abs(post) / rate[:, None], axis=0)   # per outage
+    # islanding outages (bridge_score >> 1) are maximally critical
+    worst = worst + jnp.where(model.bridge_score > 50.0, 1e6, 0.0) \
+                  + jnp.minimum(model.bridge_score, 50.0) * 1e-3
+    _, idx = jax.lax.top_k(worst, top_k)
+    return idx

@@ -1,0 +1,26 @@
+"""HVDC point-to-point injection model (paper §4.2).
+
+Each HVDC line is a controllable bidirectional power transfer x_i in
+[-pmax, pmax]: withdraw x at the from-bus, inject (1 - loss) * x at the
+to-bus. The 18 dispatch decisions are the GA genome.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+HVDC_LOSS = 0.015     # low-loss bulk transport
+
+
+def apply_hvdc(gridj: dict, dispatch: jax.Array) -> jax.Array:
+    """dispatch: (H,) p.u. -> additional bus injections (n,)."""
+    n = gridj["bus_type"].shape[0]
+    inj = jnp.zeros((n,), jnp.float32)
+    inj = inj.at[gridj["hvdc_f"]].add(-dispatch)
+    inj = inj.at[gridj["hvdc_t"]].add((1.0 - HVDC_LOSS) * dispatch)
+    return inj
+
+
+def scale_genome_to_dispatch(gridj: dict, genome01: jax.Array) -> jax.Array:
+    """genome in [-1, 1]^H -> dispatch in [-pmax, pmax]."""
+    return genome01 * gridj["hvdc_pmax"]

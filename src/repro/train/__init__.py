@@ -1,0 +1,1 @@
+"""Training / serving substrate: loss, optimizer, train & serve steps."""

@@ -1,0 +1,52 @@
+"""Cross-entropy LM loss with padded-vocab masking and token masking."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+def lm_loss(cfg: ModelConfig, logits: jax.Array, labels: jax.Array,
+            mask: Optional[jax.Array] = None) -> Tuple[jax.Array, dict]:
+    """Mean next-token cross entropy.
+
+    logits: (B, S, Vp) f32 (Vp = padded vocab); labels: (B, S) int32 where
+    label[t] is the target for position t (already shifted by the caller).
+    mask: (B, S) {0,1} — positions contributing to the loss.
+    """
+    vp = logits.shape[-1]
+    # mask padded vocab columns out of the logsumexp
+    col_valid = jnp.arange(vp) < cfg.vocab_size
+    logits = jnp.where(col_valid[None, None], logits, -1e30)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    if mask is None:
+        mask = jnp.ones(labels.shape, jnp.float32)
+    mask = mask.astype(jnp.float32)
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    loss = jnp.sum(nll * mask) / denom
+    metrics = {
+        "loss": loss,
+        "ppl_log": loss,
+        "tokens": denom,
+        "accuracy": jnp.sum((jnp.argmax(logits, -1) == labels) * mask) / denom,
+    }
+    return loss, metrics
+
+
+def shift_batch(tokens: jax.Array, frontend_len: int = 0
+                ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """inputs/labels/mask for next-token prediction.
+
+    tokens: (B, S+1) raw stream -> inputs (B,S), labels (B,S), mask (B,S).
+    With a frontend prefix of length F (VLM patches), the model's logit row
+    F-1+t predicts token t+1; the caller aligns by slicing logits[:, F:].
+    """
+    inputs = tokens[:, :-1]
+    labels = tokens[:, 1:]
+    mask = jnp.ones(labels.shape, jnp.float32)
+    return inputs, labels, mask

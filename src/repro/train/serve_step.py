@@ -1,0 +1,48 @@
+"""Serving steps: prefill, decode, and a simple generate driver."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import Model
+
+
+def make_prefill_step(model: Model, max_cache_len: int):
+    def prefill_step(params, batch):
+        logits, cache = model.prefill(params, batch, max_cache_len)
+        next_tok = jnp.argmax(logits[:, -1, :model.cfg.vocab_size], axis=-1)
+        return next_tok.astype(jnp.int32), logits, cache
+    return prefill_step
+
+
+def make_decode_step(model: Model, *, temperature: float = 0.0):
+    def decode_step(params, cache, tokens, pos, rng):
+        logits, cache = model.decode_step(params, cache, tokens, pos)
+        logit = logits[:, -1, :model.cfg.vocab_size]
+        if temperature > 0:
+            next_tok = jax.random.categorical(rng, logit / temperature, -1)
+        else:
+            next_tok = jnp.argmax(logit, axis=-1)
+        return next_tok.astype(jnp.int32)[:, None], logits, cache
+    return decode_step
+
+
+def generate(model: Model, params, batch, *, steps: int, max_cache_len: int,
+             temperature: float = 0.0, rng: Optional[jax.Array] = None
+             ) -> jax.Array:
+    """Greedy/temperature generation (host loop; examples/tests only)."""
+    rng = rng if rng is not None else jax.random.PRNGKey(0)
+    prefill = jax.jit(make_prefill_step(model, max_cache_len))
+    decode = jax.jit(make_decode_step(model, temperature=temperature))
+    tok, _, cache = prefill(params, batch)
+    from repro.train.train_step import frontend_len
+    pos = batch["tokens"].shape[1] + frontend_len(model.cfg, batch)
+    out = [tok[:, None]]
+    cur = tok[:, None]
+    for i in range(steps - 1):
+        rng, sub = jax.random.split(rng)
+        cur, _, cache = decode(params, cache, cur, jnp.int32(pos + i), sub)
+        out.append(cur)
+    return jnp.concatenate(out, axis=1)

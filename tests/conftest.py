@@ -1,0 +1,8 @@
+import os
+import sys
+
+# make `src` importable without installation
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# Note: NO xla_force_host_platform_device_count here — smoke tests and
+# benchmarks must see 1 device (the dry-run sets it in its own process).

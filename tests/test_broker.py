@@ -1,0 +1,64 @@
+"""Broker (shared evaluation queue analogue) tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.broker import (Broker, balanced_permutation,
+                               inverse_permutation)
+from repro.fitness import sphere
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    w=st.integers(1, 16),
+    rows=st.integers(1, 16),
+    seed=st.integers(0, 2**30),
+    skewness=st.floats(0.5, 4.0),
+)
+def test_balanced_permutation_properties(w, rows, seed, skewness):
+    n = w * rows
+    cost = jnp.asarray(
+        np.random.default_rng(seed).uniform(0.1, 1, n) ** skewness,
+        jnp.float32)
+    perm = balanced_permutation(cost, w)
+    # is a permutation
+    assert sorted(np.asarray(perm).tolist()) == list(range(n))
+    # inverse really inverts
+    inv = inverse_permutation(perm)
+    np.testing.assert_array_equal(np.asarray(perm)[np.asarray(inv)],
+                                  np.arange(n))
+    # snake-on-sorted guarantee: per-lane loads within one item of each
+    # other (telescoping bound; "never worse than an arbitrary split" is
+    # NOT a theorem — hypothesis found counterexamples)
+    loads = np.asarray(jnp.sum(cost[perm].reshape(w, rows), axis=1))
+    assert loads.max() - loads.min() <= float(jnp.max(cost)) + 1e-5
+
+
+def test_broker_preserves_fitness_values():
+    genomes = jax.random.uniform(jax.random.PRNGKey(0), (64, 6))
+    plain = sphere(genomes)
+    broker = Broker(sphere, cost_fn=lambda g: jnp.sum(g, -1),
+                    num_workers=8)
+    fit, stats = broker.evaluate(genomes)
+    np.testing.assert_allclose(np.asarray(fit), np.asarray(plain),
+                               rtol=1e-6)
+    assert float(stats["skew"]) <= float(stats["naive_skew"]) + 1e-5
+
+
+def test_broker_uniform_cost_is_identity_path():
+    genomes = jax.random.uniform(jax.random.PRNGKey(0), (32, 4))
+    broker = Broker(sphere, cost_fn=None, num_workers=8)
+    fit, stats = broker.evaluate(genomes)
+    assert float(stats["balanced"]) == 0.0
+    np.testing.assert_allclose(np.asarray(fit), np.asarray(sphere(genomes)))
+
+
+def test_broker_skew_improvement_heavy_tail():
+    """Heavy-tailed costs: balanced dispatch cuts predicted makespan."""
+    rng = np.random.default_rng(3)
+    cost = jnp.asarray(rng.pareto(1.5, size=128).astype(np.float32) + 0.1)
+    perm = balanced_permutation(cost, 16)
+    loads = np.asarray(jnp.sum(cost[perm].reshape(16, 8), axis=1))
+    naive = np.asarray(jnp.sum(cost.reshape(16, 8), axis=1))
+    assert loads.max() / loads.mean() < naive.max() / naive.mean()

@@ -1,0 +1,146 @@
+"""Checkpoint/restart + fault tolerance + elasticity + stragglers."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import Checkpointer
+from repro.configs.base import GAConfig
+from repro.core.engine import GAEngine
+from repro.fitness import sphere
+from repro.runtime.elastic import repartition_islands
+from repro.runtime.straggler import backup_dispatch_eval
+
+
+def _cfg(**kw):
+    base = dict(num_genes=5, pop_per_island=16, num_islands=4,
+                generations_per_epoch=2, num_epochs=6, lower=-2.0,
+                upper=2.0, fused_operators=False, seed=3)
+    base.update(kw)
+    return GAConfig(**base)
+
+
+class TestCheckpointer:
+    def test_roundtrip_bit_exact(self, tmp_path):
+        ck = Checkpointer(str(tmp_path), async_write=False)
+        state = {"a": np.arange(10, dtype=np.float32),
+                 "nest": {"b": np.ones((3, 4), np.int32),
+                          "c": np.float64(3.5)}}
+        ck.save(state, step=7)
+        out = ck.restore()
+        np.testing.assert_array_equal(out["a"], state["a"])
+        np.testing.assert_array_equal(out["nest"]["b"], state["nest"]["b"])
+        assert float(out["nest"]["c"]) == 3.5
+
+    def test_corruption_detected(self, tmp_path):
+        ck = Checkpointer(str(tmp_path), async_write=False)
+        ck.save({"a": np.arange(100, dtype=np.float32)}, step=1)
+        # corrupt the npz
+        d = os.path.join(str(tmp_path), "step_0000000001")
+        path = os.path.join(d, "arrays.npz")
+        data = bytearray(open(path, "rb").read())
+        data[len(data) // 2] ^= 0xFF
+        open(path, "wb").write(bytes(data))
+        with pytest.raises(Exception):
+            ck.restore()
+
+    def test_prune_keeps_latest(self, tmp_path):
+        ck = Checkpointer(str(tmp_path), async_write=False, keep=2)
+        for s in (1, 2, 3, 4):
+            ck.save({"x": np.asarray([s])}, step=s)
+        assert ck.steps() == [3, 4]
+        assert int(ck.restore()["x"][0]) == 4
+
+    def test_async_save(self, tmp_path):
+        ck = Checkpointer(str(tmp_path), async_write=True)
+        ck.save({"x": np.arange(5)}, step=1)
+        ck.wait()
+        assert ck.latest_step() == 1
+
+
+class TestFaultTolerance:
+    def test_kill_restart_bit_exact(self, tmp_path):
+        """Run 6 epochs straight vs 3 epochs + 'crash' + restore + 3 more:
+        identical final population (deterministic restart)."""
+        ck_dir = str(tmp_path / "ck")
+        ref = GAEngine(_cfg(), sphere)
+        pop_ref, _ = ref.run(epochs=6)
+
+        e1 = GAEngine(_cfg(), sphere,
+                      checkpointer=Checkpointer(ck_dir, async_write=False),
+                      checkpoint_every=1)
+        e1.run(epochs=3)
+        # simulate crash: new engine process restores from checkpoint
+        e2 = GAEngine(_cfg(), sphere,
+                      checkpointer=Checkpointer(ck_dir, async_write=False),
+                      checkpoint_every=1)
+        pop2 = e2.restore()
+        assert pop2 is not None
+        assert int(jnp.asarray(pop2.epoch)) == 3
+        pop2 = jax.tree_util.tree_map(jnp.asarray, pop2)
+        pop_resumed, _ = e2.run(pop2, epochs=3)
+        np.testing.assert_array_equal(np.asarray(pop_ref.genomes),
+                                      np.asarray(pop_resumed.genomes))
+        np.testing.assert_array_equal(np.asarray(pop_ref.fitness),
+                                      np.asarray(pop_resumed.fitness))
+
+    def test_train_resume(self, tmp_path):
+        from repro.launch.train import train
+        logs = []
+        ck = str(tmp_path / "t")
+        train(steps=6, batch=2, seq=16, ckpt_dir=ck, ckpt_every=3,
+              log_every=2, log_fn=logs.append)
+        # resume continues from step 6 checkpoint
+        logs2 = []
+        state, hist = train(steps=8, batch=2, seq=16, ckpt_dir=ck,
+                            ckpt_every=3, log_every=1, log_fn=logs2.append)
+        assert any("resumed from step 6" in str(l) for l in logs2)
+        assert hist[-1]["step"] == 8
+
+
+class TestElastic:
+    def test_shrink_preserves_best(self):
+        cfg = _cfg(num_islands=4)
+        eng = GAEngine(cfg, sphere)
+        pop = eng.init()
+        best = float(jnp.min(pop.fitness))
+        small = repartition_islands(cfg, pop, 2, jax.random.PRNGKey(1))
+        assert small.genomes.shape[0] == 2
+        assert float(jnp.min(small.fitness)) == best
+
+    def test_grow_preserves_best_and_marks_reeval(self):
+        cfg = _cfg(num_islands=2)
+        eng = GAEngine(cfg, sphere)
+        pop = eng.init()
+        best = float(jnp.min(pop.fitness))
+        big = repartition_islands(cfg, pop, 4, jax.random.PRNGKey(1))
+        assert big.genomes.shape[0] == 4
+        assert float(jnp.min(big.fitness)) == best
+        # clones need re-evaluation (inf fitness)
+        assert bool(jnp.any(jnp.isinf(big.fitness)))
+
+    def test_resume_on_resized_mesh_runs(self):
+        cfg = _cfg(num_islands=2)
+        eng = GAEngine(cfg, sphere)
+        pop = eng.init()
+        big = repartition_islands(cfg, pop, 4, jax.random.PRNGKey(1))
+        cfg4 = _cfg(num_islands=4)
+        eng4 = GAEngine(cfg4, sphere)
+        from repro.core.island import evaluate_population
+        big = eng4._init_eval(big._replace(
+            fitness=jnp.full_like(big.fitness, jnp.inf)))
+        pop_out, hist = eng4.run(big, epochs=2)
+        assert pop_out.genomes.shape[0] == 4
+
+
+class TestStraggler:
+    def test_backup_eval_identical_fitness(self):
+        genomes = jax.random.uniform(jax.random.PRNGKey(0), (64, 4))
+        cost = jnp.sum(genomes, -1)
+        fit, stats = backup_dispatch_eval(sphere, genomes, cost,
+                                          num_workers=8, backup_frac=0.25)
+        np.testing.assert_allclose(np.asarray(fit),
+                                   np.asarray(sphere(genomes)), rtol=1e-6)
+        assert stats["duplicated"] >= 8

@@ -1,0 +1,124 @@
+"""Unit tests for dry-run helpers (no 512-device init: pure parsing) and
+sharding rule tables."""
+import json
+
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import SHAPES, get_config, shape_applicable
+from repro.launch.dryrun import (_shallow_cfg, collective_stats,
+                                 _shape_bytes)
+from repro.models.sharding import ShardingCtx, _leaf_spec, param_specs
+
+
+class TestHLOParsing:
+    def test_shape_bytes(self):
+        assert _shape_bytes("bf16[16,128]{1,0}") == 16 * 128 * 2
+        assert _shape_bytes("f32[2,2] u8[4]") == 16 + 4
+        assert _shape_bytes("(f32[8], bf16[8])") == 32 + 16
+        assert _shape_bytes("token[]") == 0
+
+    def test_collective_stats(self):
+        hlo = """
+  %ag = bf16[64,128]{1,0} all-gather(bf16[4,128]{1,0} %p), dims={0}
+  %ar.1 = f32[256]{0} all-reduce(f32[256]{0} %x), to_apply=%sum
+  %cp = f32[32]{0} collective-permute(f32[32]{0} %y), pairs={{0,1}}
+  %a2a = (f32[8]{0}, f32[8]{0}) all-to-all(f32[8]{0} %a, f32[8]{0} %b)
+  %ard = f32[256]{0} all-reduce-done(f32[256]{0} %ar.1)
+"""
+        s = collective_stats(hlo)
+        assert s["bytes_all-gather"] == 64 * 128 * 2
+        assert s["bytes_all-reduce"] == 256 * 4
+        assert s["bytes_collective-permute"] == 32 * 4
+        assert s["bytes_all-to-all"] == 64
+        assert s["count_all-reduce"] == 1          # -done not double-counted
+        assert s["coll_bytes"] == sum(
+            v for k, v in s.items() if k.startswith("bytes_"))
+
+
+class TestShallowConfig:
+    def test_depth_reduced_structure_preserved(self):
+        cfg = get_config("jamba-1.5-large-398b")
+        d1 = _shallow_cfg(cfg, 1)
+        assert d1.num_layers == cfg.scan_period
+        assert d1.num_periods == 1
+        assert d1.d_model == cfg.d_model
+        assert d1.num_experts == cfg.num_experts
+        # hybrid interleave intact within the period
+        kinds = [d1.mixer_kind(i) for i in range(d1.num_layers)]
+        assert kinds.count("attn") == 1
+
+    def test_encoder_scales_with_periods(self):
+        cfg = get_config("whisper-large-v3")
+        d2 = _shallow_cfg(cfg, 2)
+        assert d2.encoder_layers == 2
+        assert d2.num_layers == 2
+
+
+class TestShapeContract:
+    def test_long_context_only_ssm_hybrid(self):
+        runs = {a for a in ("mamba2-780m", "jamba-1.5-large-398b")
+                if shape_applicable(get_config(a), SHAPES["long_500k"])[0]}
+        assert runs == {"mamba2-780m", "jamba-1.5-large-398b"}
+        for a in ("gemma2-2b", "tinyllama-1.1b", "whisper-large-v3",
+                  "qwen2-moe-a2.7b", "llava-next-34b"):
+            ok, reason = shape_applicable(get_config(a), SHAPES["long_500k"])
+            assert not ok and reason
+
+    def test_all_archs_run_other_shapes(self):
+        from repro.configs import list_archs
+        for a in list_archs():
+            for s in ("train_4k", "prefill_32k", "decode_32k"):
+                assert shape_applicable(get_config(a), SHAPES[s])[0]
+
+
+class _FakeMesh:
+    """Duck-typed mesh for spec-rule tests (no devices needed)."""
+    axis_names = ("data", "model")
+    shape = {"data": 16, "model": 16}
+
+
+class TestShardingRules:
+    def _ctx(self):
+        return ShardingCtx(mesh=_FakeMesh(), dp=("data",), tp="model",
+                           fsdp=("data",))
+
+    def test_attention_weights(self):
+        ctx = self._ctx()
+        spec = _leaf_spec(["stack", "sub0", "attn", "q"],
+                          (22, 2048, 2048), ctx)
+        assert spec == P(None, ("data",), "model")
+
+    def test_moe_ep_when_divisible(self):
+        ctx = self._ctx()
+        spec = _leaf_spec(["stack", "sub0", "moe", "wi"],
+                          (9, 16, 8192, 24576), ctx)
+        assert spec == P(None, "model", None, ("data",))
+
+    def test_moe_tp_fallback_when_not_divisible(self):
+        ctx = self._ctx()
+        spec = _leaf_spec(["stack", "sub0", "moe", "wi"],
+                          (24, 60, 2048, 1408), ctx)
+        assert spec == P(None, None, ("data",), "model")
+
+    def test_nondivisible_dims_replicate(self):
+        ctx = self._ctx()
+        # 1500-row pos table cannot shard 16 ways
+        spec = _leaf_spec(["enc_pos", "table"], (1500, 1280), ctx)
+        assert spec == P(None, None)
+
+    def test_param_specs_whole_tree(self):
+        from repro.models.model import Model
+        cfg = get_config("qwen2-moe-a2.7b").reduced()
+        m = Model(cfg)
+        shapes = m.param_shapes()
+        specs = param_specs(shapes, self._ctx())
+        flat = jax.tree_util.tree_leaves_with_path(
+            specs, is_leaf=lambda x: isinstance(x, P))
+        assert len(flat) == len(jax.tree_util.tree_leaves(shapes))
+        # every spec rank-matches its leaf
+        shapes_flat = jax.tree_util.tree_leaves(shapes)
+        for (_, spec), leaf in zip(flat, shapes_flat):
+            assert len(spec) <= len(leaf.shape)

@@ -1,0 +1,127 @@
+"""Beyond-paper extensions: migration topologies, continuous batching,
+multi-objective NSGA-II on the HVDC problem, input_specs factory."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import GAConfig
+from repro.core import island
+from repro.core.engine import GAEngine
+from repro.core.island import _migration_shifts
+from repro.core.population import init_population
+
+
+class TestMigrationTopologies:
+    def test_shift_sets(self):
+        assert _migration_shifts("ring", 8) == [1]
+        assert _migration_shifts("bidirectional", 8) == [1, -1]
+        assert set(_migration_shifts("torus", 8)) == {1, 4}
+        assert _migration_shifts("all", 4) == [1, 2, 3]
+        with pytest.raises(ValueError):
+            _migration_shifts("hypercube", 8)
+
+    @pytest.mark.parametrize("topo", ["ring", "bidirectional", "torus",
+                                      "all"])
+    def test_migration_spreads_best(self, topo):
+        cfg = GAConfig(num_genes=3, pop_per_island=8, num_islands=4,
+                       migration_pattern=topo, num_migrants=1,
+                       fused_operators=False)
+        pop = init_population(cfg, jax.random.PRNGKey(0))
+        fit = jnp.full((4, 8, 1), 10.0)
+        fit = fit.at[2, 0, 0].set(0.0)          # island 2 holds the best
+        pop = pop._replace(fitness=fit)
+        new = island.migrate_ring(cfg, pop)
+        # the global best spreads to at least one other island
+        has_best = [float(jnp.min(new.fitness[i])) == 0.0 for i in range(4)]
+        assert sum(has_best) >= 2
+        assert new.genomes.shape == pop.genomes.shape
+
+    def test_all_topology_reaches_everyone(self):
+        cfg = GAConfig(num_genes=3, pop_per_island=8, num_islands=4,
+                       migration_pattern="all", num_migrants=2,
+                       fused_operators=False)
+        pop = init_population(cfg, jax.random.PRNGKey(1))
+        fit = jnp.full((4, 8, 1), 10.0)
+        fit = fit.at[1, 3, 0].set(0.0)
+        pop = pop._replace(fitness=fit)
+        new = island.migrate_ring(cfg, pop)
+        assert all(float(jnp.min(new.fitness[i])) == 0.0 for i in range(4))
+
+
+class TestContinuousBatching:
+    def test_matches_plain_generation(self):
+        from repro.configs import get_config
+        from repro.models.model import Model
+        from repro.serve.batching import ContinuousBatcher, Request
+        from repro.train.serve_step import generate
+        cfg = get_config("tinyllama-1.1b").reduced()
+        m = Model(cfg, max_seq=96)
+        params = m.init_params(jax.random.PRNGKey(0))
+        b = ContinuousBatcher(m, params, slots=2, max_cache_len=64)
+        rng = np.random.default_rng(0)
+        reqs = [Request(uid=i,
+                        prompt=rng.integers(0, cfg.vocab_size,
+                                            size=8 + i).astype(np.int32),
+                        max_new_tokens=4)
+                for i in range(4)]
+        for r in reqs:
+            b.submit(r)
+        done = b.run()
+        assert sorted(r.uid for r in done) == [0, 1, 2, 3]
+        # oversubscribed queue (4 reqs, 2 slots) still matches per-request
+        # greedy generation
+        for uid in (0, 3):
+            req = [r for r in done if r.uid == uid][0]
+            ref = generate(m, params,
+                           {"tokens": jnp.asarray(req.prompt[None])},
+                           steps=4, max_cache_len=64)
+            assert req.out == np.asarray(ref)[0].tolist()
+
+
+class TestMultiObjectiveHVDC:
+    def test_pareto_front_flows_vs_transfer(self):
+        """NSGA-II with 2 objectives: minimize total flows AND maximize
+        HVDC utilization (as -transfer) — the fronts must trade off."""
+        from repro.fitness.powerflow import HVDCDispatchFitness
+        from repro.powerflow.grid import make_synthetic_grid
+        from repro.core import nsga2
+        grid = make_synthetic_grid(n_bus=30, n_line=55, n_gen=8,
+                                   n_hvdc=3, seed=5)
+        base = HVDCDispatchFitness(grid, newton_iters=8)
+
+        def two_obj(genomes):
+            flows = base(genomes)                        # (N, 1)
+            transfer = -jnp.sum(jnp.abs(genomes), -1, keepdims=True)
+            return jnp.concatenate([flows, transfer], -1)
+
+        cfg = GAConfig(num_genes=3, pop_per_island=16, num_islands=2,
+                       num_objectives=2, generations_per_epoch=3,
+                       num_epochs=4, lower=-1.0, upper=1.0,
+                       fused_operators=False, seed=2)
+        eng = GAEngine(cfg, jax.jit(two_obj))
+        pop, _ = eng.run()
+        fit = np.asarray(jax.device_get(pop.fitness)).reshape(-1, 2)
+        ranks = np.asarray(nsga2.nondominated_ranks(jnp.asarray(fit)))
+        front = fit[ranks == 0]
+        assert len(front) >= 3
+        # a real trade-off: front spans both objectives
+        assert front[:, 0].max() - front[:, 0].min() > 1e-3
+        assert front[:, 1].max() - front[:, 1].min() > 1e-3
+
+
+class TestInputSpecs:
+    def test_factory_shapes(self):
+        from repro.launch.specs import input_specs
+        s = input_specs("tinyllama-1.1b", "train_4k")
+        assert s["batch"]["tokens"].shape == (256, 4097)
+        s = input_specs("llava-next-34b", "prefill_32k")
+        assert s["batch"]["tokens"].shape == (32, 32768 - 576)
+        assert s["batch"]["frontend_embeds"].shape == (32, 576, 7168)
+        s = input_specs("gemma2-2b", "decode_32k")
+        assert s["tokens"].shape == (128, 1)
+        # gemma2 local layers allocate window-sized ring caches
+        k = s["cache"]["sub0"]["attn"]["k"]
+        assert k.shape[2] == 4096                        # window, not 32768
+        kg = s["cache"]["sub1"]["attn"]["k"]
+        assert kg.shape[2] == 32768                      # global layer

@@ -1,0 +1,149 @@
+"""Pallas kernel allclose tests vs pure-jnp oracles (interpret mode on CPU)
+with shape/dtype sweeps."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.attention import ops as attn_ops
+from repro.kernels.attention.ref import dense_reference
+from repro.kernels.genetic import ops as gen_ops
+from repro.kernels.ssd import ops as ssd_ops
+from repro.models.ssm import ssd_chunked_ref
+
+RNG = jax.random.PRNGKey(0)
+
+
+# ---------------------------------------------------------------------------
+# fused genetic variation
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("p,g", [(16, 4), (64, 18), (130, 33), (256, 128)])
+def test_genetic_kernel_matches_oracle(p, g):
+    p -= p % 2
+    parents = jax.random.uniform(RNG, (p, g), minval=-1, maxval=1)
+    kw = dict(eta_cx=15.0, prob_cx=0.9, eta_mut=20.0, prob_mut=0.7,
+              indpb=1.0 / g, lower=-1.0, upper=1.0)
+    a = gen_ops.fused_variation(RNG, parents, **kw)
+    b = gen_ops.fused_variation_oracle(RNG, parents, **kw)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=1e-5, atol=1e-6)
+
+
+@settings(max_examples=10, deadline=None)
+@given(eta_cx=st.floats(1.0, 80.0), eta_mut=st.floats(1.0, 80.0),
+       prob=st.floats(0.0, 1.0), seed=st.integers(0, 2**30))
+def test_genetic_kernel_property(eta_cx, eta_mut, prob, seed):
+    rng = jax.random.PRNGKey(seed)
+    parents = jax.random.uniform(rng, (32, 9), minval=-2, maxval=2)
+    kw = dict(eta_cx=eta_cx, prob_cx=prob, eta_mut=eta_mut, prob_mut=prob,
+              indpb=0.4, lower=-2.0, upper=2.0)
+    a = gen_ops.fused_variation(rng, parents, **kw)
+    b = gen_ops.fused_variation_oracle(rng, parents, **kw)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=1e-4, atol=1e-5)
+    assert bool(jnp.all((a >= -2) & (a <= 2)))
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+ATTN_CASES = [
+    # (B, S, H, KV, hd, causal, window, softcap, dtype)
+    (2, 256, 8, 4, 64, True, 0, 0.0, jnp.float32),
+    (1, 200, 4, 4, 32, True, 50, 0.0, jnp.float32),
+    (2, 128, 8, 2, 64, False, 0, 30.0, jnp.float32),
+    (1, 384, 6, 2, 128, True, 100, 50.0, jnp.float32),
+    (1, 256, 8, 8, 64, True, 0, 0.0, jnp.bfloat16),
+    (1, 160, 4, 1, 256, True, 0, 0.0, jnp.float32),   # MQA, gemma head_dim
+]
+
+
+@pytest.mark.parametrize("b,s,h,kv,hd,causal,win,cap,dtype", ATTN_CASES)
+def test_flash_attention_matches_dense(b, s, h, kv, hd, causal, win, cap,
+                                       dtype):
+    k1, k2, k3 = jax.random.split(RNG, 3)
+    q = jax.random.normal(k1, (b, s, h, hd), dtype)
+    k = jax.random.normal(k2, (b, s, kv, hd), dtype)
+    v = jax.random.normal(k3, (b, s, kv, hd), dtype)
+    out = attn_ops.flash_attention(q, k, v, scale=hd ** -0.5, causal=causal,
+                                   window=win, attn_softcap=cap)
+    ref = dense_reference(q, k, v, scale=hd ** -0.5, causal=causal,
+                          window=win, attn_softcap=cap)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 3e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_flash_attention_grads_flow():
+    k1, k2, k3 = jax.random.split(RNG, 3)
+    q = jax.random.normal(k1, (1, 128, 4, 32))
+    k = jax.random.normal(k2, (1, 128, 2, 32))
+    v = jax.random.normal(k3, (1, 128, 2, 32))
+
+    def loss_kernel(q):
+        return attn_ops.flash_attention(q, k, v, scale=0.2).sum()
+
+    def loss_ref(q):
+        return dense_reference(q, k, v, scale=0.2).sum()
+
+    g1 = jax.grad(loss_kernel)(q)
+    g2 = jax.grad(loss_ref)(q)
+    np.testing.assert_allclose(np.asarray(g1), np.asarray(g2),
+                               rtol=1e-3, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# SSD chunked scan
+# ---------------------------------------------------------------------------
+
+SSD_CASES = [
+    # (B, L, H, P, N, chunk)
+    (2, 128, 4, 32, 16, 32),
+    (1, 256, 8, 64, 128, 64),
+    (2, 96, 2, 32, 64, 32),
+    (1, 64, 4, 128, 128, 64),
+]
+
+
+@pytest.mark.parametrize("b,l,h,p,n,q", SSD_CASES)
+def test_ssd_kernel_matches_ref(b, l, h, p, n, q):
+    ks = jax.random.split(RNG, 5)
+    x = jax.random.normal(ks[0], (b, l, h, p)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, l, h)))
+    a = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.3)
+    bm = jax.random.normal(ks[3], (b, l, n)) * 0.3
+    cm = jax.random.normal(ks[4], (b, l, n)) * 0.3
+    y1, s1 = ssd_ops.ssd_chunked(x, dt, a, bm, cm, q)
+    y2, s2 = ssd_chunked_ref(x, dt, a, bm, cm, q)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_ssd_decode_consistent_with_chunked():
+    """Sequential decode steps == chunked scan over the same tokens."""
+    from repro.models.ssm import ssd_decode_step
+    b, l, h, p, n = 1, 16, 2, 8, 4
+    ks = jax.random.split(RNG, 5)
+    x = jax.random.normal(ks[0], (b, l, h, p)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, l, h)))
+    a = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.3)
+    bm = jax.random.normal(ks[3], (b, l, n)) * 0.3
+    cm = jax.random.normal(ks[4], (b, l, n)) * 0.3
+    y_ref, s_ref = ssd_chunked_ref(x, dt, a, bm, cm, chunk=8)
+    state = jnp.zeros((b, h, p, n))
+    ys = []
+    for t in range(l):
+        y, state = ssd_decode_step(state, x[:, t], dt[:, t], a,
+                                   bm[:, t], cm[:, t])
+        ys.append(y)
+    y_seq = jnp.stack(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(y_seq), np.asarray(y_ref),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(state), np.asarray(s_ref),
+                               rtol=1e-4, atol=1e-4)

@@ -1,0 +1,77 @@
+"""Hierarchical meta-GA + scaling policy + elastic integration."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import GAConfig
+from repro.core.engine import GAEngine
+from repro.core.meta import (META_GENE_SPEC, decode_meta_genome,
+                             make_inner_ga, make_meta_fitness,
+                             meta_ga_config)
+from repro.core.scaling import (PRESET_HORIZONTAL, PRESET_VERTICAL,
+                                ScalingPlan, plan_scaling)
+from repro.fitness import sphere
+
+
+class TestMetaGA:
+    def test_inner_ga_improves_over_random(self):
+        cfg = GAConfig(num_genes=4, lower=-2.0, upper=2.0,
+                       fused_operators=False)
+        inner = make_inner_ga(cfg, sphere, p_max=16, generations=10)
+        hg = jnp.asarray([12.0, 0.9, 0.5, 20.0, 15.0])
+        best = inner(hg, jax.random.PRNGKey(0))
+        assert float(best) < 1.0                 # random-init ~ several
+
+    def test_variable_pop_size_masked(self):
+        cfg = GAConfig(num_genes=3, lower=-1.0, upper=1.0,
+                       fused_operators=False)
+        inner = make_inner_ga(cfg, sphere, p_max=32, generations=3)
+        # tiny pop (2) and full pop (32) both run at static shapes
+        for p in (2.0, 32.0):
+            hg = jnp.asarray([p, 0.9, 0.5, 20.0, 15.0])
+            out = inner(hg, jax.random.PRNGKey(1))
+            assert bool(jnp.isfinite(out))
+
+    def test_meta_fitness_shape_and_seed_reduction(self):
+        cfg = GAConfig(num_genes=3, lower=-1.0, upper=1.0,
+                       fused_operators=False)
+        mf = make_meta_fitness(cfg, sphere, p_max=8, generations=3,
+                               num_seeds=2)
+        h = jnp.asarray([[8.0, 0.9, 0.5, 20.0, 15.0],
+                         [4.0, 0.1, 0.1, 5.0, 5.0]])
+        out = jax.jit(mf)(h)
+        assert out.shape == (2, 1)
+        assert bool(jnp.all(jnp.isfinite(out)))
+
+    def test_meta_config_bounds_match_table4(self):
+        cfg = meta_ga_config()
+        lo, hi = cfg.bounds()
+        assert list(lo) == [s[1] for s in META_GENE_SPEC]
+        assert list(hi) == [s[2] for s in META_GENE_SPEC]
+
+    def test_decode(self):
+        d = decode_meta_genome(jnp.asarray([100.0, 0.5, 0.25, 10.0, 90.0]))
+        assert float(d["pop_size"]) == 100.0
+        assert float(d["eta_cx"]) == 90.0
+
+
+class TestScalingPolicy:
+    def test_presets_match_paper_table3(self):
+        assert PRESET_HORIZONTAL.chips == 3072 == PRESET_VERTICAL.chips
+        assert PRESET_HORIZONTAL.horizontal == 384
+        assert PRESET_VERTICAL.vertical == 128
+
+    def test_auto_plan_respects_sim_parallelism(self):
+        plan = plan_scaling(256, pop_total=512, sim_parallelism=1)
+        assert plan.vertical == 1 and plan.horizontal == 256
+        plan = plan_scaling(256, pop_total=512, sim_parallelism=2004)
+        assert plan.vertical > 1
+        assert plan.horizontal * plan.vertical <= 256 * 2
+
+    def test_prefer_modes(self):
+        assert plan_scaling(64, pop_total=10, prefer="horizontal") \
+            == ScalingPlan(64, 1)
+        v = plan_scaling(64, pop_total=10, sim_parallelism=100,
+                         prefer="vertical")
+        assert v.vertical == 64

@@ -1,0 +1,81 @@
+"""NSGA-II invariants: non-dominated sorting + crowding (with hypothesis)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import nsga2
+
+
+def brute_force_ranks(f):
+    """Reference front peeling in numpy."""
+    n = len(f)
+    dominated_by = [
+        {i for i in range(n)
+         if np.all(f[i] <= f[j]) and np.any(f[i] < f[j])}
+        for j in range(n)]
+    ranks = np.full(n, -1)
+    level = 0
+    remaining = set(range(n))
+    while remaining:
+        front = {j for j in remaining
+                 if not (dominated_by[j] & remaining)}
+        for j in front:
+            ranks[j] = level
+        remaining -= front
+        level += 1
+    return ranks
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    n=st.integers(2, 24),
+    o=st.integers(1, 3),
+    seed=st.integers(0, 2**30),
+)
+def test_ranks_match_bruteforce(n, o, seed):
+    rng = np.random.default_rng(seed)
+    f = rng.standard_normal((n, o)).astype(np.float32)
+    got = np.asarray(nsga2.nondominated_ranks(jnp.asarray(f)))
+    want = brute_force_ranks(f)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_front_zero_nondominated():
+    f = jnp.asarray(np.random.default_rng(0).standard_normal((40, 2)),
+                    jnp.float32)
+    ranks = nsga2.nondominated_ranks(f)
+    dom = nsga2.domination_matrix(f)
+    front0 = np.where(np.asarray(ranks) == 0)[0]
+    assert len(front0) > 0
+    # nothing dominates a front-0 member
+    assert not np.any(np.asarray(dom)[:, front0])
+
+
+def test_crowding_boundaries_infinite():
+    # 1 objective, distinct values: min and max get BIG distance
+    f = jnp.asarray([[1.0], [5.0], [2.0], [9.0]])
+    ranks = jnp.zeros(4, jnp.int32)
+    d = np.asarray(nsga2.crowding_distance(f, ranks))
+    assert d[0] >= nsga2.BIG / 10      # min boundary
+    assert d[3] >= nsga2.BIG / 10      # max boundary
+    assert d[1] < nsga2.BIG / 10 and d[2] < nsga2.BIG / 10
+
+
+def test_survivor_select_keeps_elites():
+    rng = np.random.default_rng(1)
+    f = rng.standard_normal((30, 1)).astype(np.float32)
+    g = rng.standard_normal((30, 4)).astype(np.float32)
+    sg, sf = nsga2.survivor_select(jnp.asarray(g), jnp.asarray(f), 10)
+    # the best individual survives
+    best = np.min(f)
+    assert np.min(np.asarray(sf)) == best
+    # survivors are the 10 best for single objective
+    np.testing.assert_allclose(np.sort(np.asarray(sf)[:, 0]),
+                               np.sort(f[:, 0])[:10])
+
+
+def test_single_objective_rank_is_dense_order():
+    f = jnp.asarray([[3.0], [1.0], [2.0], [1.0]])
+    ranks = np.asarray(nsga2.nondominated_ranks(f))
+    assert list(ranks) == [2, 0, 1, 0]

@@ -1,0 +1,137 @@
+"""End-to-end behaviour tests for the paper's system (CHAMB-GA on TPU).
+
+These exercise the full pipeline the way a user would: GA + embedded
+powerflow simulation, LM training fitness, the parallel-efficiency harness,
+data pipeline and serving loop.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import GAConfig
+from repro.core.engine import GAEngine
+from repro.data.pipeline import SyntheticTokens
+from repro.fitness import delay_proxy, rastrigin, sphere
+
+
+class TestEndToEndGA:
+    def test_hvdc_dispatch_optimization(self):
+        """Paper §4.2 in miniature: GA finds a dispatch at least as good as
+        zero-dispatch on the synthetic grid."""
+        from repro.fitness.powerflow import HVDCDispatchFitness
+        from repro.powerflow.grid import make_synthetic_grid
+        grid = make_synthetic_grid(n_bus=40, n_line=75, n_gen=10,
+                                   n_hvdc=3, seed=2)
+        fit = HVDCDispatchFitness(grid, newton_iters=8)
+        jfit = jax.jit(fit)
+        zero = float(jfit(jnp.zeros((1, 3)))[0, 0])
+        cfg = GAConfig(num_genes=3, pop_per_island=24, num_islands=2,
+                       generations_per_epoch=4, num_epochs=10,
+                       lower=-1.0, upper=1.0, mutation_prob=0.7,
+                       mutation_eta=34.6, crossover_prob=1.0,
+                       crossover_eta=97.5, fused_operators=False, seed=0)
+        eng = GAEngine(cfg, jfit, cost_fn=fit.cost_model())
+        pop, hist = eng.run()
+        _, f = eng.best(pop)
+        assert f[0] <= zero * 1.05
+        assert hist[-1]["best"] < hist[0]["best"] * 1.01
+
+    def test_lm_hyperparameter_search(self):
+        """LM fitness backend: GA picks hyperparameters that beat the worst
+        corner of the search space."""
+        from repro.fitness.lm import LMTrainFitness, NUM_LM_GENES
+        fit = LMTrainFitness(steps=3, batch_size=2, seq_len=16)
+        jfit = jax.jit(fit)
+        worst = float(jfit(jnp.asarray([[0.0, 0.0, 1.0, 1.0]]))[0, 0])
+        cfg = GAConfig(num_genes=NUM_LM_GENES, pop_per_island=6,
+                       num_islands=2, generations_per_epoch=2,
+                       num_epochs=2, lower=0.0, upper=1.0,
+                       fused_operators=False, seed=1)
+        eng = GAEngine(cfg, jfit)
+        pop, _ = eng.run()
+        _, f = eng.best(pop)
+        assert f[0] <= worst + 1e-3
+
+    def test_delay_proxy_with_broker_balancing(self):
+        """Heterogeneous eval times (the paper's varying sleep s): broker
+        balancing reduces predicted makespan skew, fitness unchanged."""
+        iters_fn = lambda g: (10 + 200 * jnp.abs(g[:, 0])).astype(jnp.int32)
+        fn = delay_proxy(sphere, iters_fn=iters_fn)
+        cost_fn = lambda g: iters_fn(g).astype(jnp.float32)
+        cfg = GAConfig(num_genes=4, pop_per_island=16, num_islands=2,
+                       generations_per_epoch=2, num_epochs=3,
+                       lower=-1.0, upper=1.0, fused_operators=False, seed=2)
+        eng = GAEngine(cfg, jax.jit(fn), cost_fn=cost_fn, num_workers=8)
+        pop, hist = eng.run()
+        assert all(h["skew"] <= 1.5 for h in hist)
+        assert hist[-1]["best"] <= hist[0]["best"]
+
+
+class TestDataPipeline:
+    def test_deterministic(self):
+        from repro.configs import get_config
+        cfg = get_config("tinyllama-1.1b").reduced()
+        d1 = SyntheticTokens(cfg, 4, 32, seed=7)
+        d2 = SyntheticTokens(cfg, 4, 32, seed=7)
+        np.testing.assert_array_equal(d1.batch(3)["tokens"],
+                                      d2.batch(3)["tokens"])
+        assert not np.array_equal(d1.batch(3)["tokens"],
+                                  d1.batch(4)["tokens"])
+
+    def test_bigram_structure(self):
+        from repro.configs import get_config
+        cfg = get_config("tinyllama-1.1b").reduced()
+        d = SyntheticTokens(cfg, 2, 64, seed=0, mode="bigram")
+        toks = d.batch(0)["tokens"]
+        # every transition is one of the 4 successors
+        ok = 0
+        for b in range(2):
+            for t in range(63):
+                if toks[b, t + 1] in d._succ[toks[b, t]]:
+                    ok += 1
+        assert ok == 2 * 63
+
+    def test_frontend_embeds(self):
+        from repro.configs import get_config
+        cfg = get_config("whisper-large-v3").reduced()
+        d = SyntheticTokens(cfg, 2, 16)
+        b = d.batch(0)
+        assert b["frontend_embeds"].shape == (2, cfg.encoder_seq,
+                                              cfg.d_model)
+
+
+class TestServe:
+    def test_greedy_generation_consistent(self):
+        """Greedy decode must reproduce argmax teacher forcing."""
+        from repro.configs import get_config
+        from repro.models.model import Model
+        from repro.train.serve_step import generate
+        cfg = get_config("tinyllama-1.1b").reduced()
+        m = Model(cfg, max_seq=64)
+        params = m.init_params(jax.random.PRNGKey(0))
+        toks = jax.random.randint(jax.random.PRNGKey(1), (2, 12), 0,
+                                  cfg.vocab_size)
+        out = generate(m, params, {"tokens": toks}, steps=4,
+                       max_cache_len=32)
+        # manual teacher-forced argmax rollout
+        cur = toks
+        for _ in range(4):
+            logits, _ = m.forward(params, {"tokens": cur})
+            nxt = jnp.argmax(logits[:, -1, :cfg.vocab_size], -1)[:, None]
+            cur = jnp.concatenate([cur, nxt.astype(jnp.int32)], axis=1)
+        np.testing.assert_array_equal(np.asarray(out),
+                                      np.asarray(cur[:, 12:]))
+
+
+class TestEfficiencyFormula:
+    def test_parallel_efficiency_definition(self):
+        """rho = s*P*M*NE*I / (T*Nw) — harness sanity at tiny scale."""
+        from benchmarks.efficiency import measure_efficiency
+        # min over retries: wall-clock noise (shared CI cores) only ever
+        # inflates one side of the ratio
+        rho = min(measure_efficiency(workers=2, sleep_iters=100_000,
+                                     pop_per_island=16, islands=2,
+                                     generations=3, epochs=2)
+                  for _ in range(3))
+        assert 0.0 < rho <= 1.25   # CPU timing noise tolerated

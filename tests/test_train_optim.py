@@ -1,0 +1,125 @@
+"""Loss / optimizer / schedules / compression tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.train.compress import dequantize, quantize
+from repro.train.loss import lm_loss
+from repro.train.optimizer import (OptimizerConfig, adamw_update,
+                                   clip_by_global_norm, init_opt_state,
+                                   schedule_lr)
+
+RNG = jax.random.PRNGKey(0)
+
+
+class TestLoss:
+    def test_matches_manual_ce(self):
+        cfg = get_config("tinyllama-1.1b").reduced()
+        logits = jax.random.normal(RNG, (2, 8, cfg.padded_vocab))
+        labels = jax.random.randint(RNG, (2, 8), 0, cfg.vocab_size)
+        loss, metrics = lm_loss(cfg, logits, labels)
+        # manual on real vocab slice
+        l = np.asarray(logits)[..., :cfg.vocab_size]
+        lse = np.log(np.sum(np.exp(l - l.max(-1, keepdims=True)), -1)) \
+            + l.max(-1)
+        gold = np.take_along_axis(l, np.asarray(labels)[..., None],
+                                  -1)[..., 0]
+        np.testing.assert_allclose(float(loss), float((lse - gold).mean()),
+                                   rtol=1e-5)
+
+    def test_padded_vocab_excluded(self):
+        cfg = get_config("minicpm-2b").reduced()   # vocab 512, padded 2048
+        logits = jnp.zeros((1, 4, cfg.padded_vocab))
+        # give huge logit to a PADDING column: must not affect loss
+        logits = logits.at[..., cfg.vocab_size + 5].set(100.0)
+        labels = jnp.zeros((1, 4), jnp.int32)
+        loss, _ = lm_loss(cfg, logits, labels)
+        np.testing.assert_allclose(float(loss), np.log(cfg.vocab_size),
+                                   rtol=1e-4)
+
+    def test_mask(self):
+        cfg = get_config("tinyllama-1.1b").reduced()
+        logits = jax.random.normal(RNG, (1, 6, cfg.padded_vocab))
+        labels = jax.random.randint(RNG, (1, 6), 0, cfg.vocab_size)
+        mask = jnp.asarray([[1, 1, 1, 0, 0, 0]], jnp.float32)
+        full, _ = lm_loss(cfg, logits, labels)
+        masked, m = lm_loss(cfg, logits, labels, mask)
+        assert m["tokens"] == 3.0
+        assert abs(float(masked) - float(full)) > 1e-6
+
+
+class TestSchedules:
+    def test_warmup_and_cosine(self):
+        cfg = OptimizerConfig(lr=1.0, warmup_steps=10, total_steps=100,
+                              schedule="cosine", min_lr_frac=0.1)
+        assert float(schedule_lr(cfg, jnp.int32(0))) == 0.0
+        assert abs(float(schedule_lr(cfg, jnp.int32(10))) - 1.0) < 1e-6
+        assert abs(float(schedule_lr(cfg, jnp.int32(100))) - 0.1) < 1e-5
+
+    def test_wsd_stable_then_decay(self):
+        cfg = OptimizerConfig(lr=1.0, warmup_steps=10, total_steps=100,
+                              schedule="wsd", wsd_decay_frac=0.2,
+                              min_lr_frac=0.0)
+        # stable plateau
+        assert abs(float(schedule_lr(cfg, jnp.int32(50))) - 1.0) < 1e-6
+        assert abs(float(schedule_lr(cfg, jnp.int32(82))) - 1.0) < 2e-1
+        # decays at the end
+        assert float(schedule_lr(cfg, jnp.int32(100))) < 0.05
+
+    def test_minicpm_selects_wsd(self):
+        from repro.train.optimizer import optimizer_for_arch
+        assert optimizer_for_arch("minicpm-2b").schedule == "wsd"
+        assert optimizer_for_arch("tinyllama-1.1b").schedule == "cosine"
+
+
+class TestAdamW:
+    def test_descends_quadratic(self):
+        params = {"w": jnp.asarray([3.0, -2.0])}
+        cfg = OptimizerConfig(lr=0.1, warmup_steps=0, weight_decay=0.0,
+                              schedule="const")
+        state = init_opt_state(params)
+        for _ in range(50):
+            grads = {"w": 2 * params["w"]}
+            params, state, _ = adamw_update(cfg, params, grads, state)
+        assert float(jnp.max(jnp.abs(params["w"]))) < 0.5
+
+    def test_clip(self):
+        g = {"a": jnp.full((10,), 10.0)}
+        clipped, norm = clip_by_global_norm(g, 1.0)
+        assert abs(float(jnp.linalg.norm(clipped["a"])) - 1.0) < 1e-5
+        assert float(norm) > 30.0
+
+    def test_bf16_moments(self):
+        params = {"w": jnp.ones((4,))}
+        cfg = OptimizerConfig(moment_dtype="bfloat16", warmup_steps=0)
+        state = init_opt_state(params, "bfloat16")
+        assert state["m"]["w"].dtype == jnp.bfloat16
+        params2, state, _ = adamw_update(cfg, params,
+                                         {"w": jnp.ones((4,))}, state)
+        assert state["m"]["w"].dtype == jnp.bfloat16
+        assert bool(jnp.all(jnp.isfinite(params2["w"])))
+
+
+class TestCompression:
+    def test_quantize_unbiased(self):
+        x = jax.random.normal(RNG, (2000,))
+        errs = []
+        for i in range(20):
+            q, s = quantize(x, jax.random.PRNGKey(i))
+            errs.append(np.asarray(dequantize(q, s) - x))
+        mean_err = np.mean(errs, axis=0)
+        # stochastic rounding: bias -> 0 as we average draws
+        assert np.abs(mean_err).mean() < np.abs(errs[0]).mean() / 2
+
+    def test_quantize_bounded_error(self):
+        x = jax.random.normal(RNG, (1000,)) * 5
+        q, s = quantize(x, RNG)
+        err = np.abs(np.asarray(dequantize(q, s) - x))
+        assert err.max() <= float(s) + 1e-6      # one quantization step
+
+    def test_int8_wire_format(self):
+        x = jax.random.normal(RNG, (64,))
+        q, _ = quantize(x, RNG)
+        assert q.dtype == jnp.int8
