@@ -1,0 +1,20 @@
+#!/usr/bin/env bash
+# CI entrypoint. Usage:
+#   scripts/ci.sh         # full tier-1 lane (everything, incl. slow)
+#   scripts/ci.sh fast    # fast lane: skips @pytest.mark.slow subprocess tests
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+# dev deps are optional (tests shim hypothesis when absent); install when
+# a network/package index is available, continue otherwise
+python -m pip install -q -r requirements-dev.txt 2>/dev/null \
+    || echo "ci.sh: dev requirements unavailable, using bundled fallbacks"
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+LANE="${1:-full}"
+case "$LANE" in
+    fast) exec python -m pytest -x -q -m "not slow" ;;
+    full) exec python -m pytest -x -q ;;
+    *)    echo "unknown lane: $LANE (want: fast|full)" >&2; exit 2 ;;
+esac

@@ -8,81 +8,242 @@ executes it as one permutation (a gather across the island/data sharding →
 GSPMD lowers it to an all-to-all), evaluates, and routes results back with
 the inverse permutation.
 
+Dispatch is *total*: when ``N % num_workers != 0`` the broker pads the
+batch up to the next multiple of W with sentinel-cost entries, so
+cost-model balancing engages for every island/worker ratio. Padded lanes
+evaluate a duplicate of genome 0 (at most W-1 wasted evaluations) and are
+masked out of the load statistics and the result gather.
+
 Balance guarantee: with costs sorted descending and snake (boustrophedon)
 assignment over W equal-count bins, per-bin cost differs from optimal LPT
 by at most one item per round — the same O(1/N) skew the shared queue
-achieves dynamically.
+achieves dynamically. Sentinel pads sort last, so they fill the cheapest
+slots of the final snake row.
 
 For uniform costs (``cost_fn=None``) dispatch is the identity: zero
 overhead, matching the paper's "minimal overhead" benchmark claim.
+
+Evaluation itself is pluggable (the paper's decoupled "simulation backend"
+microservice): a :class:`DispatchBackend` executes the shuffled batch.
+:class:`InlineBackend` traces the fitness function into the caller's XLA
+program (SPMD, zero copies); :class:`HostPoolBackend` bridges out of the
+program with ``jax.pure_callback`` and fans chunks across a host executor
+pool — for external / embedded simulators that cannot be traced.
 """
 from __future__ import annotations
 
-from typing import Callable, Optional, Tuple
+from typing import Callable, Optional, Protocol, Tuple, runtime_checkable
 
 import jax
 import jax.numpy as jnp
+import numpy as np
+
+
+def padded_size(n: int, num_workers: int) -> int:
+    """Smallest multiple of ``num_workers`` that is >= n."""
+    return -(-n // num_workers) * num_workers
 
 
 def balanced_permutation(cost: jax.Array, num_workers: int) -> jax.Array:
-    """perm (N,) s.t. taking items in `perm` order and splitting into
-    `num_workers` contiguous equal chunks balances per-chunk total cost.
-
-    Requires N % num_workers == 0 (pad upstream otherwise).
+    """perm (Np,) with Np = padded_size(N, W), s.t. taking items in `perm`
+    order and splitting into W contiguous equal chunks balances per-chunk
+    total cost. Entries ``perm[j] >= N`` are padding (sentinel-cost slots
+    that fill the partial final snake row); for N % W == 0 the result is an
+    exact permutation of range(N), bit-identical to the historical
+    behavior.
     """
     n = cost.shape[0]
     w = num_workers
-    assert n % w == 0, (n, w)
-    rows = n // w
+    n_pad = padded_size(n, w)
+    if n_pad != n:
+        # sentinel pads: -inf cost sorts last under descending order, so
+        # padding lands in the cheapest slots of the last snake row
+        cost = jnp.concatenate(
+            [cost, jnp.full((n_pad - n,), -jnp.inf, cost.dtype)])
+    rows = n_pad // w
     order = jnp.argsort(-cost)                  # descending cost
-    i = jnp.arange(n)
+    i = jnp.arange(n_pad)
     row, col = i // w, i % w
     worker = jnp.where(row % 2 == 0, col, w - 1 - col)     # snake
     dest = worker * rows + row
-    perm = jnp.zeros((n,), jnp.int32).at[dest].set(order.astype(jnp.int32))
+    perm = jnp.zeros((n_pad,), jnp.int32).at[dest].set(
+        order.astype(jnp.int32))
     return perm
 
 
-def inverse_permutation(perm: jax.Array) -> jax.Array:
-    n = perm.shape[0]
-    return jnp.zeros((n,), jnp.int32).at[perm].set(
-        jnp.arange(n, dtype=jnp.int32))
+def padded_take(x: jax.Array, perm: jax.Array, n: int) -> jax.Array:
+    """Gather rows of `x` (first n are real) in `perm` order; padded
+    entries (perm[j] >= n) read row 0 — their results are dropped by the
+    masked :func:`inverse_permutation` on the way back."""
+    return jnp.take(x, jnp.where(perm < n, perm, 0), axis=0)
 
+
+def inverse_permutation(perm: jax.Array, n: Optional[int] = None) -> jax.Array:
+    """inv (n,) with inv[i] = slot of original item i in `perm`.
+
+    `n` is the number of real items (defaults to len(perm)); padded
+    entries ``perm[j] >= n`` are dropped from the scatter, so gathering
+    results with `inv` never reads a padded lane.
+    """
+    n_pad = perm.shape[0]
+    n = n_pad if n is None else n
+    return jnp.zeros((n,), jnp.int32).at[perm].set(
+        jnp.arange(n_pad, dtype=jnp.int32), mode="drop")
+
+
+# ---------------------------------------------------------------------------
+# Dispatch backends — the paper's pluggable "simulation backend" container
+# ---------------------------------------------------------------------------
+
+@runtime_checkable
+class DispatchBackend(Protocol):
+    """Executes a (possibly shuffled/padded) genome batch: (N, G) -> (N, O)."""
+
+    name: str
+
+    def __call__(self, genomes: jax.Array) -> jax.Array: ...
+
+
+class InlineBackend:
+    """SPMD inline evaluation: the fitness function is traced into the
+    caller's jitted program. Zero dispatch overhead; the fitness itself may
+    be model-axis sharded (vertical scaling)."""
+
+    name = "inline"
+
+    def __init__(self, fitness_fn: Callable):
+        self.fitness_fn = fitness_fn
+
+    def __call__(self, genomes: jax.Array) -> jax.Array:
+        return self.fitness_fn(genomes)
+
+
+class HostPoolBackend:
+    """Decoupled evaluation on a host executor pool via ``pure_callback``.
+
+    For external / embedded simulators (subprocess powerflow binaries,
+    non-JAX models) that cannot be traced into XLA. The batch is split into
+    ``num_workers`` chunks, each submitted to the pool; the callback blocks
+    until all chunks return — the device program sees one opaque op.
+
+    executor: "thread" (default; any callable) or "process" (true
+    parallelism for GIL-bound python simulators; ``fitness_fn`` must be
+    picklable, i.e. a module-level function or callable instance).
+    Process pools use the *spawn* start method and are created eagerly at
+    construction: forking lazily from inside a running XLA host callback
+    deadlocks (the forked child inherits the runtime's held locks).
+    """
+
+    name = "host-pool"
+
+    def __init__(self, fitness_fn: Callable, *, num_objectives: int = 1,
+                 num_workers: int = 4, executor: str = "thread"):
+        if executor not in ("thread", "process"):
+            raise ValueError(f"executor must be thread|process: {executor}")
+        self.fitness_fn = fitness_fn
+        self.num_objectives = num_objectives
+        self.num_workers = max(1, num_workers)
+        self.executor = executor
+        # eager pool creation — lazy init inside the host callback would
+        # race under the engine's pipelined epoch loop (two in-flight
+        # callbacks), and forking from a running XLA callback deadlocks
+        import concurrent.futures as cf
+        if executor == "thread":
+            self._pool = cf.ThreadPoolExecutor(max_workers=self.num_workers)
+        else:
+            import multiprocessing as mp
+            self._pool = cf.ProcessPoolExecutor(
+                max_workers=self.num_workers,
+                mp_context=mp.get_context("spawn"))
+
+    def _host_eval(self, genomes: np.ndarray) -> np.ndarray:
+        pool = self._pool
+        if pool is None:
+            raise RuntimeError("HostPoolBackend used after close()")
+        n = genomes.shape[0]
+        chunks = np.array_split(genomes, min(self.num_workers, max(1, n)))
+        futs = [pool.submit(self.fitness_fn, c) for c in chunks]
+        out = np.concatenate(
+            [np.asarray(f.result(), np.float32).reshape(len(c), -1)
+             for f, c in zip(futs, chunks)], axis=0)
+        return np.ascontiguousarray(out, np.float32)
+
+    def __call__(self, genomes: jax.Array) -> jax.Array:
+        shape = jax.ShapeDtypeStruct(
+            (genomes.shape[0], self.num_objectives), jnp.float32)
+        return jax.pure_callback(self._host_eval, shape, genomes)
+
+    def close(self):
+        if self._pool is not None:
+            self._pool.shutdown(wait=False)
+            self._pool = None
+
+
+# ---------------------------------------------------------------------------
+# Broker
+# ---------------------------------------------------------------------------
 
 class Broker:
     """Shared-pool evaluation dispatcher.
 
     fitness_fn: (N, G) -> (N, O)  (may itself be model-axis sharded =
-                vertical scaling)
+                vertical scaling); ignored if `backend` is given
     cost_fn:    (N, G) -> (N,) predicted evaluation cost, or None (uniform)
     num_workers: number of horizontal lanes (defaults to dp shards)
+    backend:    DispatchBackend executing the shuffled batch
+                (default: InlineBackend(fitness_fn))
     """
 
-    def __init__(self, fitness_fn: Callable, cost_fn: Optional[Callable] = None,
-                 num_workers: int = 1):
-        self.fitness_fn = fitness_fn
+    def __init__(self, fitness_fn: Optional[Callable] = None,
+                 cost_fn: Optional[Callable] = None,
+                 num_workers: int = 1,
+                 backend: Optional[DispatchBackend] = None):
+        if backend is None:
+            if fitness_fn is None:
+                raise ValueError("need fitness_fn or backend")
+            backend = InlineBackend(fitness_fn)
+        self.backend = backend
+        self.fitness_fn = fitness_fn or getattr(backend, "fitness_fn", None)
         self.cost_fn = cost_fn
         self.num_workers = max(1, num_workers)
 
+    def _identity_stats(self) -> dict:
+        one = jnp.ones(())
+        return {"skew": one, "naive_skew": one, "balanced": jnp.zeros(()),
+                "padded": jnp.zeros((), jnp.int32)}
+
     def evaluate(self, genomes: jax.Array) -> Tuple[jax.Array, dict]:
-        """genomes: (N, G) -> (fitness (N, O), dispatch stats)."""
+        """genomes: (N, G) -> (fitness (N, O), dispatch stats).
+
+        Total: cost-balanced dispatch applies for EVERY N/num_workers
+        combination when a cost model is given (no silent identity
+        fallback); padding absorbs N % W != 0.
+        """
         n = genomes.shape[0]
         w = self.num_workers
-        if self.cost_fn is None or w <= 1 or n % w != 0:
-            fit = self.fitness_fn(genomes)
-            return fit, {"skew": jnp.ones(()), "balanced": jnp.zeros(())}
+        if self.cost_fn is None or w <= 1:
+            fit = self.backend(genomes)
+            return fit, self._identity_stats()
         cost = self.cost_fn(genomes)
-        perm = balanced_permutation(cost, w)
-        shuffled = jnp.take(genomes, perm, axis=0)          # the "all-to-all"
-        fit_shuf = self.fitness_fn(shuffled)
-        inv = inverse_permutation(perm)
+        perm = balanced_permutation(cost, w)                # (Np,)
+        n_pad = perm.shape[0]
+        real = perm < n                                     # pad mask
+        shuffled = padded_take(genomes, perm, n)            # the "all-to-all"
+        fit_shuf = self.backend(shuffled)
+        inv = inverse_permutation(perm, n)
         fit = jnp.take(fit_shuf, inv, axis=0)
-        # stats: per-worker predicted load skew (max/mean), before/after
-        loads = jnp.sum(cost[perm].reshape(w, n // w), axis=1)
-        naive = jnp.sum(cost.reshape(w, n // w), axis=1)
+        # stats: per-worker predicted load skew (max/mean), before/after;
+        # padded lanes contribute zero load
+        lane_cost = jnp.where(real, padded_take(cost, perm, n), 0.0)
+        loads = jnp.sum(lane_cost.reshape(w, n_pad // w), axis=1)
+        cost_pad = (cost if n_pad == n else
+                    jnp.concatenate([cost, jnp.zeros((n_pad - n,),
+                                                     cost.dtype)]))
+        naive = jnp.sum(cost_pad.reshape(w, n_pad // w), axis=1)
         stats = {
             "skew": jnp.max(loads) / jnp.maximum(jnp.mean(loads), 1e-9),
             "naive_skew": jnp.max(naive) / jnp.maximum(jnp.mean(naive), 1e-9),
             "balanced": jnp.ones(()),
+            "padded": jnp.full((), n_pad - n, jnp.int32),
         }
         return fit, stats

@@ -6,8 +6,13 @@ run control, wall-clock/target termination, checkpoint/restart, history.
 
 Async manager/worker note: JAX dispatch is asynchronous — the host enqueues
 epoch e+1 while the devices still execute epoch e; the engine only blocks
-when it *reads* metrics (controlled by ``sync_every``). That is the
-manager-side counterpart of the paper's non-blocking queue submission.
+when it *reads* metrics. The epoch loop is double-buffered: the population
+buffers are donated to the jitted step (in-place update on accelerator
+backends), each epoch's metrics start a non-blocking device->host copy
+immediately, and the blocking ``device_get`` of epoch e is deferred until
+epoch e+``pipeline_depth`` has been dispatched — the manager-side
+counterpart of the paper's non-blocking queue submission. ``sync_every``
+additionally batches how often the pending queue is drained.
 """
 from __future__ import annotations
 
@@ -19,31 +24,51 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import GAConfig
-from repro.core.broker import Broker
+from repro.core.broker import Broker, DispatchBackend
 from repro.core.island import (evaluate_population, make_epoch_step,
                                constrain_pop)
-from repro.core.population import Population, best_of, init_population
+from repro.core.population import (Population, best_of, evals_dtype,
+                                   init_population)
 from repro.models.sharding import ShardingCtx
 
 
+def _start_host_copy(tree) -> None:
+    """Kick off non-blocking device->host transfers for every leaf, so the
+    later device_get finds the bytes already on host."""
+    for leaf in jax.tree_util.tree_leaves(tree):
+        copy = getattr(leaf, "copy_to_host_async", None)
+        if copy is not None:
+            copy()
+
+
 class GAEngine:
-    def __init__(self, cfg: GAConfig, fitness_fn: Callable, *,
+    def __init__(self, cfg: GAConfig, fitness_fn: Optional[Callable] = None, *,
                  cost_fn: Optional[Callable] = None,
+                 backend: Optional[DispatchBackend] = None,
                  ctx: Optional[ShardingCtx] = None,
                  num_workers: Optional[int] = None,
                  checkpointer=None, checkpoint_every: int = 0,
                  log_fn: Optional[Callable] = None,
-                 sync_every: int = 1):
+                 sync_every: int = 1,
+                 pipeline_depth: int = 1):
         self.cfg = cfg
         self.ctx = ctx
         workers = num_workers if num_workers is not None else (
             ctx.dp_size if ctx and ctx.mesh else 1)
-        self.broker = Broker(fitness_fn, cost_fn, num_workers=workers)
+        self.broker = Broker(fitness_fn, cost_fn, num_workers=workers,
+                             backend=backend)
         self.checkpointer = checkpointer
         self.checkpoint_every = checkpoint_every
         self.log_fn = log_fn
         self.sync_every = max(1, sync_every)
-        self._epoch_step = jax.jit(make_epoch_step(cfg, self.broker, ctx))
+        self.pipeline_depth = max(0, pipeline_depth)
+        # donation aliases the input population buffers to the output on
+        # backends that support it (TPU/GPU); CPU ignores donation, so skip
+        # it there to avoid per-compile warnings
+        self._donate = jax.default_backend() != "cpu"
+        self._epoch_step = jax.jit(make_epoch_step(cfg, self.broker, ctx),
+                                   donate_argnums=(0,) if self._donate
+                                   else ())
         self._init_eval = jax.jit(
             lambda pop: evaluate_population(cfg, self.broker, pop))
 
@@ -58,9 +83,30 @@ class GAEngine:
         if self.checkpointer is None:
             return None
         state = self.checkpointer.restore(step)
-        return None if state is None else Population(**state)
+        if state is None:
+            return None
+        # pre-int checkpoints stored the eval counter as f32; normalize
+        state["evals"] = jnp.asarray(
+            np.asarray(state["evals"]).astype(np.int64)).astype(evals_dtype())
+        return Population(**state)
 
     # ------------------------------------------------------------------
+    def _drain(self, pending: list, history: list, keep: int = 0) -> None:
+        """Blocking-read all but the newest `keep` pending epoch metrics
+        into `history` (oldest first)."""
+        while len(pending) > keep:
+            ee, mm = pending.pop(0)
+            mm = jax.device_get(mm)
+            rec = {"epoch": ee,
+                   "best_per_island": np.asarray(mm["best"])[-1],
+                   "best": float(np.min(mm["best"])),
+                   "trace": np.asarray(mm["best"]),
+                   "skew": float(np.mean(mm["skew"])),
+                   "balanced": float(np.mean(mm.get("balanced", 0.0)))}
+            history.append(rec)
+            if self.log_fn:
+                self.log_fn(rec)
+
     def run(self, pop: Optional[Population] = None, *,
             epochs: Optional[int] = None,
             target: Optional[float] = None,
@@ -70,41 +116,38 @@ class GAEngine:
         cfg = self.cfg
         if pop is None:
             pop = self.restore() or self.init()
+        elif self._donate:
+            # first epoch_step donates its input; copy so the CALLER's
+            # population survives (every later step donates engine-internal
+            # buffers, so the aliasing win is kept for the whole loop)
+            pop = jax.tree_util.tree_map(jnp.copy, pop)
         epochs = epochs if epochs is not None else cfg.num_epochs
         history = []
         t0 = time.monotonic()
-        pending = []                                   # async metric reads
+        pending = []                                   # in-flight metrics
         start_epoch = int(jax.device_get(pop.epoch))
 
         for e in range(start_epoch, start_epoch + epochs):
             pop, metrics = self._epoch_step(pop)
+            _start_host_copy(metrics)                  # non-blocking D2H
             pending.append((e, metrics))
-            if (e + 1) % self.sync_every == 0 or e == start_epoch + epochs - 1:
-                for ee, mm in pending:
-                    mm = jax.device_get(mm)
-                    rec = {"epoch": ee,
-                           "best_per_island": np.asarray(mm["best"])[-1],
-                           "best": float(np.min(mm["best"])),
-                           "trace": np.asarray(mm["best"]),
-                           "skew": float(np.mean(mm["skew"]))}
-                    history.append(rec)
-                    if self.log_fn:
-                        self.log_fn(rec)
-                pending = []
-                if target is not None and history and history[-1]["best"] <= target:
+            if (e + 1) % self.sync_every == 0:
+                # keep `pipeline_depth` epochs in flight: the blocking read
+                # of epoch e-depth overlaps device execution of epoch e.
+                # With a target, drain fully so the check sees the newest
+                # epoch and stops as early as the synchronous loop would.
+                self._drain(pending, history,
+                            keep=0 if target is not None
+                            else self.pipeline_depth)
+                if target is not None and history and \
+                        history[-1]["best"] <= target:
                     break
             if self.checkpointer and self.checkpoint_every and \
                     (e + 1) % self.checkpoint_every == 0:
                 self.checkpointer.save(dict(pop._asdict()), step=e + 1)
             if wallclock_s is not None and time.monotonic() - t0 > wallclock_s:
                 break
-        for ee, mm in pending:
-            mm = jax.device_get(mm)
-            history.append({"epoch": ee,
-                            "best_per_island": np.asarray(mm["best"])[-1],
-                            "best": float(np.min(mm["best"])),
-                            "trace": np.asarray(mm["best"]),
-                            "skew": float(np.mean(mm["skew"]))})
+        self._drain(pending, history, keep=0)
         if self.checkpointer and self.checkpoint_every:
             self.checkpointer.save(dict(pop._asdict()),
                                    step=int(jax.device_get(pop.epoch)))

@@ -99,7 +99,8 @@ def make_generation_step(cfg: GAConfig, broker: Broker,
             evals=pop.evals + i * p)
         newpop = constrain_pop(newpop, ctx)
         metrics = {"best": jnp.min(new_f[..., 0], axis=1),   # per island
-                   "skew": stats["skew"]}
+                   "skew": stats["skew"],
+                   "balanced": stats["balanced"]}
         return newpop, metrics
 
     return generation

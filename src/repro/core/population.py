@@ -20,7 +20,17 @@ class Population(NamedTuple):
     rng: jax.Array            # (I, 2) uint32 per-island streams
     generation: jax.Array     # () int32
     epoch: jax.Array          # () int32
-    evals: jax.Array          # () int64-ish f64->f32 counter of fitness evals
+    evals: jax.Array          # () int counter of fitness evals (see
+                              # evals_dtype(); f32 loses exact counts past
+                              # 2^24 ≈ 16.7M — one 3,500-core epoch)
+
+
+def evals_dtype():
+    """Exact integer dtype for the evaluation counter: i64 when x64 is
+    enabled, else i32 (exact to 2.1e9 vs f32's 1.6e7; without x64 jax
+    cannot hold an i64 leaf, so ~128 epochs at 3,500-core scale still
+    overflows — host-side u64 accumulation is a ROADMAP item)."""
+    return jnp.int64 if jax.config.jax_enable_x64 else jnp.int32
 
 
 def init_population(cfg: GAConfig, rng: jax.Array) -> Population:
@@ -34,7 +44,7 @@ def init_population(cfg: GAConfig, rng: jax.Array) -> Population:
                       rng=island_rngs,
                       generation=jnp.zeros((), jnp.int32),
                       epoch=jnp.zeros((), jnp.int32),
-                      evals=jnp.zeros((), jnp.float32))
+                      evals=jnp.zeros((), evals_dtype()))
 
 
 def best_of(pop: Population):

@@ -25,7 +25,11 @@ from repro.checkpoint import Checkpointer
 
 
 def build(fitness_name: str, args):
-    """(GAConfig, fitness_fn, cost_fn) for a backend."""
+    """(GAConfig, fitness_fn, cost_fn) for a backend.
+
+    fitness_fn is returned UNJITTED: the inline backend traces it into the
+    jitted epoch step anyway, and the host-pool backends need the raw
+    (picklable for --dispatch-backend host-process) callable."""
     cost_fn = None
     if fitness_name in ("rastrigin", "sphere", "rosenbrock", "ackley",
                         "griewank"):
@@ -38,7 +42,7 @@ def build(fitness_name: str, args):
                        mutation_prob=0.7, mutation_eta=20.0,
                        crossover_prob=0.9, crossover_eta=15.0,
                        seed=args.seed)
-        return cfg, jax.jit(fn), cost_fn
+        return cfg, fn, cost_fn
     if fitness_name == "hvdc":
         from repro.fitness.powerflow import HVDCDispatchFitness
         from repro.powerflow.grid import make_synthetic_grid
@@ -55,7 +59,7 @@ def build(fitness_name: str, args):
                        mutation_prob=0.7, mutation_eta=34.6,   # paper Tab. 3
                        crossover_prob=1.0, crossover_eta=97.5,
                        seed=args.seed)
-        return cfg, jax.jit(fit), fit.cost_model()
+        return cfg, fit, fit.cost_model()
     if fitness_name == "lm":
         from repro.fitness.lm import LMTrainFitness, NUM_LM_GENES
         fit = LMTrainFitness(args.lm_arch, steps=args.lm_steps)
@@ -66,7 +70,7 @@ def build(fitness_name: str, args):
                        mutation_prob=0.5, mutation_eta=20.0,
                        crossover_prob=0.9, crossover_eta=15.0,
                        fused_operators=False, seed=args.seed)
-        return cfg, jax.jit(fit), cost_fn
+        return cfg, fit, cost_fn
     raise ValueError(fitness_name)
 
 
@@ -87,16 +91,40 @@ def main(argv=None):
     ap.add_argument("--lm-steps", type=int, default=6)
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--wallclock-s", type=float, default=None)
+    ap.add_argument("--dispatch-backend", default="inline",
+                    choices=("inline", "host-thread", "host-process"),
+                    help="inline: fitness traced into the XLA program; "
+                         "host-*: decoupled simulation backend on a host "
+                         "executor pool (external/embedded simulators)")
+    ap.add_argument("--num-workers", type=int, default=None,
+                    help="broker dispatch lanes (default: dp shards)")
+    ap.add_argument("--sync-every", type=int, default=1,
+                    help="drain metrics every N epochs")
+    ap.add_argument("--pipeline-depth", type=int, default=1,
+                    help="epochs kept in flight before blocking on metrics")
     args = ap.parse_args(argv)
+    if args.pop % 2:
+        ap.error(f"--pop must be even (SBX crossover pairs parents), "
+                 f"got {args.pop}")
 
     cfg, fitness_fn, cost_fn = build(args.fitness, args)
+    backend = None
+    if args.dispatch_backend != "inline":
+        from repro.core.broker import HostPoolBackend
+        backend = HostPoolBackend(
+            fitness_fn, num_objectives=cfg.num_objectives,
+            num_workers=args.num_workers or 4,
+            executor=args.dispatch_backend.split("-")[1])
     plan = plan_scaling(len(jax.devices()), pop_total=cfg.global_pop,
                         sim_parallelism=max(args.contingencies, 1))
     print(f"scaling plan: horizontal={plan.horizontal} "
           f"vertical={plan.vertical}")
     ckpt = Checkpointer(args.ckpt_dir) if args.ckpt_dir else None
-    eng = GAEngine(cfg, fitness_fn, cost_fn=cost_fn, checkpointer=ckpt,
+    eng = GAEngine(cfg, fitness_fn, cost_fn=cost_fn, backend=backend,
+                   num_workers=args.num_workers, checkpointer=ckpt,
                    checkpoint_every=2 if ckpt else 0,
+                   sync_every=args.sync_every,
+                   pipeline_depth=args.pipeline_depth,
                    log_fn=lambda r: print(
                        f"epoch {r['epoch']:4d} best {r['best']:.5f} "
                        f"skew {r['skew']:.3f}"))

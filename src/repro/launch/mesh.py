@@ -13,7 +13,19 @@ gradient reduction, train/compress.py).
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+try:                     # jax >= 0.5: explicit-sharding axis types
+    from jax.sharding import AxisType
+except ImportError:      # jax 0.4.x: every mesh axis is implicitly Auto
+    AxisType = None
+
+
+def _axis_kwargs(num_axes: int) -> dict:
+    """`axis_types` kwarg when this jax supports it (all Auto — the GSPMD
+    partitioner behavior 0.4.x gives unconditionally), else nothing."""
+    if AxisType is None:
+        return {}
+    return {"axis_types": (AxisType.Auto,) * num_axes}
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -23,8 +35,7 @@ def make_production_mesh(*, multi_pod: bool = False):
     for s in shape:
         n *= s
     devices = jax.devices()[:n]
-    return jax.make_mesh(shape, axes, devices=devices,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes, devices=devices, **_axis_kwargs(len(axes)))
 
 
 def make_local_mesh(data: int = 1, model: int = 1):
@@ -32,4 +43,4 @@ def make_local_mesh(data: int = 1, model: int = 1):
     n = data * model
     devices = jax.devices()[:n]
     return jax.make_mesh((data, model), ("data", "model"), devices=devices,
-                         axis_types=(AxisType.Auto,) * 2)
+                         **_axis_kwargs(2))

@@ -20,7 +20,8 @@ from typing import Callable, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.broker import balanced_permutation, inverse_permutation
+from repro.core.broker import (balanced_permutation, inverse_permutation,
+                               padded_take)
 
 
 def backup_dispatch_eval(fitness_fn: Callable, genomes: jax.Array,
@@ -29,29 +30,34 @@ def backup_dispatch_eval(fitness_fn: Callable, genomes: jax.Array,
                          ) -> Tuple[jax.Array, dict]:
     """Evaluate with balanced dispatch + speculative duplicates.
 
-    genomes: (N, G); cost: (N,). N and N*(1+backup_frac) must divide into
-    num_workers lanes; the caller rounds backup count to a multiple of
-    num_workers.
+    genomes: (N, G); cost: (N,). Dispatch is total: the broker's padded
+    balanced permutation absorbs N % num_workers != 0, and the backup
+    count stays a multiple of num_workers (cycling the top items when
+    N < num_workers) so the full batch splits evenly over the lanes.
     """
     n, g = genomes.shape
     w = num_workers
     nb = max(w, int(round(n * backup_frac / w)) * w)
 
-    # primary balanced dispatch
+    # primary balanced dispatch (padded when n % w != 0; padded lanes
+    # re-evaluate genome 0 and are dropped by the masked inverse)
     perm = balanced_permutation(cost, w)
-    primary = jnp.take(genomes, perm, axis=0)
+    n_pad = perm.shape[0]
+    primary = padded_take(genomes, perm, n)
 
     # duplicates of the nb most expensive individuals, placed so each lane
     # gets nb/w of them, cheapest-lane-first (reverse snake of the primary)
-    top = jnp.argsort(-cost)[:nb]
-    backups = jnp.take(genomes, top, axis=0)
+    top = jnp.argsort(-cost)[:min(nb, n)]
+    backup_idx = jnp.tile(top, -(-nb // top.shape[0]))[:nb]
+    backups = jnp.take(genomes, backup_idx, axis=0)
 
     batch = jnp.concatenate([primary, backups], axis=0)
     fit = fitness_fn(batch)
-    fit_primary = jnp.take(fit[:n], inverse_permutation(perm), axis=0)
-    fit_backup = fit[n:]
+    fit_primary = jnp.take(fit[:n_pad], inverse_permutation(perm, n), axis=0)
+    fit_backup = fit[n_pad:]
 
-    # combine: min(first-finisher) over duplicates
-    combined = fit_primary.at[top].min(fit_backup)
+    # combine: min(first-finisher) over duplicates (scatter-min handles
+    # repeated indices from the cycled backup fill)
+    combined = fit_primary.at[backup_idx].min(fit_backup)
     stats = {"duplicated": nb, "extra_frac": nb / n}
     return combined, stats

@@ -1,0 +1,4 @@
+"""Test-support utilities (importable without the dev dependencies)."""
+from repro.testing.hypothesis_stub import install_hypothesis_stub
+
+__all__ = ["install_hypothesis_stub"]

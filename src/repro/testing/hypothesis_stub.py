@@ -1,0 +1,155 @@
+"""A minimal, deterministic stand-in for `hypothesis`.
+
+The test suite uses hypothesis for property-style sweeps, but the runtime
+container must stay installable without dev dependencies. This stub
+implements just the surface the suite uses — ``@given`` with keyword
+strategies, ``@settings(max_examples=..., deadline=...)``, and the
+``integers`` / ``floats`` / ``booleans`` / ``sampled_from`` / ``lists`` /
+``just`` / ``one_of`` strategies — by drawing ``max_examples`` pseudo-random
+examples from a per-test seeded PRNG (seeded from the test name, so runs
+are reproducible and failures replayable).
+
+It is NOT a property-based tester: no shrinking, no coverage-guided
+generation, no database. Install the real `hypothesis`
+(``pip install -r requirements-dev.txt``) for full power; the stub only
+keeps the suite collectable and meaningful without it.
+"""
+from __future__ import annotations
+
+import random
+import sys
+import types
+import zlib
+from typing import Any, Callable, Sequence
+
+DEFAULT_MAX_EXAMPLES = 20
+
+
+class Strategy:
+    """A sampleable value factory: draw(rng) -> value."""
+
+    def __init__(self, draw: Callable[[random.Random], Any], desc: str):
+        self._draw = draw
+        self.desc = desc
+
+    def draw(self, rng: random.Random) -> Any:
+        return self._draw(rng)
+
+    def __repr__(self) -> str:
+        return f"<stub strategy {self.desc}>"
+
+
+def integers(min_value: int, max_value: int) -> Strategy:
+    return Strategy(lambda r: r.randint(min_value, max_value),
+                    f"integers({min_value}, {max_value})")
+
+
+def floats(min_value: float, max_value: float, **_: Any) -> Strategy:
+    return Strategy(lambda r: r.uniform(min_value, max_value),
+                    f"floats({min_value}, {max_value})")
+
+
+def booleans() -> Strategy:
+    return Strategy(lambda r: bool(r.getrandbits(1)), "booleans()")
+
+
+def just(value: Any) -> Strategy:
+    return Strategy(lambda r: value, f"just({value!r})")
+
+
+def sampled_from(elements: Sequence) -> Strategy:
+    elements = list(elements)
+    return Strategy(lambda r: r.choice(elements),
+                    f"sampled_from(<{len(elements)}>)")
+
+
+def one_of(*strategies: Strategy) -> Strategy:
+    return Strategy(lambda r: r.choice(strategies).draw(r),
+                    f"one_of(<{len(strategies)}>)")
+
+
+def lists(elements: Strategy, *, min_size: int = 0,
+          max_size: int = 10) -> Strategy:
+    return Strategy(
+        lambda r: [elements.draw(r)
+                   for _ in range(r.randint(min_size, max_size))],
+        f"lists({elements.desc})")
+
+
+def given(**strategies: Strategy) -> Callable:
+    """Run the test once per drawn example (keyword-strategies form only)."""
+
+    def decorate(func: Callable) -> Callable:
+        def wrapper():
+            # @settings may sit above @given (sets the attr on wrapper) or
+            # below it (sets it on func) — real hypothesis accepts both
+            n = getattr(wrapper, "_stub_max_examples",
+                        getattr(func, "_stub_max_examples",
+                                DEFAULT_MAX_EXAMPLES))
+            # deterministic per-test stream -> reproducible failures
+            rng = random.Random(zlib.crc32(func.__qualname__.encode()))
+            for i in range(n):
+                kwargs = {k: s.draw(rng) for k, s in strategies.items()}
+                try:
+                    func(**kwargs)
+                except _Unsatisfied:
+                    continue                    # assume() rejected the draw
+                except Exception as exc:
+                    raise AssertionError(
+                        f"falsifying example ({i + 1}/{n}): {kwargs!r}"
+                    ) from exc
+
+        wrapper.__name__ = func.__name__
+        wrapper.__qualname__ = func.__qualname__
+        wrapper.__doc__ = func.__doc__
+        wrapper.__module__ = func.__module__
+        # NOTE: no __wrapped__ — pytest must see a zero-arg signature,
+        # not the strategy parameters (it would treat them as fixtures)
+        return wrapper
+
+    return decorate
+
+
+def settings(max_examples: int = DEFAULT_MAX_EXAMPLES, **_: Any) -> Callable:
+    """Record max_examples on the @given wrapper; other knobs ignored."""
+
+    def decorate(func: Callable) -> Callable:
+        func._stub_max_examples = max_examples
+        return func
+
+    return decorate
+
+
+def assume(condition: Any) -> None:
+    """Real hypothesis retries the draw; the stub discards the example
+    (the @given wrapper catches _Unsatisfied and moves on)."""
+    if not condition:
+        raise _Unsatisfied()
+
+
+class _Unsatisfied(Exception):
+    pass
+
+
+def install_hypothesis_stub() -> types.ModuleType:
+    """Register this stub as `hypothesis` in sys.modules (no-op if the real
+    package is importable). Returns the module serving `hypothesis`."""
+    try:
+        import hypothesis  # noqa: F401
+        return sys.modules["hypothesis"]
+    except ImportError:
+        pass
+    mod = types.ModuleType("hypothesis")
+    mod.__doc__ = __doc__
+    st = types.ModuleType("hypothesis.strategies")
+    for fn in (integers, floats, booleans, just, sampled_from, one_of,
+               lists):
+        setattr(st, fn.__name__, fn)
+    mod.strategies = st
+    mod.given = given
+    mod.settings = settings
+    mod.assume = assume
+    mod.__stub__ = True
+    sys.modules["hypothesis"] = mod
+    sys.modules["hypothesis.strategies"] = st
+    return mod

@@ -135,13 +135,21 @@ def make_train_step(model: Model, opt_cfg: OptimizerConfig, *,
 
 
 def _pod_compressed_grads(model, microbatches, unroll, params, batch, rng):
-    """Per-pod grads + int8 compressed cross-pod reduce (shard_map, partial
-    manual over 'pod'; 'data'/'model' stay under GSPMD).
+    """Per-pod grads + int8 compressed cross-pod reduce.
 
     Requires pure DP across pods: params/opt replicated over the pod axis
     (FSDP within a pod only) — the natural layout when inter-pod links are
-    slow enough to warrant compression. The inner loss runs with a pod-less
-    sharding ctx since the body sees one pod's shard.
+    slow enough to warrant compression.
+
+    Two lowering strategies, same numerics:
+      * jax >= 0.6: partial-manual ``jax.shard_map`` over 'pod';
+        'data'/'model' stay under GSPMD inside the body, the reduce is an
+        explicit int8 ``all_gather`` (compress.compressed_psum_tree).
+      * jax 0.4.x: a partial-manual body trips the XLA partitioner
+        (``IsManualSubgroup`` check), so the pod axis is expressed as a
+        vmapped leading batch dimension sharded over 'pod', and the int8
+        gather as a GSPMD replication constraint
+        (compress.compressed_allgather_mean).
     """
     import dataclasses
 
@@ -150,26 +158,48 @@ def _pod_compressed_grads(model, microbatches, unroll, params, batch, rng):
     drop_pod = lambda axes: tuple(a for a in axes if a != "pod")
     inner_ctx = dataclasses.replace(ctx, dp=drop_pod(ctx.dp),
                                     fsdp=drop_pod(ctx.fsdp))
-    inner_model = model.with_ctx(inner_ctx)
+
+    if hasattr(jax, "shard_map"):
+        inner_model = model.with_ctx(inner_ctx)
+        compute_grads = make_compute_grads(inner_model, microbatches, unroll)
+
+        def per_pod(params, batch, rng):
+            grads, metrics = compute_grads(params, batch)
+            grads = compressed_psum_tree(grads, "pod", rng)
+            metrics = jax.tree_util.tree_map(
+                lambda x: jax.lax.pmean(x, "pod"), metrics)
+            return grads, metrics
+
+        pspecs = jax.tree_util.tree_map(lambda _: P(), params)
+        bspecs = jax.tree_util.tree_map(lambda _: P("pod"), batch)
+        f = jax.shard_map(per_pod, mesh=mesh,
+                          in_specs=(pspecs, bspecs, P()),
+                          out_specs=(pspecs, P()),
+                          axis_names={"pod"}, check_vma=False)
+        return f(params, batch, rng)
+
+    # jax 0.4.x GSPMD path: pods = vmapped leading axis. The inner
+    # constraints are dropped (mesh=None ctx) — under vmap they would
+    # apply to per-pod slices; GSPMD auto-partitions the body instead.
+    from jax.sharding import NamedSharding
+    from repro.train.compress import compressed_allgather_mean
+
+    n_pods = mesh.shape["pod"]
+    inner_model = model.with_ctx(dataclasses.replace(ctx, mesh=None))
     compute_grads = make_compute_grads(inner_model, microbatches, unroll)
 
-    def per_pod(params, batch, rng):
-        grads, metrics = compute_grads(params, batch)
-        grads = compressed_psum_tree(grads, "pod", rng)
-        metrics = jax.tree_util.tree_map(
-            lambda x: jax.lax.pmean(x, "pod"), metrics)
-        return grads, metrics
+    def split_pods(x):
+        x = x.reshape((n_pods, x.shape[0] // n_pods) + x.shape[1:])
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(mesh, P(*("pod",) + (None,) * (x.ndim - 1))))
 
-    pspecs = jax.tree_util.tree_map(lambda _: P(), params)
-    bspecs = jax.tree_util.tree_map(lambda _: P("pod"), batch)
-    # partial-manual shard_map: only the pod axis is manual; data/model
-    # stay under GSPMD inside the body
-    f = jax.shard_map(per_pod, mesh=mesh,
-                      in_specs=(pspecs, bspecs, P()),
-                      out_specs=(pspecs, P()),
-                      axis_names={"pod"},
-                      check_vma=False)
-    return f(params, batch, rng)
+    batch_p = jax.tree_util.tree_map(split_pods, batch)
+    grads_p, metrics_p = jax.vmap(
+        compute_grads, in_axes=(None, 0))(params, batch_p)
+    grads = compressed_allgather_mean(grads_p, rng, mesh=mesh)
+    metrics = jax.tree_util.tree_map(lambda m: jnp.mean(m, axis=0),
+                                     metrics_p)
+    return grads, metrics
 
 
 def init_train_state(model: Model, rng: jax.Array,

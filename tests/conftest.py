@@ -4,5 +4,11 @@ import sys
 # make `src` importable without installation
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
+# `hypothesis` is a dev-only dependency (requirements-dev.txt); fall back
+# to the deterministic stub so the suite collects and runs without it.
+from repro.testing import install_hypothesis_stub  # noqa: E402
+
+install_hypothesis_stub()
+
 # Note: NO xla_force_host_platform_device_count here — smoke tests and
 # benchmarks must see 1 device (the dry-run sets it in its own process).

@@ -144,3 +144,50 @@ class TestStraggler:
         np.testing.assert_allclose(np.asarray(fit),
                                    np.asarray(sphere(genomes)), rtol=1e-6)
         assert stats["duplicated"] >= 8
+
+    def test_backup_eval_non_divisible_population(self):
+        """Total dispatch: speculative backups work when N % W != 0."""
+        genomes = jax.random.uniform(jax.random.PRNGKey(4), (53, 4))
+        cost = jnp.sum(genomes, -1)
+        fit, stats = backup_dispatch_eval(sphere, genomes, cost,
+                                          num_workers=8, backup_frac=0.2)
+        np.testing.assert_allclose(np.asarray(fit),
+                                   np.asarray(sphere(genomes)), rtol=1e-6)
+        assert stats["duplicated"] % 8 == 0
+
+
+class TestEvalsCounter:
+    def test_evals_counter_is_exact_past_f32_range(self, tmp_path):
+        """f32 loses exact integer counts past 2^24 (~16.7M — one
+        3,500-core epoch); the int counter must round-trip exactly."""
+        from repro.core.population import evals_dtype, init_population
+        cfg = _cfg()
+        pop = init_population(cfg, jax.random.PRNGKey(0))
+        assert jnp.issubdtype(pop.evals.dtype, jnp.integer)
+        big = 2 ** 24 + 1                       # not representable in f32
+        pop = pop._replace(evals=jnp.asarray(big, evals_dtype()))
+        assert int(pop.evals + 1) == big + 1    # f32 would stay at 2^24
+        ck = Checkpointer(str(tmp_path), async_write=False)
+        ck.save(dict(pop._asdict()), step=1)
+        eng = GAEngine(_cfg(), sphere, checkpointer=ck)
+        restored = eng.restore()
+        assert int(restored.evals) == big
+        assert jnp.issubdtype(jnp.asarray(restored.evals).dtype, jnp.integer)
+
+    def test_restore_upgrades_legacy_float_counter(self, tmp_path):
+        """Pre-int checkpoints stored evals as f32; restore normalizes."""
+        cfg = _cfg()
+        eng = GAEngine(cfg, sphere,
+                       checkpointer=Checkpointer(str(tmp_path),
+                                                 async_write=False))
+        pop = eng.init()
+        state = dict(pop._asdict())
+        state["evals"] = np.float32(float(np.asarray(pop.evals)))
+        eng.checkpointer.save(state, step=1)
+        restored = eng.restore()
+        assert jnp.issubdtype(jnp.asarray(restored.evals).dtype, jnp.integer)
+        # and the restored population steps fine (dtype matches the jitted
+        # epoch step's expectations)
+        out, _ = eng.run(jax.tree_util.tree_map(jnp.asarray, restored),
+                         epochs=1)
+        assert int(out.evals) > int(restored.evals)
