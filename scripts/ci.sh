@@ -2,6 +2,12 @@
 # CI entrypoint. Usage:
 #   scripts/ci.sh         # full tier-1 lane (everything, incl. slow)
 #   scripts/ci.sh fast    # fast lane: skips @pytest.mark.slow subprocess tests
+#
+# The fast lane includes the batch-dispatch (mock-scheduler) conformance
+# tests: tests/test_batchq.py runs the spool/timeout/re-queue machinery on
+# thread-mode LocalMockScheduler workers in-process. Only multi-second
+# subprocess tests (array-task interpreter spawns, multidevice runs) are
+# @pytest.mark.slow and deferred to the full lane.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 

@@ -5,8 +5,27 @@ asynchronous island model (collective-free generations + ring migration);
 `broker` is the TPU-native analogue of the paper's RabbitMQ shared
 evaluation queue; `engine` orchestrates epochs, checkpoints and termination;
 `meta` implements the hierarchical meta-GA (paper §4.2.2).
-"""
-from repro.core.engine import GAEngine
-from repro.core.population import Population, init_population
 
-__all__ = ["GAEngine", "Population", "init_population"]
+Exports resolve lazily (PEP 562): numpy-only batch-queue workers import
+``repro.core.hostbridge`` through this package and must not pay the jax
+import that `engine`/`population` pull in.
+"""
+import importlib
+
+_EXPORTS = {
+    "GAEngine": "repro.core.engine",
+    "Population": "repro.core.population",
+    "init_population": "repro.core.population",
+}
+
+__all__ = list(_EXPORTS)
+
+
+def __getattr__(name):
+    if name in _EXPORTS:
+        return getattr(importlib.import_module(_EXPORTS[name]), name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(set(globals()) | set(_EXPORTS))

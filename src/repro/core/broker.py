@@ -29,14 +29,51 @@ microservice): a :class:`DispatchBackend` executes the shuffled batch.
 program (SPMD, zero copies); :class:`HostPoolBackend` bridges out of the
 program with ``jax.pure_callback`` and fans chunks across a host executor
 pool — for external / embedded simulators that cannot be traced.
+
+Batch-scheduled dispatch (SLURM)
+--------------------------------
+``repro.runtime.batchq`` adds the paper's K8s<->SLURM portability story:
+:class:`~repro.runtime.batchq.SlurmArrayBackend` implements the same
+:class:`DispatchBackend` protocol by *spooling* each evaluation batch to
+disk and submitting it as array-job work items through a pluggable
+``Scheduler`` (real ``sbatch``/``squeue`` shelling-out, or a
+``LocalMockScheduler`` that runs chunks in subprocesses/threads for CI).
+
+Spool layout (one job directory per evaluate call)::
+
+    <spool>/job_000042/
+        payload.json               # num_objectives + fitness import spec
+        fn.pkl                     # pickled fitness (when no import spec)
+        chunk_0003_try0.npz        # input genomes for chunk 3, attempt 0
+        chunk_0003_try0.result.npz # fitness + measured duration (atomic)
+        chunk_0003_try0.fail       # traceback marker on worker failure
+
+Both decoupled backends share :func:`run_chunks_retry`: every chunk is
+submitted up front, waited on with a per-chunk timeout measured from
+submission, and *re-queued* (a fresh attempt via the scheduler/pool) when
+it straggles past the timeout or fails, up to ``max_retries`` times.
+
+Cost-model learning: :class:`CostEMA` is a drop-in ``cost_fn`` that learns
+an online EMA of measured per-lane wall times (reported by the decoupled
+backends) and feeds them back into :func:`balanced_permutation` — the
+ROADMAP's replacement for a static cost model.
+
+``ga_run`` flags: ``--dispatch-backend slurm|slurm-mock`` selects the
+batch-scheduled backend (real scheduler vs local mock), ``--spool-dir`` /
+``--chunk-timeout-s`` tune the spool, and ``--cost-ema`` enables the
+learned cost model.
 """
 from __future__ import annotations
 
+import threading
+import time
 from typing import Callable, Optional, Protocol, Tuple, runtime_checkable
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.core.hostbridge import PureCallbackBridge, collect_chunk_results
 
 
 def padded_size(n: int, num_workers: int) -> int:
@@ -92,6 +129,148 @@ def inverse_permutation(perm: jax.Array, n: Optional[int] = None) -> jax.Array:
 
 
 # ---------------------------------------------------------------------------
+# Per-chunk timeout + retry (shared by every decoupled backend)
+# ---------------------------------------------------------------------------
+
+class ChunkFailure(RuntimeError):
+    """A dispatched evaluation chunk failed (or straggled) beyond retry."""
+
+
+def run_chunks_retry(chunks, submit: Callable, wait: Callable, *,
+                     timeout_s: Optional[float] = None,
+                     max_retries: int = 0,
+                     on_retry: Optional[Callable] = None,
+                     initial_tokens: Optional[list] = None) -> list:
+    """Drive a set of evaluation chunks with per-chunk timeout + re-queue.
+
+    All chunks are submitted up front (``submit(i, chunk, attempt) ->
+    token``, or pass ``initial_tokens`` when attempt 0 was already
+    batch-submitted — e.g. as one SLURM array job); each is then waited on
+    (``wait(i, token, timeout_s) -> result``). How ``timeout_s`` is
+    clocked is ``wait``'s choice — both backends count *execution* time
+    only, so queue/PENDING time never reads as straggling. ``wait`` raises
+    ``TimeoutError`` for stragglers or any other exception for failed
+    chunks, and the chunk is re-queued via a fresh ``submit`` up to
+    ``max_retries`` times. Shared by
+    :class:`HostPoolBackend` (executor futures) and
+    :class:`~repro.runtime.batchq.SlurmArrayBackend` (spool polling), so
+    both get identical straggler semantics.
+    """
+    tokens = (list(initial_tokens) if initial_tokens is not None
+              else [submit(i, c, 0) for i, c in enumerate(chunks)])
+    attempts = [0] * len(chunks)
+    results = [None] * len(chunks)
+    for i, chunk in enumerate(chunks):
+        while True:
+            try:
+                token = tokens[i]
+                if isinstance(token, _FailedSubmit):
+                    raise token.exc          # count against the budget
+                results[i] = wait(i, token, timeout_s)
+                break
+            except Exception as exc:
+                attempts[i] += 1
+                if attempts[i] > max_retries:
+                    raise ChunkFailure(
+                        f"chunk {i}/{len(chunks)} failed after "
+                        f"{attempts[i]} attempt(s): {exc!r}") from exc
+                if on_retry is not None:
+                    on_retry(i, attempts[i], exc)
+                try:
+                    tokens[i] = submit(i, chunk, attempts[i])
+                except Exception as submit_exc:
+                    # a failing re-queue (e.g. transient sbatch error) is
+                    # just another failed attempt, not an abort
+                    tokens[i] = _FailedSubmit(submit_exc)
+    return results
+
+
+class _FailedSubmit:
+    """Token marking a re-queue whose submission itself failed."""
+
+    def __init__(self, exc: Exception):
+        self.exc = exc
+
+
+# ---------------------------------------------------------------------------
+# Online cost-model learning
+# ---------------------------------------------------------------------------
+
+class CostEMA:
+    """Learned cost model: an online EMA of measured per-lane wall times.
+
+    Drop-in ``cost_fn`` for :class:`Broker`. Estimates are keyed by batch
+    slot: slot ``i`` of the flattened ``(I*P)`` batch belongs to island
+    ``i // P``, so island- and slot-level cost structure (e.g. one
+    island's HVDC region needing more contingency solves) persists across
+    generations even as individual genomes change.
+
+    The decoupled backends measure each chunk's wall time on the worker
+    (``HostPoolBackend`` / ``SlurmArrayBackend``) and call
+    :meth:`observe` with the dispatch permutation, attributing
+    ``duration / chunk_size`` to every real slot in the chunk. The traced
+    ``__call__`` reads the current table through ``jax.pure_callback``, so
+    each generation's :func:`balanced_permutation` sees fresh estimates
+    without retracing. Requires a decoupled backend — inline SPMD
+    evaluation exposes no per-lane timings.
+    """
+
+    def __init__(self, alpha: float = 0.25, init_cost: float = 1.0):
+        if not 0.0 < alpha <= 1.0:
+            raise ValueError(f"alpha must be in (0, 1]: {alpha}")
+        self.alpha = float(alpha)
+        self.init_cost = float(init_cost)
+        self._est: Optional[np.ndarray] = None
+        self._lock = threading.Lock()
+        self.updates = 0
+
+    def snapshot(self, n: int) -> np.ndarray:
+        """Current (n,) cost estimates (lazily initialized to uniform)."""
+        with self._lock:
+            if self._est is None or self._est.shape[0] != int(n):
+                self._est = np.full((int(n),), self.init_cost, np.float32)
+            return self._est.copy()
+
+    def observe(self, perm, chunk_sizes, durations) -> None:
+        """Fold measured per-chunk wall times back into the estimates.
+
+        perm: the (padded) dispatch permutation the chunks were taken
+        from; entries ``>= n`` (sentinel pads) are skipped. Every real
+        slot in chunk ``w`` is charged ``durations[w] / chunk_sizes[w]``.
+        """
+        perm = np.asarray(perm)
+        with self._lock:
+            if self._est is None:
+                return                      # no reader yet — nothing keyed
+            n = self._est.shape[0]
+            a = self.alpha
+            off = 0
+            for size, dur in zip(chunk_sizes, durations):
+                idx = perm[off:off + size]
+                off += size
+                idx = idx[idx < n]
+                if idx.size:
+                    per_item = np.float32(dur / max(size, 1))
+                    self._est[idx] = ((1.0 - a) * self._est[idx]
+                                      + a * per_item)
+            self.updates += 1
+
+    def reset(self) -> None:
+        """Drop learned state (e.g. after an elastic resize re-keys
+        slots)."""
+        with self._lock:
+            self._est = None
+
+    def __call__(self, genomes: jax.Array) -> jax.Array:
+        n = genomes.shape[0]
+        shape = jax.ShapeDtypeStruct((n,), jnp.float32)
+        # genomes as operand: orders the read after the previous
+        # generation's evaluate (whose observe() updated the table)
+        return jax.pure_callback(
+            lambda g: self.snapshot(g.shape[0]), shape, genomes)
+
+
+# ---------------------------------------------------------------------------
 # Dispatch backends — the paper's pluggable "simulation backend" container
 # ---------------------------------------------------------------------------
 
@@ -118,7 +297,15 @@ class InlineBackend:
         return self.fitness_fn(genomes)
 
 
-class HostPoolBackend:
+def _timed_eval(fn: Callable, chunk: np.ndarray):
+    """Evaluate one chunk, returning (fitness, wall_seconds). Module-level
+    so process pools can pickle it alongside a picklable ``fn``."""
+    t0 = time.perf_counter()
+    out = np.asarray(fn(chunk), np.float32).reshape(len(chunk), -1)
+    return out, time.perf_counter() - t0
+
+
+class HostPoolBackend(PureCallbackBridge):
     """Decoupled evaluation on a host executor pool via ``pure_callback``.
 
     For external / embedded simulators (subprocess powerflow binaries,
@@ -132,18 +319,39 @@ class HostPoolBackend:
     Process pools use the *spawn* start method and are created eagerly at
     construction: forking lazily from inside a running XLA host callback
     deadlocks (the forked child inherits the runtime's held locks).
+
+    Hardening: ``chunk_timeout_s`` bounds each chunk's *execution* wall
+    time (time queued behind a full pool does not count); a straggling or
+    failed chunk is re-submitted to the pool up to ``max_retries`` times
+    (speculative re-queue — a hung worker thread keeps its slot, the
+    retry races it). ``close()`` *drains*
+    in-flight callbacks before shutting the pool down — the engine's
+    pipelined epoch loop can still have a ``pure_callback`` executing when
+    the caller tears the backend down — and the class is a context
+    manager. ``cost_ema`` (a :class:`CostEMA`) receives measured per-chunk
+    wall times when the broker dispatches with a permutation.
     """
 
     name = "host-pool"
 
     def __init__(self, fitness_fn: Callable, *, num_objectives: int = 1,
-                 num_workers: int = 4, executor: str = "thread"):
+                 num_workers: int = 4, executor: str = "thread",
+                 chunk_timeout_s: Optional[float] = None,
+                 max_retries: int = 2,
+                 cost_ema: Optional[CostEMA] = None):
         if executor not in ("thread", "process"):
             raise ValueError(f"executor must be thread|process: {executor}")
         self.fitness_fn = fitness_fn
         self.num_objectives = num_objectives
         self.num_workers = max(1, num_workers)
         self.executor = executor
+        self.chunk_timeout_s = chunk_timeout_s
+        self.max_retries = max_retries
+        self.cost_ema = cost_ema
+        self.stats = {"retries": 0}
+        self._cond = threading.Condition()
+        self._inflight = 0
+        self._closing = False
         # eager pool creation — lazy init inside the host callback would
         # race under the engine's pipelined epoch loop (two in-flight
         # callbacks), and forking from a running XLA callback deadlocks
@@ -156,27 +364,61 @@ class HostPoolBackend:
                 max_workers=self.num_workers,
                 mp_context=mp.get_context("spawn"))
 
-    def _host_eval(self, genomes: np.ndarray) -> np.ndarray:
-        pool = self._pool
-        if pool is None:
-            raise RuntimeError("HostPoolBackend used after close()")
-        n = genomes.shape[0]
-        chunks = np.array_split(genomes, min(self.num_workers, max(1, n)))
-        futs = [pool.submit(self.fitness_fn, c) for c in chunks]
-        out = np.concatenate(
-            [np.asarray(f.result(), np.float32).reshape(len(c), -1)
-             for f, c in zip(futs, chunks)], axis=0)
-        return np.ascontiguousarray(out, np.float32)
+    def _host_eval(self, genomes: np.ndarray,
+                   perm: Optional[np.ndarray] = None) -> np.ndarray:
+        with self._cond:
+            if self._closing or self._pool is None:
+                raise RuntimeError("HostPoolBackend used after close()")
+            self._inflight += 1
+            pool = self._pool
+        try:
+            n = genomes.shape[0]
+            chunks = np.array_split(genomes,
+                                    min(self.num_workers, max(1, n)))
 
-    def __call__(self, genomes: jax.Array) -> jax.Array:
-        shape = jax.ShapeDtypeStruct(
-            (genomes.shape[0], self.num_objectives), jnp.float32)
-        return jax.pure_callback(self._host_eval, shape, genomes)
+            def submit(i, chunk, attempt):
+                return pool.submit(_timed_eval, self.fitness_fn, chunk)
+
+            def wait(i, fut, timeout_s):
+                if timeout_s is None:
+                    return fut.result()
+                # the straggler clock starts when the chunk begins
+                # executing — time spent queued behind a full pool (e.g.
+                # after resize() raised num_workers past the pool size)
+                # must not count as straggling
+                while not (fut.running() or fut.done()):
+                    time.sleep(0.005)
+                return fut.result(timeout=timeout_s)
+
+            def on_retry(i, attempt, exc):
+                self.stats["retries"] += 1
+
+            outs = run_chunks_retry(chunks, submit, wait,
+                                    timeout_s=self.chunk_timeout_s,
+                                    max_retries=self.max_retries,
+                                    on_retry=on_retry)
+            return collect_chunk_results(outs, self.cost_ema, perm,
+                                         [len(c) for c in chunks])
+        finally:
+            with self._cond:
+                self._inflight -= 1
+                self._cond.notify_all()
 
     def close(self):
-        if self._pool is not None:
-            self._pool.shutdown(wait=False)
-            self._pool = None
+        """Drain in-flight host callbacks, then shut the pool down. Safe
+        to call more than once. The drain guarantees every result anyone
+        is waiting on has been delivered; shutdown then does NOT join the
+        worker threads — a truly hung simulator thread (abandoned by a
+        timed-out chunk whose retry won the race) would block close()
+        forever."""
+        with self._cond:
+            if self._pool is None:
+                return
+            self._closing = True
+            while self._inflight:
+                self._cond.wait()
+            pool, self._pool = self._pool, None
+        pool.shutdown(wait=False)
 
 
 # ---------------------------------------------------------------------------
@@ -206,6 +448,12 @@ class Broker:
         self.fitness_fn = fitness_fn or getattr(backend, "fitness_fn", None)
         self.cost_fn = cost_fn
         self.num_workers = max(1, num_workers)
+        # learned cost model: wire the EMA into a decoupled backend that
+        # can report measured per-chunk wall times back to it
+        if (isinstance(cost_fn, CostEMA)
+                and hasattr(backend, "cost_ema")
+                and getattr(backend, "cost_ema") is None):
+            backend.cost_ema = cost_fn
 
     def _identity_stats(self) -> dict:
         one = jnp.ones(())
@@ -229,7 +477,13 @@ class Broker:
         n_pad = perm.shape[0]
         real = perm < n                                     # pad mask
         shuffled = padded_take(genomes, perm, n)            # the "all-to-all"
-        fit_shuf = self.backend(shuffled)
+        if (getattr(self.backend, "cost_ema", None) is not None
+                and hasattr(self.backend, "eval_with_perm")):
+            # decoupled backend measures per-chunk wall times and feeds
+            # them back into the EMA cost model, keyed through `perm`
+            fit_shuf = self.backend.eval_with_perm(shuffled, perm)
+        else:
+            fit_shuf = self.backend(shuffled)
         inv = inverse_permutation(perm, n)
         fit = jnp.take(fit_shuf, inv, axis=0)
         # stats: per-worker predicted load skew (max/mean), before/after;

@@ -16,6 +16,7 @@ additionally batches how often the pending queue is drained.
 """
 from __future__ import annotations
 
+import dataclasses
 import time
 from typing import Callable, Optional
 
@@ -62,21 +63,32 @@ class GAEngine:
         self.log_fn = log_fn
         self.sync_every = max(1, sync_every)
         self.pipeline_depth = max(0, pipeline_depth)
+        # exact eval counting past 2^31: the device counter is i32 without
+        # x64 (wraps after ~128 epochs at 3,500-core scale), so the engine
+        # accumulates per-epoch increments into an unbounded host int,
+        # checkpointed alongside the device counter as "evals_host"
+        self.evals_host: int = 0
         # donation aliases the input population buffers to the output on
         # backends that support it (TPU/GPU); CPU ignores donation, so skip
         # it there to avoid per-compile warnings
         self._donate = jax.default_backend() != "cpu"
-        self._epoch_step = jax.jit(make_epoch_step(cfg, self.broker, ctx),
-                                   donate_argnums=(0,) if self._donate
-                                   else ())
+        self._build_steps()
+
+    def _build_steps(self) -> None:
+        """(Re)jit the epoch/init steps for the current cfg + broker —
+        called at construction and after an elastic :meth:`resize`."""
+        self._epoch_step = jax.jit(
+            make_epoch_step(self.cfg, self.broker, self.ctx),
+            donate_argnums=(0,) if self._donate else ())
         self._init_eval = jax.jit(
-            lambda pop: evaluate_population(cfg, self.broker, pop))
+            lambda pop: evaluate_population(self.cfg, self.broker, pop))
 
     # ------------------------------------------------------------------
     def init(self, seed: Optional[int] = None) -> Population:
         rng = jax.random.PRNGKey(self.cfg.seed if seed is None else seed)
         pop = init_population(self.cfg, rng)
         pop = constrain_pop(pop, self.ctx)
+        self.evals_host = self.cfg.global_pop
         return self._init_eval(pop)
 
     def restore(self, step: Optional[int] = None) -> Optional[Population]:
@@ -85,10 +97,63 @@ class GAEngine:
         state = self.checkpointer.restore(step)
         if state is None:
             return None
+        # exact host-side counter rides along the device counter; older
+        # checkpoints (no "evals_host") seed it from the stored value
+        # BEFORE the i32 downcast, so a legacy count past 2^31 stays exact
+        host = state.pop("evals_host", None)
+        evals64 = np.asarray(state["evals"]).astype(np.int64)
+        self.evals_host = (int(host) if host is not None
+                           else max(0, int(evals64)))
         # pre-int checkpoints stored the eval counter as f32; normalize
-        state["evals"] = jnp.asarray(
-            np.asarray(state["evals"]).astype(np.int64)).astype(evals_dtype())
+        state["evals"] = jnp.asarray(evals64).astype(evals_dtype())
         return Population(**state)
+
+    def _checkpoint_state(self, pop: Population) -> dict:
+        state = dict(pop._asdict())
+        state["evals_host"] = np.uint64(self.evals_host)
+        return state
+
+    # ------------------------------------------------------------------
+    def resize(self, pop: Population, new_islands: int, *,
+               rng: Optional[jax.Array] = None,
+               num_workers: Optional[int] = None) -> Population:
+        """Elastic lane re-balance: repartition ``pop`` onto
+        ``new_islands`` islands (``runtime/elastic.repartition_islands``)
+        and rebuild the broker's balanced assignment for the resized
+        fleet — ``num_workers`` scales proportionally with the island
+        count unless given explicitly, and the epoch step is re-jitted so
+        the new lane count never collides with stale traces. Grown
+        populations (clones marked +inf) are re-evaluated before the
+        engine continues. Dispatch permutations never change fitness
+        values, so a re-balanced run tracks a fixed-lane run exactly on
+        deterministic fitness."""
+        old_islands = pop.genomes.shape[0]
+        if rng is None:
+            rng = jax.random.fold_in(jax.random.PRNGKey(self.cfg.seed),
+                                     1000 + new_islands)
+        from repro.runtime.elastic import repartition_islands
+        pop = repartition_islands(self.cfg, pop, new_islands, rng)
+        self.cfg = dataclasses.replace(self.cfg, num_islands=new_islands)
+        if num_workers is None:
+            num_workers = max(
+                1, self.broker.num_workers * new_islands // old_islands)
+        self.broker = Broker(self.broker.fitness_fn, self.broker.cost_fn,
+                             num_workers=num_workers,
+                             backend=self.broker.backend)
+        backend = self.broker.backend
+        if hasattr(backend, "num_workers"):
+            # decoupled backends chunk by their own num_workers; keep the
+            # split aligned with the broker's lane boundaries (executor
+            # pool sizes stay as constructed — extra chunks just queue)
+            backend.num_workers = num_workers
+        if hasattr(self.broker.cost_fn, "reset"):
+            self.broker.cost_fn.reset()      # slot-keyed EMA: N changed
+        self._build_steps()
+        pop = constrain_pop(pop, self.ctx)
+        if bool(jax.device_get(jnp.any(jnp.isinf(pop.fitness)))):
+            pop = self._init_eval(pop)       # grow path: evaluate clones
+            self.evals_host += self.cfg.global_pop
+        return pop
 
     # ------------------------------------------------------------------
     def _drain(self, pending: list, history: list, keep: int = 0) -> None:
@@ -116,19 +181,28 @@ class GAEngine:
         cfg = self.cfg
         if pop is None:
             pop = self.restore() or self.init()
-        elif self._donate:
-            # first epoch_step donates its input; copy so the CALLER's
-            # population survives (every later step donates engine-internal
-            # buffers, so the aliasing win is kept for the whole loop)
-            pop = jax.tree_util.tree_map(jnp.copy, pop)
+        else:
+            if self.evals_host == 0:
+                # externally supplied population: seed the exact host
+                # counter from the device value (exact until first wrap)
+                self.evals_host = max(0, int(jax.device_get(pop.evals)))
+            if self._donate:
+                # first epoch_step donates its input; copy so the CALLER's
+                # population survives (every later step donates
+                # engine-internal buffers, so the aliasing win is kept for
+                # the whole loop)
+                pop = jax.tree_util.tree_map(jnp.copy, pop)
         epochs = epochs if epochs is not None else cfg.num_epochs
         history = []
         t0 = time.monotonic()
         pending = []                                   # in-flight metrics
         start_epoch = int(jax.device_get(pop.epoch))
+        evals_per_epoch = (cfg.generations_per_epoch
+                           * pop.genomes.shape[0] * pop.genomes.shape[1])
 
         for e in range(start_epoch, start_epoch + epochs):
             pop, metrics = self._epoch_step(pop)
+            self.evals_host += evals_per_epoch         # exact, unbounded
             _start_host_copy(metrics)                  # non-blocking D2H
             pending.append((e, metrics))
             if (e + 1) % self.sync_every == 0:
@@ -144,12 +218,13 @@ class GAEngine:
                     break
             if self.checkpointer and self.checkpoint_every and \
                     (e + 1) % self.checkpoint_every == 0:
-                self.checkpointer.save(dict(pop._asdict()), step=e + 1)
+                self.checkpointer.save(self._checkpoint_state(pop),
+                                       step=e + 1)
             if wallclock_s is not None and time.monotonic() - t0 > wallclock_s:
                 break
         self._drain(pending, history, keep=0)
         if self.checkpointer and self.checkpoint_every:
-            self.checkpointer.save(dict(pop._asdict()),
+            self.checkpointer.save(self._checkpoint_state(pop),
                                    step=int(jax.device_get(pop.epoch)))
         return pop, history
 

@@ -1,0 +1,63 @@
+"""Shared plumbing for decoupled (host-side) dispatch backends.
+
+Both ``broker.HostPoolBackend`` and ``runtime.batchq.SlurmArrayBackend``
+bridge out of the XLA program the same way: a ``jax.pure_callback`` around
+a host-side ``_host_eval(genomes, perm=None)`` that chunks the batch,
+executes it somewhere, measures per-chunk wall times, and reports them to
+an optional ``CostEMA``. This module holds that common surface once.
+
+Import discipline: NO jax at module scope — ``runtime.batchq`` is imported
+by numpy-only array-task workers whose interpreter startup is on the
+critical path; jax is imported lazily inside the bridged calls, which only
+ever run on the submitting host.
+"""
+from __future__ import annotations
+
+from typing import List, Optional
+
+import numpy as np
+
+
+class PureCallbackBridge:
+    """Mixin: DispatchBackend surface over a host-side ``_host_eval``.
+
+    Subclasses provide ``num_objectives``, ``close()``, and
+    ``_host_eval(genomes, perm=None) -> (N, O) float32``.
+    """
+
+    def _out_shape(self, genomes):
+        import jax
+        import jax.numpy as jnp
+        return jax.ShapeDtypeStruct(
+            (genomes.shape[0], self.num_objectives), jnp.float32)
+
+    def __call__(self, genomes):
+        import jax
+        return jax.pure_callback(self._host_eval, self._out_shape(genomes),
+                                 genomes)
+
+    def eval_with_perm(self, genomes, perm):
+        """Evaluate the shuffled batch and report measured per-chunk wall
+        times to ``cost_ema``, keyed through the dispatch permutation."""
+        import jax
+        return jax.pure_callback(self._host_eval, self._out_shape(genomes),
+                                 genomes, perm)
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc_info):
+        self.close()
+        return False
+
+
+def collect_chunk_results(outs: List[tuple], cost_ema,
+                          perm: Optional[np.ndarray],
+                          chunk_sizes: List[int]) -> np.ndarray:
+    """Common epilogue of a chunked host evaluation: feed measured
+    per-chunk durations to the EMA cost model (when dispatch supplied a
+    permutation) and concatenate the fitness chunks."""
+    if cost_ema is not None and perm is not None:
+        cost_ema.observe(perm, chunk_sizes, [d for _, d in outs])
+    out = np.concatenate([o for o, _ in outs], axis=0)
+    return np.ascontiguousarray(out, np.float32)

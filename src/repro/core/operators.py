@@ -109,9 +109,12 @@ def variation(rng: jax.Array, parents: jax.Array, *, eta_cx, prob_cx,
               use_kernel: bool = False) -> jax.Array:
     """SBX over consecutive parent pairs, then polynomial mutation.
 
-    parents: (P, G) (P even) -> offspring (P, G).
+    parents: (P, G) -> offspring (P, G). With P odd the unpaired last
+    parent skips crossover and goes through mutation only (the fused
+    kernel pairs parents, so odd P always takes the unfused path).
     """
-    if use_kernel:
+    p = parents.shape[0]
+    if use_kernel and p % 2 == 0:
         try:
             from repro.kernels.genetic import ops as gk
             return gk.fused_variation(
@@ -121,9 +124,12 @@ def variation(rng: jax.Array, parents: jax.Array, *, eta_cx, prob_cx,
         except Exception:
             pass
     k1, k2 = jax.random.split(rng)
-    p1, p2 = parents[0::2], parents[1::2]
+    paired = parents[:p - 1] if p % 2 else parents
+    p1, p2 = paired[0::2], paired[1::2]
     o1, o2 = sbx_crossover(k1, p1, p2, eta=eta_cx, prob=prob_cx,
                            lower=lower, upper=upper)
-    off = jnp.stack([o1, o2], axis=1).reshape(parents.shape)
+    off = jnp.stack([o1, o2], axis=1).reshape(paired.shape)
+    if p % 2:
+        off = jnp.concatenate([off, parents[p - 1:]], axis=0)
     return polynomial_mutation(k2, off, eta=eta_mut, prob=prob_mut,
                                indpb=indpb, lower=lower, upper=upper)

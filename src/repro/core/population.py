@@ -29,7 +29,9 @@ def evals_dtype():
     """Exact integer dtype for the evaluation counter: i64 when x64 is
     enabled, else i32 (exact to 2.1e9 vs f32's 1.6e7; without x64 jax
     cannot hold an i64 leaf, so ~128 epochs at 3,500-core scale still
-    overflows — host-side u64 accumulation is a ROADMAP item)."""
+    wraps the device counter — ``GAEngine.evals_host`` accumulates the
+    exact unbounded count host-side and checkpoints it as
+    ``evals_host``)."""
     return jnp.int64 if jax.config.jax_enable_x64 else jnp.int32
 
 

@@ -1,0 +1,68 @@
+"""Numpy-only host simulators (the decoupled "simulation container").
+
+Counterparts of ``repro.fitness.benchmarks`` for the decoupled dispatch
+backends: batch-queue array tasks (``repro.runtime.batchq``) resolve these
+by import spec (``"repro.fitness.hostsim:sphere"``) and stay numpy-only —
+no jax import on the worker's critical startup path. Same contract:
+genomes ``(N, G)`` -> fitness ``(N, 1)`` float32, minimized.
+
+``delay_sphere`` adds a real per-individual ``sleep`` (the paper §4.1
+overhead study's load model — possible here because host workers, unlike
+jitted code, can block), giving the broker's cost model something
+genuinely heterogeneous to balance. ``always_fail`` exercises the
+retry/re-queue path.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+
+def sphere(genomes) -> np.ndarray:
+    g = np.asarray(genomes, np.float32)
+    return np.sum(g * g, axis=-1, keepdims=True).astype(np.float32)
+
+
+def rastrigin(genomes) -> np.ndarray:
+    g = np.asarray(genomes, np.float32)
+    return (10.0 * g.shape[-1]
+            + np.sum(g * g - 10.0 * np.cos(2 * np.pi * g), axis=-1,
+                     keepdims=True)).astype(np.float32)
+
+
+def rosenbrock(genomes) -> np.ndarray:
+    g = np.asarray(genomes, np.float32)
+    x0, x1 = g[..., :-1], g[..., 1:]
+    return np.sum(100.0 * (x1 - x0 ** 2) ** 2 + (1 - x0) ** 2, axis=-1,
+                  keepdims=True).astype(np.float32)
+
+
+def ackley(genomes) -> np.ndarray:
+    g = np.asarray(genomes, np.float32)
+    d = g.shape[-1]
+    s1 = np.sqrt(np.sum(g * g, -1) / d)
+    s2 = np.sum(np.cos(2 * np.pi * g), -1) / d
+    return (-20.0 * np.exp(-0.2 * s1) - np.exp(s2)
+            + 20.0 + np.e)[..., None].astype(np.float32)
+
+
+def griewank(genomes) -> np.ndarray:
+    g = np.asarray(genomes, np.float32)
+    i = np.sqrt(np.arange(1, g.shape[-1] + 1, dtype=g.dtype))
+    return (np.sum(g * g, -1) / 4000.0
+            - np.prod(np.cos(g / i), -1) + 1.0)[..., None].astype(np.float32)
+
+
+def delay_sphere(genomes, *, slow_s: float = 0.004) -> np.ndarray:
+    """Sphere with a real sleep per *slow* individual (``genomes[:, 0] >
+    0``): heterogeneous evaluation cost for cost-model tests/benchmarks.
+    The sleep is per chunk (sum over its slow members), exactly the
+    makespan a balanced dispatch should spread across lanes."""
+    g = np.asarray(genomes, np.float32)
+    time.sleep(slow_s * float(np.sum(g[:, 0] > 0)))
+    return sphere(g)
+
+
+def always_fail(genomes) -> np.ndarray:
+    raise RuntimeError("hostsim.always_fail: simulated simulator crash")

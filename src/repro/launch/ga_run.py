@@ -10,6 +10,10 @@ Usage:
   PYTHONPATH=src python -m repro.launch.ga_run --fitness hvdc \
       --grid-size 60 --epochs 10
   PYTHONPATH=src python -m repro.launch.ga_run --fitness lm --epochs 3
+  # batch-scheduled simulation backend (SLURM array jobs; use slurm-mock
+  # to exercise the same spool path on local subprocesses)
+  PYTHONPATH=src python -m repro.launch.ga_run --fitness sphere \
+      --dispatch-backend slurm --slurm-partition compute --cost-ema
 """
 from __future__ import annotations
 
@@ -92,44 +96,101 @@ def main(argv=None):
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--wallclock-s", type=float, default=None)
     ap.add_argument("--dispatch-backend", default="inline",
-                    choices=("inline", "host-thread", "host-process"),
+                    choices=("inline", "host-thread", "host-process",
+                             "slurm", "slurm-mock"),
                     help="inline: fitness traced into the XLA program; "
                          "host-*: decoupled simulation backend on a host "
-                         "executor pool (external/embedded simulators)")
+                         "executor pool (external/embedded simulators); "
+                         "slurm: batch-scheduled array jobs via sbatch; "
+                         "slurm-mock: same spool path on local "
+                         "subprocesses (no cluster needed)")
     ap.add_argument("--num-workers", type=int, default=None,
                     help="broker dispatch lanes (default: dp shards)")
+    ap.add_argument("--spool-dir", default=None,
+                    help="batch-dispatch spool directory (slurm backends; "
+                         "default: a fresh temp dir)")
+    ap.add_argument("--chunk-timeout-s", type=float, default=None,
+                    help="per-chunk straggler timeout for decoupled "
+                         "backends, clocked on execution time (re-queued "
+                         "up to 2 times); 0 disables, default: none for "
+                         "host-*, 300 for slurm*")
+    ap.add_argument("--slurm-partition", default=None,
+                    help="sbatch partition for --dispatch-backend slurm")
+    ap.add_argument("--cost-ema", action="store_true",
+                    help="learn the dispatch cost model online from "
+                         "measured per-lane wall times (needs a "
+                         "decoupled backend)")
+    ap.add_argument("--ema-alpha", type=float, default=0.25,
+                    help="EMA smoothing factor for --cost-ema")
     ap.add_argument("--sync-every", type=int, default=1,
                     help="drain metrics every N epochs")
     ap.add_argument("--pipeline-depth", type=int, default=1,
                     help="epochs kept in flight before blocking on metrics")
     args = ap.parse_args(argv)
-    if args.pop % 2:
-        ap.error(f"--pop must be even (SBX crossover pairs parents), "
-                 f"got {args.pop}")
+    # odd --pop is fine: operators.variation carries the unpaired last
+    # parent through mutation-only
 
     cfg, fitness_fn, cost_fn = build(args.fitness, args)
+    if args.cost_ema:
+        if args.dispatch_backend == "inline":
+            ap.error("--cost-ema needs measured per-lane wall times — "
+                     "use a decoupled backend (host-* or slurm*)")
+        from repro.core.broker import CostEMA
+        cost_fn = CostEMA(alpha=args.ema_alpha)
     backend = None
+    # decoupled backends default to 4 workers; the broker's lane count
+    # must match them (not the dp-shard default of 1, which would take
+    # the identity path and never engage the cost model)
+    workers = args.num_workers
     if args.dispatch_backend != "inline":
+        workers = args.num_workers or 4
+    # 0 disables the timeout (falsy-zero must not resurrect the default)
+    timeout = args.chunk_timeout_s or None
+    if args.dispatch_backend.startswith("host-"):
         from repro.core.broker import HostPoolBackend
         backend = HostPoolBackend(
             fitness_fn, num_objectives=cfg.num_objectives,
-            num_workers=args.num_workers or 4,
-            executor=args.dispatch_backend.split("-")[1])
+            num_workers=workers,
+            executor=args.dispatch_backend.split("-")[1],
+            chunk_timeout_s=timeout)
+    elif args.dispatch_backend.startswith("slurm"):
+        from repro.runtime.batchq import (LocalMockScheduler,
+                                          SlurmArrayBackend, SlurmScheduler)
+        scheduler = (SlurmScheduler(partition=args.slurm_partition)
+                     if args.dispatch_backend == "slurm"
+                     else LocalMockScheduler())
+        # named benchmarks resolve to numpy-only host simulators so array
+        # tasks skip the jax import; other fitness callables are pickled
+        from repro.fitness import hostsim
+        fn_spec = (f"repro.fitness.hostsim:{args.fitness}"
+                   if hasattr(hostsim, args.fitness) else None)
+        backend = SlurmArrayBackend(
+            fitness_fn, fn_spec=fn_spec,
+            num_objectives=cfg.num_objectives,
+            num_workers=workers,
+            scheduler=scheduler, spool_dir=args.spool_dir,
+            chunk_timeout_s=(300.0 if args.chunk_timeout_s is None
+                             else timeout))
     plan = plan_scaling(len(jax.devices()), pop_total=cfg.global_pop,
                         sim_parallelism=max(args.contingencies, 1))
     print(f"scaling plan: horizontal={plan.horizontal} "
           f"vertical={plan.vertical}")
     ckpt = Checkpointer(args.ckpt_dir) if args.ckpt_dir else None
     eng = GAEngine(cfg, fitness_fn, cost_fn=cost_fn, backend=backend,
-                   num_workers=args.num_workers, checkpointer=ckpt,
+                   num_workers=workers, checkpointer=ckpt,
                    checkpoint_every=2 if ckpt else 0,
                    sync_every=args.sync_every,
                    pipeline_depth=args.pipeline_depth,
                    log_fn=lambda r: print(
                        f"epoch {r['epoch']:4d} best {r['best']:.5f} "
                        f"skew {r['skew']:.3f}"))
-    pop, hist = eng.run(wallclock_s=args.wallclock_s)
-    g, f = eng.best(pop)
+    try:
+        pop, hist = eng.run(wallclock_s=args.wallclock_s)
+        g, f = eng.best(pop)
+    finally:
+        if backend is not None:
+            backend.close()      # drain in-flight callbacks, free the
+                                 # pool / temp spool
     print(f"best fitness: {f[0]:.6f}")
     print(f"best genome:  {np.round(g, 4)}")
     return pop, hist

@@ -1,5 +1,30 @@
-"""Runtime resilience: fault tolerance, straggler mitigation, elasticity."""
-from repro.runtime.elastic import repartition_islands
-from repro.runtime.straggler import backup_dispatch_eval
+"""Runtime resilience: fault tolerance, straggler mitigation, elasticity,
+and batch-scheduled (SLURM-style) dispatch.
 
-__all__ = ["repartition_islands", "backup_dispatch_eval"]
+Exports resolve lazily (PEP 562): the batch-queue worker entrypoint
+(``python -m repro.runtime.batchq --worker …``) imports this package on
+startup, and eager re-exports would drag jax into every array task —
+interpreter startup is on the critical path at cluster scale.
+"""
+import importlib
+
+_EXPORTS = {
+    "repartition_islands": "repro.runtime.elastic",
+    "backup_dispatch_eval": "repro.runtime.straggler",
+    "SlurmArrayBackend": "repro.runtime.batchq",
+    "SlurmScheduler": "repro.runtime.batchq",
+    "LocalMockScheduler": "repro.runtime.batchq",
+    "Scheduler": "repro.runtime.batchq",
+}
+
+__all__ = list(_EXPORTS)
+
+
+def __getattr__(name):
+    if name in _EXPORTS:
+        return getattr(importlib.import_module(_EXPORTS[name]), name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(set(globals()) | set(_EXPORTS))

@@ -1,0 +1,494 @@
+"""Batch-scheduled dispatch: the paper's K8s<->SLURM portability story.
+
+CHAMB-GA §1 claims seamless migration of the simulation microservice
+between Kubernetes and SLURM. On the K8s side the broker's decoupled
+backends (``HostPoolBackend``) stand in for the containerized worker pool;
+this module adds the SLURM side: :class:`SlurmArrayBackend` implements the
+same ``DispatchBackend`` protocol by *spooling* each evaluation batch to a
+shared filesystem and submitting it as array-job work items through a
+pluggable :class:`Scheduler`.
+
+Flow per ``evaluate`` call (see the "Batch-scheduled dispatch" section of
+``repro.core.broker`` for the spool layout):
+
+1. the (shuffled, padded) genome batch is split into ``num_workers``
+   chunks, each written to ``<spool>/job_NNNNNN/chunk_IIII_tryT.npz``;
+2. the scheduler submits one array-job work item per chunk — real
+   ``sbatch --array`` for :class:`SlurmScheduler`, a subprocess or thread
+   per chunk for :class:`LocalMockScheduler`;
+3. each work item runs ``python -m repro.runtime.batchq --worker <chunk>``
+   which loads the chunk, resolves the fitness function (import spec or
+   pickle), evaluates, and atomically writes ``*.result.npz`` carrying the
+   fitness plus the measured wall time (fed to the broker's ``CostEMA``);
+4. the backend polls result files with a per-chunk timeout measured from
+   submission; stragglers and failures are *re-queued* as fresh attempts
+   through :func:`repro.core.broker.run_chunks_retry` — the same
+   timeout/retry wrapper that hardens ``HostPoolBackend``.
+
+Import discipline: jax is imported lazily inside the backend methods so
+the worker entrypoint stays numpy-only — at 3,500-core scale the array
+tasks' interpreter startup is on the critical path, and a fitness function
+that needs jax pays for it only when it actually imports it.
+"""
+from __future__ import annotations
+
+import importlib
+import json
+import os
+import pickle
+import subprocess
+import sys
+import tempfile
+import threading
+import time
+import traceback
+from typing import Callable, List, Optional, Protocol, runtime_checkable
+
+import numpy as np
+
+from repro.core.hostbridge import PureCallbackBridge, collect_chunk_results
+
+_PAYLOAD = "payload.json"
+_FN_PKL = "fn.pkl"
+
+# directory containing the `repro` package — exported to worker
+# subprocesses so `python -m repro.runtime.batchq` resolves
+_SRC_ROOT = os.path.dirname(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))))
+
+
+# ---------------------------------------------------------------------------
+# Chunk files (spool protocol)
+# ---------------------------------------------------------------------------
+
+def chunk_path(job_dir: str, index: int, attempt: int) -> str:
+    return os.path.join(job_dir, f"chunk_{index:04d}_try{attempt}.npz")
+
+
+def result_path(chunk: str) -> str:
+    return chunk[:-len(".npz")] + ".result.npz"
+
+
+def fail_path(chunk: str) -> str:
+    return chunk[:-len(".npz")] + ".fail"
+
+
+def _atomic_savez(path: str, **arrays) -> None:
+    """Write-then-rename so a polling reader never sees a torn file."""
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        np.savez(f, **arrays)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, path)
+
+
+def resolve_fn(job_dir: str) -> Callable:
+    """Fitness callable for a job: import spec first, pickle fallback."""
+    with open(os.path.join(job_dir, _PAYLOAD)) as f:
+        payload = json.load(f)
+    spec = payload.get("fn_spec")
+    if spec:
+        mod, _, attr = spec.partition(":")
+        return getattr(importlib.import_module(mod), attr)
+    with open(os.path.join(job_dir, _FN_PKL), "rb") as f:
+        return pickle.load(f)
+
+
+def run_worker(chunk: str) -> int:
+    """Array-task body: evaluate one spooled chunk. Exceptions become a
+    ``.fail`` marker (so the polling backend re-queues) + nonzero exit."""
+    try:
+        fn = resolve_fn(os.path.dirname(chunk))
+        genomes = np.load(chunk)["genomes"]
+        t0 = time.perf_counter()
+        fit = np.asarray(fn(genomes), np.float32).reshape(len(genomes), -1)
+        duration = time.perf_counter() - t0
+        _atomic_savez(result_path(chunk), fitness=fit,
+                      duration=np.float64(duration))
+        return 0
+    except Exception:
+        tb = traceback.format_exc()
+        try:
+            # write-then-rename: the polling backend must never read a
+            # partial traceback (it raises ChunkFailure with this text)
+            tmp = fail_path(chunk) + ".tmp"
+            with open(tmp, "w") as f:
+                f.write(tb)
+                f.flush()
+                os.fsync(f.fileno())
+            os.replace(tmp, fail_path(chunk))
+        except OSError:
+            pass
+        sys.stderr.write(tb)
+        return 1
+
+
+# ---------------------------------------------------------------------------
+# Schedulers
+# ---------------------------------------------------------------------------
+
+@runtime_checkable
+class Scheduler(Protocol):
+    """Submits spooled chunks as batch work items and tracks their state."""
+
+    name: str
+
+    def submit(self, chunk_paths: List[str], *, job_dir: str) -> List[str]:
+        """Submit one work item per chunk path; returns opaque handles."""
+        ...
+
+    def poll(self, handle: str) -> str:
+        """-> "pending" | "running" | "done" | "failed" | "unknown"."""
+        ...
+
+    def cancel(self, handle: str) -> None: ...
+
+
+class LocalMockScheduler:
+    """Runs chunks locally — subprocesses (the CI stand-in for a cluster)
+    or threads (fast conformance tests without interpreter startup). Both
+    execute the exact worker code path (:func:`run_worker`).
+
+    ``hang_substrings`` simulates lost/straggling nodes: a chunk whose
+    filename contains any of them is accepted but never started, so the
+    backend's per-chunk timeout fires and re-queues it (the retry file has
+    a different ``tryT`` suffix and therefore runs).
+    """
+
+    name = "local-mock"
+
+    def __init__(self, mode: str = "subprocess",
+                 hang_substrings: tuple = (),
+                 python: Optional[str] = None):
+        if mode not in ("subprocess", "thread"):
+            raise ValueError(f"mode must be subprocess|thread: {mode}")
+        self.mode = mode
+        self.hang_substrings = tuple(hang_substrings)
+        self.python = python or sys.executable
+        self._lock = threading.Lock()
+        self._tasks: dict = {}
+        self._seq = 0
+
+    def submit(self, chunk_paths: List[str], *, job_dir: str) -> List[str]:
+        handles = []
+        for path in chunk_paths:
+            with self._lock:
+                handle = f"mock_{self._seq}"
+                self._seq += 1
+            if any(s in os.path.basename(path)
+                   for s in self.hang_substrings):
+                task = None                      # lost node: never starts
+            elif self.mode == "subprocess":
+                env = dict(os.environ)
+                env["PYTHONPATH"] = _SRC_ROOT + (
+                    os.pathsep + env["PYTHONPATH"]
+                    if env.get("PYTHONPATH") else "")
+                task = subprocess.Popen(
+                    [self.python, "-m", "repro.runtime.batchq",
+                     "--worker", path],
+                    env=env, stdout=subprocess.DEVNULL,
+                    stderr=subprocess.DEVNULL)
+            else:
+                task = threading.Thread(target=run_worker, args=(path,),
+                                        daemon=True)
+                task.start()
+            with self._lock:
+                self._tasks[handle] = task
+            handles.append(handle)
+        return handles
+
+    def poll(self, handle: str) -> str:
+        with self._lock:
+            task = self._tasks.get(handle, "missing")
+        if task == "missing":
+            return "unknown"
+        if task is None:
+            return "running"                     # simulated straggler
+        if isinstance(task, threading.Thread):
+            return "running" if task.is_alive() else "done"
+        rc = task.poll()
+        if rc is None:
+            return "running"
+        return "done" if rc == 0 else "failed"
+
+    def cancel(self, handle: str) -> None:
+        with self._lock:
+            task = self._tasks.get(handle)
+        if task is not None and not isinstance(task, threading.Thread):
+            if task.poll() is None:
+                task.kill()
+
+
+class SlurmScheduler:
+    """Real SLURM submission: one ``sbatch --array`` job per batch, task i
+    resolving its chunk path from a manifest by ``$SLURM_ARRAY_TASK_ID``.
+    Handles are ``<jobid>_<taskidx>`` (squeue/scancel address them
+    directly). Retries submit a fresh single-element array job.
+    """
+
+    name = "slurm"
+
+    def __init__(self, *, partition: Optional[str] = None,
+                 time_limit: str = "00:30:00",
+                 sbatch: str = "sbatch", squeue: str = "squeue",
+                 scancel: str = "scancel",
+                 python: Optional[str] = None,
+                 extra_sbatch_args: tuple = ()):
+        self.partition = partition
+        self.time_limit = time_limit
+        self.sbatch = sbatch
+        self.squeue = squeue
+        self.scancel = scancel
+        self.python = python or sys.executable
+        self.extra_sbatch_args = tuple(extra_sbatch_args)
+        self._lock = threading.Lock()
+        self._seq = 0
+
+    def _script(self, manifest: str, job_dir: str) -> str:
+        lines = ["#!/bin/bash",
+                 "#SBATCH --job-name=chambga-eval",
+                 f"#SBATCH --output={job_dir}/slurm-%A_%a.out",
+                 f"#SBATCH --time={self.time_limit}"]
+        if self.partition:
+            lines.append(f"#SBATCH --partition={self.partition}")
+        lines += [
+            f'export PYTHONPATH="{_SRC_ROOT}${{PYTHONPATH:+:$PYTHONPATH}}"',
+            f'CHUNK=$(sed -n "$((SLURM_ARRAY_TASK_ID + 1))p" '
+            f'"{manifest}")',
+            f'exec "{self.python}" -m repro.runtime.batchq '
+            f'--worker "$CHUNK"',
+        ]
+        return "\n".join(lines) + "\n"
+
+    def submit(self, chunk_paths: List[str], *, job_dir: str) -> List[str]:
+        with self._lock:
+            seq = self._seq
+            self._seq += 1
+        manifest = os.path.join(job_dir, f"manifest_{seq:04d}.txt")
+        with open(manifest, "w") as f:
+            f.write("\n".join(chunk_paths) + "\n")
+        script = os.path.join(job_dir, f"array_{seq:04d}.sh")
+        with open(script, "w") as f:
+            f.write(self._script(manifest, job_dir))
+        cmd = [self.sbatch, "--parsable",
+               f"--array=0-{len(chunk_paths) - 1}",
+               *self.extra_sbatch_args, script]
+        out = subprocess.run(cmd, check=True, capture_output=True,
+                             text=True).stdout
+        job_id = out.strip().splitlines()[-1].split(";")[0]
+        return [f"{job_id}_{i}" for i in range(len(chunk_paths))]
+
+    def poll(self, handle: str) -> str:
+        out = subprocess.run(
+            [self.squeue, "-h", "-j", handle, "-o", "%T"],
+            capture_output=True, text=True)
+        if out.returncode != 0:
+            return "unknown"                    # job left the queue
+        state = out.stdout.strip().upper()
+        if not state or state in ("COMPLETED",):
+            return "done"
+        if state in ("PENDING", "CONFIGURING"):
+            return "pending"
+        if state in ("RUNNING", "COMPLETING"):
+            return "running"
+        return "failed"                          # FAILED/TIMEOUT/CANCELLED…
+
+    def cancel(self, handle: str) -> None:
+        subprocess.run([self.scancel, handle], capture_output=True)
+
+
+# ---------------------------------------------------------------------------
+# The backend
+# ---------------------------------------------------------------------------
+
+class SlurmArrayBackend(PureCallbackBridge):
+    """``DispatchBackend`` over a batch scheduler (the paper's SLURM leg).
+
+    fitness_fn: callable pickled into the spool for workers to load, OR
+    fn_spec: ``"module:attr"`` import spec (preferred — numpy-only worker
+    startup). One of the two is required. The backend itself bridges out
+    of the XLA program with ``jax.pure_callback`` exactly like
+    ``HostPoolBackend``; only the execution substrate differs.
+
+    Per-chunk ``chunk_timeout_s`` (clocked from when the work item leaves
+    the scheduler queue — PENDING time doesn't count) + re-queue of
+    stragglers/failures up to ``max_retries`` via the shared
+    ``run_chunks_retry`` driver. ``cost_ema`` receives the workers'
+    measured wall times.
+    """
+
+    name = "slurm-array"
+
+    def __init__(self, fitness_fn: Optional[Callable] = None, *,
+                 fn_spec: Optional[str] = None,
+                 num_objectives: int = 1, num_workers: int = 4,
+                 scheduler: Optional[Scheduler] = None,
+                 spool_dir: Optional[str] = None,
+                 chunk_timeout_s: Optional[float] = 300.0,
+                 max_retries: int = 2,
+                 poll_interval_s: float = 0.02,
+                 cost_ema=None):
+        if fitness_fn is None and not fn_spec:
+            raise ValueError("need fitness_fn (pickled) or fn_spec "
+                             "(module:attr import path)")
+        self.fitness_fn = fitness_fn
+        self.fn_spec = fn_spec
+        self.num_objectives = num_objectives
+        self.num_workers = max(1, num_workers)
+        self.scheduler = scheduler or LocalMockScheduler()
+        self._owns_spool = spool_dir is None
+        self.spool_dir = spool_dir or tempfile.mkdtemp(
+            prefix="chambga-spool-")
+        os.makedirs(self.spool_dir, exist_ok=True)
+        self.chunk_timeout_s = chunk_timeout_s
+        self.max_retries = max_retries
+        self.poll_interval_s = poll_interval_s
+        self.cost_ema = cost_ema
+        self.stats = {"jobs": 0, "retries": 0, "timeouts": 0}
+        self._lock = threading.Lock()
+        self._cond = threading.Condition(self._lock)
+        self._inflight = 0
+        self._seq = 0
+        self._closed = False
+
+    # -- spool helpers --------------------------------------------------
+    def _new_job_dir(self) -> str:
+        with self._lock:
+            seq = self._seq
+            self._seq += 1
+            self.stats["jobs"] += 1
+        job_dir = os.path.join(self.spool_dir, f"job_{seq:06d}")
+        os.makedirs(job_dir)
+        with open(os.path.join(job_dir, _PAYLOAD), "w") as f:
+            json.dump({"num_objectives": self.num_objectives,
+                       "fn_spec": self.fn_spec}, f)
+        if not self.fn_spec:
+            with open(os.path.join(job_dir, _FN_PKL), "wb") as f:
+                pickle.dump(self.fitness_fn, f)
+        return job_dir
+
+    # -- host-side evaluation ------------------------------------------
+    def _host_eval(self, genomes: np.ndarray,
+                   perm: Optional[np.ndarray] = None) -> np.ndarray:
+        with self._cond:
+            if self._closed:
+                raise RuntimeError("SlurmArrayBackend used after close()")
+            self._inflight += 1
+        try:
+            return self._host_eval_inner(genomes, perm)
+        finally:
+            with self._cond:
+                self._inflight -= 1
+                self._cond.notify_all()
+
+    def _host_eval_inner(self, genomes: np.ndarray,
+                         perm: Optional[np.ndarray]) -> np.ndarray:
+        from repro.core.broker import ChunkFailure, run_chunks_retry
+        n = genomes.shape[0]
+        chunks = np.array_split(np.asarray(genomes),
+                                min(self.num_workers, max(1, n)))
+        job_dir = self._new_job_dir()
+
+        def write_chunk(i, chunk, attempt):
+            path = chunk_path(job_dir, i, attempt)
+            _atomic_savez(path, genomes=np.asarray(chunk, np.float32))
+            return path
+
+        def submit(i, chunk, attempt):
+            # retry path: one fresh single-element work item
+            path = write_chunk(i, chunk, attempt)
+            (handle,) = self.scheduler.submit([path], job_dir=job_dir)
+            return (path, handle, time.monotonic())
+
+        # attempt 0 goes out as ONE array submission (a single
+        # `sbatch --array=0-(W-1)` round-trip, not W of them)
+        paths0 = [write_chunk(i, c, 0) for i, c in enumerate(chunks)]
+        handles0 = self.scheduler.submit(paths0, job_dir=job_dir)
+        t0 = time.monotonic()
+        tokens0 = [(p, h, t0) for p, h in zip(paths0, handles0)]
+
+        def wait(i, token, timeout_s):
+            path, handle, _t_submit = token
+            res, fail = result_path(path), fail_path(path)
+            t_clock = None          # starts when the work item leaves the
+                                    # scheduler queue: PENDING time on a
+                                    # busy partition is not straggling
+            while True:
+                if os.path.exists(res):
+                    with np.load(res) as d:
+                        fit = d["fitness"]
+                        dur = float(d["duration"])
+                    if fit.shape != (len(chunks[i]), self.num_objectives):
+                        raise ChunkFailure(
+                            f"chunk {i}: result shape {fit.shape} != "
+                            f"({len(chunks[i])}, {self.num_objectives})")
+                    return np.asarray(fit, np.float32), dur
+                if os.path.exists(fail):
+                    with open(fail) as f:
+                        raise ChunkFailure(
+                            f"chunk {i} worker failed:\n{f.read()}")
+                state = self.scheduler.poll(handle)
+                if state == "failed":
+                    raise ChunkFailure(
+                        f"chunk {i}: scheduler reports failure with no "
+                        f"result file ({path})")
+                if state != "pending" and t_clock is None:
+                    t_clock = time.monotonic()
+                if (timeout_s is not None and t_clock is not None
+                        and time.monotonic() - t_clock > timeout_s):
+                    self.stats["timeouts"] += 1
+                    self.scheduler.cancel(handle)
+                    raise TimeoutError(
+                        f"chunk {i} straggled past {timeout_s}s "
+                        f"(state={state})")
+                time.sleep(self.poll_interval_s)
+
+        def on_retry(i, attempt, exc):
+            self.stats["retries"] += 1
+
+        outs = run_chunks_retry(chunks, submit, wait,
+                                timeout_s=self.chunk_timeout_s,
+                                max_retries=self.max_retries,
+                                on_retry=on_retry,
+                                initial_tokens=tokens0)
+        return collect_chunk_results(outs, self.cost_ema, perm,
+                                     [len(c) for c in chunks])
+
+    def close(self, remove_spool: Optional[bool] = None):
+        """Drain in-flight evaluations (jax dispatch is async — a
+        pure_callback may still be polling the spool when the caller
+        tears the backend down), then mark closed and optionally delete
+        the spool (default: only when the backend created a temp spool
+        itself)."""
+        with self._cond:
+            if self._closed:
+                return
+            self._closed = True
+            while self._inflight:
+                self._cond.wait()
+        if remove_spool is None:
+            remove_spool = self._owns_spool
+        if remove_spool:
+            import shutil
+            shutil.rmtree(self.spool_dir, ignore_errors=True)
+
+
+# ---------------------------------------------------------------------------
+# Worker entrypoint:  python -m repro.runtime.batchq --worker <chunk.npz>
+# ---------------------------------------------------------------------------
+
+def main(argv=None) -> int:
+    import argparse
+    ap = argparse.ArgumentParser(
+        prog="repro.runtime.batchq",
+        description="Batch-queue array-task worker: evaluate one spooled "
+                    "chunk and write its result file.")
+    ap.add_argument("--worker", required=True, metavar="CHUNK_NPZ",
+                    help="path to the spooled chunk file to evaluate")
+    args = ap.parse_args(argv)
+    return run_worker(args.worker)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -9,6 +9,11 @@ Grow (I -> I' > I): existing islands are cloned round-robin and the clones
 are re-seeded with mutation-perturbed copies (stratified: every new island
 inherits a full survivor set, then diversifies), preserving the best
 individual globally.
+
+Lane re-balance: repartitioning only reshapes the population — the broker's
+dispatch lane count is engine state. ``GAEngine.resize`` wraps this
+function and additionally recomputes ``num_workers``, rebuilds the balanced
+assignment, and re-jits the epoch step for the new island count.
 """
 from __future__ import annotations
 

@@ -12,6 +12,13 @@ deterministic fitness; for real racing hardware, whichever finishes).
 The cost: backup_frac extra evaluations. The win: the tail of the
 per-lane makespan distribution is cut by the duplicate placement, which
 the benchmark in benchmarks/broker_overhead.py quantifies.
+
+This is the *traced* (SPMD) mitigation — every duplicate is decided ahead
+of dispatch. The decoupled backends get the *reactive* counterpart
+instead: per-chunk timeout + re-queue via
+``repro.core.broker.run_chunks_retry`` (see ``repro.runtime.batchq``).
+``fitness_fn`` may be any ``DispatchBackend`` — the duplicate batch is a
+plain (N', G) evaluation.
 """
 from __future__ import annotations
 

@@ -1,12 +1,17 @@
 """Broker (shared evaluation queue analogue) tests."""
+import threading
+import time
+
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 from hypothesis import given, settings, strategies as st
 
-from repro.core.broker import (Broker, HostPoolBackend, balanced_permutation,
-                               inverse_permutation)
+from repro.core.broker import (Broker, CostEMA, HostPoolBackend,
+                               balanced_permutation, inverse_permutation)
 from repro.fitness import sphere
+from repro.fitness import hostsim
 
 
 @settings(max_examples=30, deadline=None)
@@ -62,6 +67,27 @@ def test_broker_skew_improvement_heavy_tail():
     loads = np.asarray(jnp.sum(cost[perm].reshape(16, 8), axis=1))
     naive = np.asarray(jnp.sum(cost.reshape(16, 8), axis=1))
     assert loads.max() / loads.mean() < naive.max() / naive.mean()
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    n=st.integers(1, 64),
+    w=st.integers(1, 12),
+    seed=st.integers(0, 2**30),
+)
+def test_permutation_inverse_roundtrip_any_ratio(n, w, seed):
+    """balanced_permutation/inverse_permutation round-trip over random
+    N/W, including N < W (every real index appears exactly once, the
+    masked inverse recovers identity)."""
+    cost = jnp.asarray(np.random.default_rng(seed).uniform(0.05, 1, n),
+                       jnp.float32)
+    perm = np.asarray(balanced_permutation(cost, w))
+    n_pad = -(-n // w) * w
+    assert perm.shape == (n_pad,)
+    assert sorted(p for p in perm.tolist() if p < n) == list(range(n))
+    inv = np.asarray(inverse_permutation(jnp.asarray(perm), n))
+    assert inv.shape == (n,)
+    np.testing.assert_array_equal(perm[inv], np.arange(n))
 
 
 # ---------------------------------------------------------------------------
@@ -167,6 +193,154 @@ def test_broker_with_host_backend_padded_dispatch():
                                rtol=1e-6)
     assert float(stats["balanced"]) == 1.0
     backend.close()
+
+
+# ---------------------------------------------------------------------------
+# learned cost model (CostEMA)
+# ---------------------------------------------------------------------------
+
+class TestCostEMA:
+    def test_observe_ema_math(self):
+        ema = CostEMA(alpha=0.5, init_cost=1.0)
+        est0 = ema.snapshot(4)                  # lazily init to uniform
+        np.testing.assert_array_equal(est0, np.ones(4, np.float32))
+        # chunk 0 = slots {2, 0} took 2s (1s/item), chunk 1 = {1, 3} 4s
+        ema.observe(np.asarray([2, 0, 1, 3]), [2, 2], [2.0, 4.0])
+        est = ema.snapshot(4)
+        np.testing.assert_allclose(est, [1.0, 1.5, 1.0, 1.5], rtol=1e-6)
+        assert ema.updates == 1
+
+    def test_observe_skips_padding_and_reset(self):
+        ema = CostEMA(alpha=1.0)
+        ema.snapshot(3)
+        # perm entries >= n are sentinel pads: never charged
+        ema.observe(np.asarray([1, 0, 2, 3]), [2, 2], [2.0, 8.0])
+        est = ema.snapshot(3)
+        np.testing.assert_allclose(est, [1.0, 1.0, 4.0], rtol=1e-6)
+        ema.reset()
+        np.testing.assert_array_equal(ema.snapshot(3),
+                                      np.ones(3, np.float32))
+
+    def test_reads_under_jit(self):
+        ema = CostEMA()
+        g = jax.random.uniform(jax.random.PRNGKey(0), (12, 3))
+        out = jax.jit(lambda x: ema(x))(g)
+        np.testing.assert_array_equal(np.asarray(out),
+                                      np.full(12, 1.0, np.float32))
+
+    def test_learns_hot_lane_and_rebalances(self):
+        """A simulator with one expensive slot group: round 1 exposes the
+        hot lane, the EMA charges its slots, and the next round's
+        balanced assignment spreads them — measured makespan drops."""
+        import functools
+        n, w = 32, 4
+        perm0 = np.asarray(balanced_permutation(jnp.ones(n), w))
+        hot = np.zeros(n, bool)
+        hot[perm0[:n // w]] = True              # = lane 0 under uniform
+
+        het_fn = functools.partial(hostsim.delay_sphere, slow_s=0.01)
+        g = np.random.default_rng(0).uniform(-1, 1, (n, 3)).astype(
+            np.float32)
+        g[:, 0] = np.where(hot, 1.0, -1.0)
+        gj = jnp.asarray(g)
+
+        ema = CostEMA(alpha=0.6)
+        with HostPoolBackend(het_fn, num_workers=w) as backend:
+            broker = Broker(cost_fn=ema, num_workers=w, backend=backend)
+            assert backend.cost_ema is ema      # auto-wired
+            times = []
+            for _ in range(3):
+                t0 = time.perf_counter()
+                fit, _ = broker.evaluate(gj)
+                np.asarray(fit)
+                times.append(time.perf_counter() - t0)
+        est = ema.snapshot(n)
+        assert ema.updates == 3
+        assert est[hot].mean() > est[~hot].mean()
+        # hot lane spread across workers: ~w x less sleep on the critical
+        # path (generous margin for timer noise)
+        assert times[2] < times[0]
+        np.testing.assert_allclose(np.asarray(fit),
+                                   np.sum(g * g, -1, keepdims=True),
+                                   rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# host-pool hardening: timeout/retry, drain-on-close, context manager
+# ---------------------------------------------------------------------------
+
+class TestHostPoolHardening:
+    def test_straggler_chunk_retried(self):
+        calls = {"n": 0}
+        lock = threading.Lock()
+
+        def flaky(genomes):
+            with lock:
+                calls["n"] += 1
+                first = calls["n"] == 1
+            if first:
+                time.sleep(1.0)                 # unmodeled straggler
+            return hostsim.sphere(genomes)
+
+        backend = HostPoolBackend(flaky, num_workers=2,
+                                  chunk_timeout_s=0.2, max_retries=2)
+        g = np.random.default_rng(3).uniform(-1, 1, (10, 3)).astype(
+            np.float32)
+        out = backend._host_eval(g)
+        np.testing.assert_allclose(out, hostsim.sphere(g), rtol=1e-6)
+        assert backend.stats["retries"] >= 1
+        backend.close()
+
+    def test_failed_chunk_exhausts_retries(self):
+        from repro.core.broker import ChunkFailure
+        backend = HostPoolBackend(hostsim.always_fail, num_workers=2,
+                                  max_retries=1)
+        with pytest.raises(ChunkFailure, match="simulated simulator"):
+            backend._host_eval(np.ones((4, 2), np.float32))
+        backend.close()
+
+    def test_close_drains_inflight_callback(self):
+        """The pipelined epoch loop can still have a pure_callback in
+        flight when the backend is torn down; close() must drain it, not
+        drop the submitted chunks."""
+        started = threading.Event()
+        release = threading.Event()
+
+        def gated(genomes):
+            started.set()
+            release.wait(10.0)
+            return hostsim.sphere(genomes)
+
+        backend = HostPoolBackend(gated, num_workers=2)
+        g = jax.random.uniform(jax.random.PRNGKey(5), (8, 3))
+        result = {}
+
+        def call():
+            result["out"] = np.asarray(jax.jit(backend.__call__)(g))
+
+        caller = threading.Thread(target=call)
+        caller.start()
+        assert started.wait(10.0)               # callback is in flight
+        closer = threading.Thread(target=backend.close)
+        closer.start()
+        time.sleep(0.1)
+        assert closer.is_alive()                # draining, not dropping
+        release.set()
+        caller.join(10.0)
+        closer.join(10.0)
+        assert not closer.is_alive() and not caller.is_alive()
+        np.testing.assert_allclose(result["out"], np.asarray(sphere(g)),
+                                   rtol=1e-6)
+        with pytest.raises(RuntimeError, match="after close"):
+            backend._host_eval(np.ones((2, 3), np.float32))
+
+    def test_context_manager(self):
+        with HostPoolBackend(hostsim.sphere, num_workers=2) as backend:
+            g = jax.random.uniform(jax.random.PRNGKey(6), (6, 3))
+            np.testing.assert_allclose(np.asarray(backend(g)),
+                                       np.asarray(sphere(g)), rtol=1e-6)
+        assert backend._pool is None
+        backend.close()                         # idempotent
 
 
 def test_host_backend_powerflow_simulation():

@@ -5,6 +5,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from hypothesis import given, settings, strategies as st
 
 from repro.checkpoint import Checkpointer
 from repro.configs.base import GAConfig
@@ -135,6 +136,56 @@ class TestElastic:
         assert pop_out.genomes.shape[0] == 4
 
 
+class TestElasticLaneRebalance:
+    """GAEngine.resize: mid-run repartition + broker lane re-balance (the
+    ROADMAP's 'elastic re-balance on mesh resize')."""
+
+    def test_rebalanced_lanes_match_fixed_lane_run(self):
+        """Acceptance: resizing islands mid-run re-balances lanes without
+        retracing errors, and — dispatch permutations never change fitness
+        values — tracks the fixed-lane run bit-exactly on a deterministic
+        benchmark."""
+        cost_fn = lambda g: jnp.sum(jnp.abs(g), -1) + 0.1
+
+        def run_schedule(workers_after):
+            eng = GAEngine(_cfg(num_islands=4), sphere, cost_fn=cost_fn,
+                           num_workers=8)
+            pop = eng.init()
+            pop, h1 = eng.run(pop, epochs=2)
+            pop = eng.resize(pop, 2, rng=jax.random.PRNGKey(9),
+                             num_workers=workers_after)
+            pop, h2 = eng.run(pop, epochs=2)
+            return eng, pop, h1 + h2
+
+        eng_a, pop_a, hist_a = run_schedule(None)    # re-balanced lanes
+        eng_b, pop_b, hist_b = run_schedule(8)       # lanes kept fixed
+        assert eng_a.broker.num_workers == 4         # 8 * 2/4
+        assert eng_b.broker.num_workers == 8
+        assert hist_a[-1]["best"] == hist_b[-1]["best"]
+        np.testing.assert_array_equal(np.asarray(pop_a.genomes),
+                                      np.asarray(pop_b.genomes))
+        # cost-balanced dispatch stayed engaged through the resize
+        assert all(h["balanced"] == 1.0 for h in hist_a)
+        assert pop_a.genomes.shape[0] == 2
+
+    def test_grow_reevaluates_clones_and_scales_lanes(self):
+        eng = GAEngine(_cfg(num_islands=2), sphere,
+                       cost_fn=lambda g: jnp.sum(jnp.abs(g), -1) + 0.1,
+                       num_workers=4)
+        pop = eng.init()
+        pop, _ = eng.run(pop, epochs=1)
+        evals_before = eng.evals_host
+        pop = eng.resize(pop, 4, rng=jax.random.PRNGKey(3))
+        assert pop.genomes.shape[0] == 4
+        assert eng.broker.num_workers == 8
+        # clones were re-evaluated (no +inf left) and counted
+        assert bool(jnp.all(jnp.isfinite(pop.fitness)))
+        assert eng.evals_host == evals_before + eng.cfg.global_pop
+        pop, hist = eng.run(pop, epochs=1)
+        assert all(h["balanced"] == 1.0 for h in hist)
+        assert bool(jnp.all(jnp.isfinite(pop.fitness)))
+
+
 class TestStraggler:
     def test_backup_eval_identical_fitness(self):
         genomes = jax.random.uniform(jax.random.PRNGKey(0), (64, 4))
@@ -156,6 +207,28 @@ class TestStraggler:
         assert stats["duplicated"] % 8 == 0
 
 
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(1, 60),
+    w=st.integers(1, 12),
+    frac=st.floats(0.0, 0.5),
+    seed=st.integers(0, 2**30),
+)
+def test_backup_dispatch_property_any_shape(n, w, frac, seed):
+    """Speculative backup dispatch over random N/W (odd N, N < W): the
+    combined fitness is identical to direct evaluation and the duplicate
+    batch stays a lane-divisible size."""
+    genomes = jnp.asarray(
+        np.random.default_rng(seed).uniform(-1, 1, (n, 3)), jnp.float32)
+    cost = jnp.sum(jnp.abs(genomes), -1) + 0.05
+    fit, stats = backup_dispatch_eval(sphere, genomes, cost,
+                                      num_workers=w, backup_frac=frac)
+    np.testing.assert_allclose(np.asarray(fit),
+                               np.asarray(sphere(genomes)), rtol=1e-6)
+    assert stats["duplicated"] % w == 0
+    assert stats["duplicated"] >= w
+
+
 class TestEvalsCounter:
     def test_evals_counter_is_exact_past_f32_range(self, tmp_path):
         """f32 loses exact integer counts past 2^24 (~16.7M — one
@@ -173,6 +246,49 @@ class TestEvalsCounter:
         restored = eng.restore()
         assert int(restored.evals) == big
         assert jnp.issubdtype(jnp.asarray(restored.evals).dtype, jnp.integer)
+
+    def test_host_counter_exact_past_i32_wrap(self):
+        """The device counter is i32 without x64 and wraps at 2^31 (~128
+        epochs at 3,500-core scale); the engine's host-side accumulator
+        must stay exact across the wrap."""
+        from repro.core.population import evals_dtype
+        cfg = _cfg(num_epochs=1)
+        eng = GAEngine(cfg, sphere)
+        pop = eng.init()
+        near = 2**31 - 50                       # below i32 max
+        pop = pop._replace(evals=jnp.asarray(near, evals_dtype()))
+        eng.evals_host = 0                      # force reseed from device
+        pop, _ = eng.run(pop, epochs=1)
+        inc = (cfg.generations_per_epoch * cfg.num_islands
+               * cfg.pop_per_island)
+        assert eng.evals_host == near + inc     # exact, past 2^31 - 1
+        assert eng.evals_host > 2**31 - 1
+        if not jax.config.jax_enable_x64:
+            # the i32 device counter wrapped and cannot agree
+            assert int(jax.device_get(pop.evals)) != eng.evals_host
+
+    def test_host_counter_checkpoint_roundtrip(self, tmp_path):
+        """evals_host rides along the device counter in checkpoints and
+        restores exactly (u64 range)."""
+        big = 5_000_000_000                     # > 2^32
+        ck = Checkpointer(str(tmp_path), async_write=False)
+        cfg = _cfg()
+        eng = GAEngine(cfg, sphere, checkpointer=ck, checkpoint_every=1)
+        pop = eng.init()
+        eng.evals_host = big
+        pop, _ = eng.run(pop, epochs=1)
+        inc = (cfg.generations_per_epoch * cfg.num_islands
+               * cfg.pop_per_island)
+        assert eng.evals_host == big + inc
+        eng2 = GAEngine(cfg, sphere, checkpointer=ck)
+        restored = eng2.restore()
+        assert restored is not None
+        assert eng2.evals_host == big + inc
+
+    def test_engine_counts_match_device_pre_wrap(self):
+        eng = GAEngine(_cfg(), sphere)
+        pop, _ = eng.run(epochs=3)
+        assert eng.evals_host == int(jax.device_get(pop.evals))
 
     def test_restore_upgrades_legacy_float_counter(self, tmp_path):
         """Pre-int checkpoints stored evals as f32; restore normalizes."""

@@ -101,6 +101,15 @@ class TestEngine:
         np.testing.assert_array_equal(np.asarray(p1.genomes),
                                       np.asarray(p2.genomes))
 
+    def test_odd_pop_per_island(self):
+        """Regression: odd pop_per_island crashed operators.variation
+        (SBX pairing); the full engine loop must run and converge."""
+        eng = GAEngine(_cfg(pop_per_island=15, num_epochs=10), sphere)
+        pop, hist = eng.run()
+        assert pop.genomes.shape[1] == 15
+        assert np.isfinite(np.asarray(pop.fitness)).all()
+        assert hist[-1]["best"] <= hist[0]["best"]
+
 
 class TestPipelinedEngine:
     def test_pipelined_run_matches_sync_run(self):

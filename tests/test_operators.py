@@ -85,6 +85,39 @@ def test_variation_shape_and_bounds():
     assert bool(jnp.all((off >= -1) & (off <= 1)))
 
 
+@settings(max_examples=25, deadline=None)
+@given(
+    p=st.integers(1, 17),
+    g=st.integers(1, 8),
+    seed=st.integers(0, 2**30),
+)
+def test_variation_any_pop_size(p, g, seed):
+    """Regression: odd P crashed SBX pairing (parents[0::2] vs
+    parents[1::2] shape mismatch). The unpaired last parent now goes
+    through mutation-only."""
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    parents = jax.random.uniform(k1, (p, g), minval=-1, maxval=1)
+    off = operators.variation(k2, parents, eta_cx=15.0, prob_cx=0.9,
+                              eta_mut=20.0, prob_mut=0.7, indpb=0.3,
+                              lower=-1.0, upper=1.0, use_kernel=False)
+    assert off.shape == (p, g)
+    assert bool(jnp.all(jnp.isfinite(off)))
+    assert bool(jnp.all((off >= -1) & (off <= 1)))
+
+
+def test_variation_odd_pop_under_jit_and_kernel_flag():
+    """Odd P must work jitted and with use_kernel=True (the fused kernel
+    pairs parents, so odd P falls back to the unfused path)."""
+    parents = jax.random.uniform(KEY, (15, 4), minval=-1, maxval=1)
+    for use_kernel in (False, True):
+        run = jax.jit(lambda pp, uk=use_kernel: operators.variation(
+            KEY, pp, eta_cx=15.0, prob_cx=0.9, eta_mut=20.0, prob_mut=0.7,
+            indpb=0.3, lower=-1.0, upper=1.0, use_kernel=uk))
+        off = run(parents)
+        assert off.shape == (15, 4)
+        assert bool(jnp.all(jnp.isfinite(off)))
+
+
 def test_traced_hyperparams():
     """Operators must accept traced eta/prob (meta-GA requirement)."""
     parents = jax.random.uniform(KEY, (8, 3))
