@@ -150,6 +150,39 @@ def run(csv: bool = True):
     if csv:
         print(f"slurm_mock_spool,{us:.0f},us_per_evaluate")
 
+    # equal vs cost-sized chunking on a skewed simulator: 4 hot genomes
+    # (280ms each) among 60 cheap ones (20ms each), 8 array tasks. Equal
+    # counts force 7 cheap riders into every hot chunk (makespan
+    # 260+8*20 = 420ms); cost-sized chunking isolates each hot genome in
+    # a 1-item chunk and spreads the cheap ones ~15 per task (makespan
+    # ~300ms) — array tasks finish together. Static cost model, measured
+    # under jit. (Sleeps are sized so the makespan delta dominates the
+    # ~100ms fixed spool overhead of the mock scheduler.)
+    skew_n, skew_w = 64, 8
+    skew_g = np.random.default_rng(1).uniform(-1, 1, (skew_n, 6)).astype(
+        np.float32)
+    skew_g[:, 0] = -1.0
+    skew_g[:4, 0] = 1.0                          # 4 hot genomes
+    skew_gj = jnp.asarray(skew_g)
+    skew_fn = functools.partial(hostsim.delay_sphere, slow_s=0.260,
+                                base_s=0.020)
+    skew_cost = lambda g: jnp.where(g[:, 0] > 0, 14.0, 1.0)  # 280 vs 20ms
+    for sizing in ("equal", "cost"):
+        backend = SlurmArrayBackend(
+            skew_fn, num_workers=skew_w,
+            scheduler=LocalMockScheduler(mode="thread"),
+            chunk_timeout_s=60, poll_interval_s=0.002,
+            chunk_sizing=sizing)
+        broker = Broker(cost_fn=skew_cost, num_workers=skew_w,
+                        backend=backend)
+        ev = jax.jit(lambda g, b=broker: b.evaluate(g)[0])
+        jax.block_until_ready(ev(skew_gj))
+        us = _time(ev, skew_gj, reps=3)
+        backend.close()
+        rows.append((f"batchq_{sizing}_chunks", us))
+        if csv:
+            print(f"batchq_{sizing}_chunks,{us:.0f},us_per_evaluate")
+
     # engine loop: synchronous metric reads every epoch vs the pipelined
     # (async D2H + deferred device_get) path — async must be no slower
     cfg = GAConfig(fused_operators=False,

@@ -5,9 +5,12 @@
 #
 # The fast lane includes the batch-dispatch (mock-scheduler) conformance
 # tests: tests/test_batchq.py runs the spool/timeout/re-queue machinery on
-# thread-mode LocalMockScheduler workers in-process. Only multi-second
-# subprocess tests (array-task interpreter spawns, multidevice runs) are
-# @pytest.mark.slow and deferred to the full lane.
+# thread-mode LocalMockScheduler workers in-process, and the Kubernetes
+# path (KubernetesScheduler against the in-process MockKubectl runner:
+# command construction + full submit->poll->result conformance, spool GC,
+# cost-sized chunking) without needing a cluster. Only multi-second
+# subprocess e2e tests (SLURM and k8s-mock array-task interpreter spawns,
+# multidevice runs) are @pytest.mark.slow and deferred to the full lane.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 

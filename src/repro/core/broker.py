@@ -30,14 +30,19 @@ program (SPMD, zero copies); :class:`HostPoolBackend` bridges out of the
 program with ``jax.pure_callback`` and fans chunks across a host executor
 pool — for external / embedded simulators that cannot be traced.
 
-Batch-scheduled dispatch (SLURM)
---------------------------------
+Batch-scheduled dispatch (SLURM / Kubernetes)
+---------------------------------------------
 ``repro.runtime.batchq`` adds the paper's K8s<->SLURM portability story:
 :class:`~repro.runtime.batchq.SlurmArrayBackend` implements the same
 :class:`DispatchBackend` protocol by *spooling* each evaluation batch to
 disk and submitting it as array-job work items through a pluggable
-``Scheduler`` (real ``sbatch``/``squeue`` shelling-out, or a
-``LocalMockScheduler`` that runs chunks in subprocesses/threads for CI).
+``Scheduler`` — ``SlurmScheduler`` (``sbatch``/``squeue`` shell-outs),
+``KubernetesScheduler`` (one indexed Job per batch via ``kubectl``), or a
+``LocalMockScheduler``/``MockKubectl`` pair that runs chunks in
+subprocesses/threads for CI. When the broker supplies a cost model, the
+backend sizes chunks by predicted per-genome cost (largest-cost-first,
+see ``hostbridge.cost_sized_chunk_sizes``) so array tasks finish
+together instead of splitting the batch into equal counts.
 
 Spool layout (one job directory per evaluate call)::
 
@@ -58,10 +63,12 @@ an online EMA of measured per-lane wall times (reported by the decoupled
 backends) and feeds them back into :func:`balanced_permutation` — the
 ROADMAP's replacement for a static cost model.
 
-``ga_run`` flags: ``--dispatch-backend slurm|slurm-mock`` selects the
-batch-scheduled backend (real scheduler vs local mock), ``--spool-dir`` /
-``--chunk-timeout-s`` tune the spool, and ``--cost-ema`` enables the
-learned cost model.
+``ga_run`` flags: ``--dispatch-backend slurm|slurm-mock|k8s|k8s-mock``
+selects the batch-scheduled backend (real scheduler vs local mock),
+``--spool-dir`` / ``--chunk-timeout-s`` / ``--keep-jobs`` tune the spool,
+``--k8s-namespace`` / ``--k8s-image`` parameterize the Kubernetes Job
+manifest, and ``--cost-ema`` enables the learned cost model (primed from
+the fitness backend's static cost model when one exists).
 """
 from __future__ import annotations
 
@@ -213,22 +220,40 @@ class CostEMA:
     each generation's :func:`balanced_permutation` sees fresh estimates
     without retracing. Requires a decoupled backend — inline SPMD
     evaluation exposes no per-lane timings.
+
+    Cold start: by default the table initializes to a uniform
+    ``init_cost``, so the first dispatch of a skewed workload is maximally
+    unbalanced. ``prime_fn`` (a static, traceable cost model ``(N, G) ->
+    (N,)``) seeds the slot table from its prediction on the first batch
+    instead (ROADMAP "CostEMA priming"); measured wall times then refine
+    it online.
     """
 
-    def __init__(self, alpha: float = 0.25, init_cost: float = 1.0):
+    def __init__(self, alpha: float = 0.25, init_cost: float = 1.0,
+                 prime_fn: Optional[Callable] = None):
         if not 0.0 < alpha <= 1.0:
             raise ValueError(f"alpha must be in (0, 1]: {alpha}")
         self.alpha = float(alpha)
         self.init_cost = float(init_cost)
+        self.prime_fn = prime_fn
         self._est: Optional[np.ndarray] = None
         self._lock = threading.Lock()
         self.updates = 0
 
-    def snapshot(self, n: int) -> np.ndarray:
-        """Current (n,) cost estimates (lazily initialized to uniform)."""
+    def snapshot(self, n: int, prime: Optional[np.ndarray] = None) -> np.ndarray:
+        """Current (n,) cost estimates. A cold (or re-keyed after resize)
+        table initializes from ``prime`` when given, else to uniform
+        ``init_cost``."""
         with self._lock:
             if self._est is None or self._est.shape[0] != int(n):
-                self._est = np.full((int(n),), self.init_cost, np.float32)
+                if prime is not None:
+                    # explicit copy: the prediction arrives as jax's
+                    # read-only callback buffer, and observe() writes here
+                    self._est = np.array(prime, np.float32,
+                                         copy=True).reshape(int(n))
+                else:
+                    self._est = np.full((int(n),), self.init_cost,
+                                        np.float32)
             return self._est.copy()
 
     def observe(self, perm, chunk_sizes, durations) -> None:
@@ -266,6 +291,16 @@ class CostEMA:
         shape = jax.ShapeDtypeStruct((n,), jnp.float32)
         # genomes as operand: orders the read after the previous
         # generation's evaluate (whose observe() updated the table)
+        if self.prime_fn is not None:
+            # the prediction is computed on-device every generation and
+            # consumed only by cold reads — deliberate: evaluating a
+            # (jax-traceable) cost model from INSIDE the host callback is
+            # unsupported reentrancy, and the steady-state overhead is one
+            # (N,) f32 transfer per generation
+            pred = self.prime_fn(genomes)
+            return jax.pure_callback(
+                lambda g, p: self.snapshot(g.shape[0], p), shape,
+                genomes, pred)
         return jax.pure_callback(
             lambda g: self.snapshot(g.shape[0]), shape, genomes)
 
@@ -365,7 +400,12 @@ class HostPoolBackend(PureCallbackBridge):
                 mp_context=mp.get_context("spawn"))
 
     def _host_eval(self, genomes: np.ndarray,
-                   perm: Optional[np.ndarray] = None) -> np.ndarray:
+                   perm: Optional[np.ndarray] = None,
+                   cost: Optional[np.ndarray] = None) -> np.ndarray:
+        # `cost` (predicted per-slot cost) is accepted for protocol parity
+        # with the batch-scheduled backend but unused here: this path keeps
+        # equal splits (cost-sized chunking lives in SlurmArrayBackend,
+        # where every chunk is a separately scheduled array task)
         with self._cond:
             if self._closing or self._pool is None:
                 raise RuntimeError("HostPoolBackend used after close()")
@@ -477,18 +517,26 @@ class Broker:
         n_pad = perm.shape[0]
         real = perm < n                                     # pad mask
         shuffled = padded_take(genomes, perm, n)            # the "all-to-all"
-        if (getattr(self.backend, "cost_ema", None) is not None
-                and hasattr(self.backend, "eval_with_perm")):
-            # decoupled backend measures per-chunk wall times and feeds
-            # them back into the EMA cost model, keyed through `perm`
-            fit_shuf = self.backend.eval_with_perm(shuffled, perm)
+        # predicted per-slot cost in shuffled order (pads carry zero)
+        lane_cost = jnp.where(real, padded_take(cost, perm, n), 0.0)
+        if hasattr(self.backend, "eval_with_perm"):
+            # decoupled backend: `perm` keys measured per-chunk wall times
+            # back into the EMA cost model, and the cost operand drives
+            # cost-sized chunking (array tasks finish together). Sentinel
+            # pads are marked -inf — NOT their zero stats-cost: a pad slot
+            # re-evaluates a duplicate of genome 0 at its true price, so a
+            # cost-sizing backend must identify pads (it skips them — their
+            # results are dropped by the masked inverse anyway), not
+            # mistake them for free work
+            pad_marked = jnp.where(real, lane_cost, -jnp.inf)
+            fit_shuf = self.backend.eval_with_perm(shuffled, perm,
+                                                   pad_marked)
         else:
             fit_shuf = self.backend(shuffled)
         inv = inverse_permutation(perm, n)
         fit = jnp.take(fit_shuf, inv, axis=0)
         # stats: per-worker predicted load skew (max/mean), before/after;
         # padded lanes contribute zero load
-        lane_cost = jnp.where(real, padded_take(cost, perm, n), 0.0)
         loads = jnp.sum(lane_cost.reshape(w, n_pad // w), axis=1)
         cost_pad = (cost if n_pad == n else
                     jnp.concatenate([cost, jnp.zeros((n_pad - n,),

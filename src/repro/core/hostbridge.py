@@ -2,9 +2,11 @@
 
 Both ``broker.HostPoolBackend`` and ``runtime.batchq.SlurmArrayBackend``
 bridge out of the XLA program the same way: a ``jax.pure_callback`` around
-a host-side ``_host_eval(genomes, perm=None)`` that chunks the batch,
-executes it somewhere, measures per-chunk wall times, and reports them to
-an optional ``CostEMA``. This module holds that common surface once.
+a host-side ``_host_eval(genomes, perm=None, cost=None)`` that chunks the
+batch (equally, or by the predicted per-slot ``cost`` when the dispatching
+broker supplies one — sentinel pad slots arrive marked ``-inf``), executes
+it somewhere, measures per-chunk wall times, and reports them to an
+optional ``CostEMA``. This module holds that common surface once.
 
 Import discipline: NO jax at module scope — ``runtime.batchq`` is imported
 by numpy-only array-task workers whose interpreter startup is on the
@@ -22,7 +24,11 @@ class PureCallbackBridge:
     """Mixin: DispatchBackend surface over a host-side ``_host_eval``.
 
     Subclasses provide ``num_objectives``, ``close()``, and
-    ``_host_eval(genomes, perm=None) -> (N, O) float32``.
+    ``_host_eval(genomes, perm=None, cost=None) -> (N, O) float32``.
+    The cost-dispatching broker calls ``eval_with_perm`` with all three
+    positional operands, so ``_host_eval`` MUST accept ``cost`` (the
+    predicted per-slot cost in shuffled order, sentinel pads marked
+    ``-inf``) even if it ignores it, as ``HostPoolBackend`` does.
     """
 
     def _out_shape(self, genomes):
@@ -36,12 +42,18 @@ class PureCallbackBridge:
         return jax.pure_callback(self._host_eval, self._out_shape(genomes),
                                  genomes)
 
-    def eval_with_perm(self, genomes, perm):
-        """Evaluate the shuffled batch and report measured per-chunk wall
-        times to ``cost_ema``, keyed through the dispatch permutation."""
+    def eval_with_perm(self, genomes, perm, cost=None):
+        """Evaluate the shuffled batch with full dispatch context: ``perm``
+        keys measured wall times back into ``cost_ema``; ``cost`` (the
+        predicted per-slot cost in shuffled order, sentinel pads marked
+        ``-inf`` so backends can skip them) lets the backend size its
+        chunks by predicted cost instead of splitting equally."""
         import jax
+        if cost is None:
+            return jax.pure_callback(self._host_eval,
+                                     self._out_shape(genomes), genomes, perm)
         return jax.pure_callback(self._host_eval, self._out_shape(genomes),
-                                 genomes, perm)
+                                 genomes, perm, cost)
 
     def __enter__(self):
         return self
@@ -49,6 +61,60 @@ class PureCallbackBridge:
     def __exit__(self, *exc_info):
         self.close()
         return False
+
+
+def cost_sized_chunk_sizes(cost, num_chunks: int) -> List[int]:
+    """Contiguous chunk sizes balancing *predicted cost*, not item count.
+
+    Splits ``len(cost)`` items into ``min(num_chunks, n)`` contiguous
+    chunks whose predicted total costs are as equal as integer boundaries
+    allow, so batch-scheduler array tasks finish together (ROADMAP
+    "adaptive chunk sizing"). Boundaries are the real-valued crossings of
+    the remaining-cost average (re-targeted after each chunk, so an
+    oversized head item doesn't skew every later boundary), rounded half
+    toward the pricier side.
+
+    Invariants (property-tested): sizes sum to ``n``, every size >= 1,
+    each chunk's predicted cost <= total/num_chunks + max(cost), and for
+    distinct costs sorted descending the first (priciest) chunk is never
+    larger than the last (cheapest) — monotone in predicted cost.
+    Non-finite or negative costs are treated as zero; an all-zero cost
+    vector degrades to the equal split.
+    """
+    cost = np.asarray(cost, np.float64).ravel()
+    n = int(cost.size)
+    w = int(min(num_chunks, n))
+    if w <= 0:
+        return []
+    if w == 1:
+        return [n]
+    c = np.where(np.isfinite(cost), cost, 0.0)
+    c = np.clip(c, 0.0, None)
+    cum = np.cumsum(c)
+    total = float(cum[-1])
+    if total <= 0.0:
+        return [a.size for a in np.array_split(np.arange(n), w)]
+    sizes: List[int] = []
+    start = 0
+    for k in range(w, 1, -1):                    # k chunks still to emit
+        done = float(cum[start - 1]) if start else 0.0
+        remaining = total - done
+        if remaining <= 0.0:                     # zero-cost tail: equal
+            for a in np.array_split(np.arange(n - start), k):
+                sizes.append(a.size)
+            return sizes
+        target = done + remaining / k
+        j = int(np.searchsorted(cum, target, side="left"))
+        j = min(max(j, start), n - 1)
+        before = float(cum[j - 1]) if j else 0.0
+        frac = (target - before) / c[j] if c[j] > 0 else 1.0
+        x = j + min(max(frac, 0.0), 1.0)         # real-valued boundary
+        b = int(np.ceil(x - 0.5))                # round half toward the
+        b = min(max(b, start + 1), n - (k - 1))  # pricier (earlier) side
+        sizes.append(b - start)
+        start = b
+    sizes.append(n - start)
+    return sizes
 
 
 def collect_chunk_results(outs: List[tuple], cost_ema,

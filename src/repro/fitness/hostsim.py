@@ -54,13 +54,17 @@ def griewank(genomes) -> np.ndarray:
             - np.prod(np.cos(g / i), -1) + 1.0)[..., None].astype(np.float32)
 
 
-def delay_sphere(genomes, *, slow_s: float = 0.004) -> np.ndarray:
+def delay_sphere(genomes, *, slow_s: float = 0.004,
+                 base_s: float = 0.0) -> np.ndarray:
     """Sphere with a real sleep per *slow* individual (``genomes[:, 0] >
     0``): heterogeneous evaluation cost for cost-model tests/benchmarks.
     The sleep is per chunk (sum over its slow members), exactly the
-    makespan a balanced dispatch should spread across lanes."""
+    makespan a balanced dispatch should spread across lanes. ``base_s``
+    adds a per-individual floor regardless of class — with it, equal-count
+    chunks pay for the cheap riders sharing a chunk with a slow genome,
+    which is what cost-*sized* chunking removes."""
     g = np.asarray(genomes, np.float32)
-    time.sleep(slow_s * float(np.sum(g[:, 0] > 0)))
+    time.sleep(base_s * g.shape[0] + slow_s * float(np.sum(g[:, 0] > 0)))
     return sphere(g)
 
 

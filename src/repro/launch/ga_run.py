@@ -14,13 +14,44 @@ Usage:
   # to exercise the same spool path on local subprocesses)
   PYTHONPATH=src python -m repro.launch.ga_run --fitness sphere \
       --dispatch-backend slurm --slurm-partition compute --cost-ema
+  # the same workload on Kubernetes indexed Jobs (k8s-mock runs the
+  # identical spool path against an in-process kubectl, no cluster)
+  PYTHONPATH=src python -m repro.launch.ga_run --fitness sphere \
+      --dispatch-backend k8s --k8s-namespace ga --k8s-image my/worker:1
 """
 from __future__ import annotations
 
 import argparse
+import contextlib
 
 import jax
 import numpy as np
+
+SCHEDULERS_HELP = """\
+Schedulers (--dispatch-backend slurm|slurm-mock|k8s|k8s-mock):
+  Both batch backends spool each evaluation batch to --spool-dir and
+  submit the chunks through the Scheduler protocol; only the scheduler
+  object differs (the paper's K8s<->SLURM portability claim).
+    slurm      one `sbatch --array` job per batch; task i resolves its
+               chunk from a manifest by $SLURM_ARRAY_TASK_ID. scancel
+               cancels a single timed-out array task.
+    k8s        one indexed Job per batch (completionMode=Indexed); pod i
+               resolves its chunk by $JOB_COMPLETION_INDEX. K8s cannot
+               cancel one index, so a timed-out chunk's re-queued attempt
+               races the original (speculative retry); Job objects are
+               deleted once results are collected.
+    slurm-mock / k8s-mock
+               same spool/poll/retry path against local workers (no
+               cluster needed) — CI and smoke runs.
+  Scheduler states: pending (queued; the straggler clock does NOT run),
+  running, done, failed, unknown. Results always travel via the spool's
+  chunk_*.result.npz files, never the scheduler — the spool must be a
+  filesystem shared with the workers (SLURM: cluster FS; K8s: a volume
+  mounted at the same path in every worker pod). Completed job_* spool
+  dirs are pruned down to --keep-jobs; chunks are sized by predicted
+  per-genome cost whenever a cost model is active (equal counts
+  otherwise).
+"""
 
 from repro.configs.base import GAConfig
 from repro.core.engine import GAEngine
@@ -79,7 +110,9 @@ def build(fitness_name: str, args):
 
 
 def main(argv=None):
-    ap = argparse.ArgumentParser()
+    ap = argparse.ArgumentParser(
+        formatter_class=argparse.RawDescriptionHelpFormatter,
+        epilog=SCHEDULERS_HELP)
     ap.add_argument("--fitness", default="rastrigin")
     ap.add_argument("--genes", type=int, default=8)
     ap.add_argument("--islands", type=int, default=4)
@@ -97,13 +130,14 @@ def main(argv=None):
     ap.add_argument("--wallclock-s", type=float, default=None)
     ap.add_argument("--dispatch-backend", default="inline",
                     choices=("inline", "host-thread", "host-process",
-                             "slurm", "slurm-mock"),
+                             "slurm", "slurm-mock", "k8s", "k8s-mock"),
                     help="inline: fitness traced into the XLA program; "
                          "host-*: decoupled simulation backend on a host "
                          "executor pool (external/embedded simulators); "
                          "slurm: batch-scheduled array jobs via sbatch; "
-                         "slurm-mock: same spool path on local "
-                         "subprocesses (no cluster needed)")
+                         "k8s: Kubernetes indexed Jobs via kubectl; "
+                         "*-mock: same spool path on local workers (no "
+                         "cluster needed; see Schedulers below)")
     ap.add_argument("--num-workers", type=int, default=None,
                     help="broker dispatch lanes (default: dp shards)")
     ap.add_argument("--spool-dir", default=None,
@@ -116,6 +150,15 @@ def main(argv=None):
                          "host-*, 300 for slurm*")
     ap.add_argument("--slurm-partition", default=None,
                     help="sbatch partition for --dispatch-backend slurm")
+    ap.add_argument("--k8s-namespace", default="default",
+                    help="namespace for --dispatch-backend k8s Jobs")
+    ap.add_argument("--k8s-image", default="chambga-worker:latest",
+                    help="worker container image for --dispatch-backend "
+                         "k8s (must bundle repro + mount the spool)")
+    ap.add_argument("--keep-jobs", type=int, default=4,
+                    help="completed job_* spool directories kept per "
+                         "batch backend (older ones are pruned; -1 "
+                         "disables pruning)")
     ap.add_argument("--cost-ema", action="store_true",
                     help="learn the dispatch cost model online from "
                          "measured per-lane wall times (needs a "
@@ -134,9 +177,12 @@ def main(argv=None):
     if args.cost_ema:
         if args.dispatch_backend == "inline":
             ap.error("--cost-ema needs measured per-lane wall times — "
-                     "use a decoupled backend (host-* or slurm*)")
+                     "use a decoupled backend (host-*, slurm* or k8s*)")
         from repro.core.broker import CostEMA
-        cost_fn = CostEMA(alpha=args.ema_alpha)
+        # when the fitness backend ships a static cost model (HVDC), it
+        # primes the EMA's slot table so even the FIRST dispatch of a
+        # skewed workload is balanced; wall times refine it online
+        cost_fn = CostEMA(alpha=args.ema_alpha, prime_fn=cost_fn)
     backend = None
     # decoupled backends default to 4 workers; the broker's lane count
     # must match them (not the dp-shard default of 1, which would take
@@ -153,12 +199,22 @@ def main(argv=None):
             num_workers=workers,
             executor=args.dispatch_backend.split("-")[1],
             chunk_timeout_s=timeout)
-    elif args.dispatch_backend.startswith("slurm"):
-        from repro.runtime.batchq import (LocalMockScheduler,
+    elif args.dispatch_backend.startswith(("slurm", "k8s")):
+        from repro.runtime.batchq import (KubernetesScheduler,
+                                          LocalMockScheduler, MockKubectl,
                                           SlurmArrayBackend, SlurmScheduler)
-        scheduler = (SlurmScheduler(partition=args.slurm_partition)
-                     if args.dispatch_backend == "slurm"
-                     else LocalMockScheduler())
+        if args.dispatch_backend == "slurm":
+            scheduler = SlurmScheduler(partition=args.slurm_partition)
+        elif args.dispatch_backend == "slurm-mock":
+            scheduler = LocalMockScheduler()
+        else:
+            # k8s: real kubectl; k8s-mock: in-process kubectl stand-in
+            # (the scheduler enables its status cache only for the real
+            # one — each live poll is a ~100ms shell-out)
+            scheduler = KubernetesScheduler(
+                namespace=args.k8s_namespace, image=args.k8s_image,
+                runner=(MockKubectl()
+                        if args.dispatch_backend == "k8s-mock" else None))
         # named benchmarks resolve to numpy-only host simulators so array
         # tasks skip the jax import; other fitness callables are pickled
         from repro.fitness import hostsim
@@ -170,27 +226,29 @@ def main(argv=None):
             num_workers=workers,
             scheduler=scheduler, spool_dir=args.spool_dir,
             chunk_timeout_s=(300.0 if args.chunk_timeout_s is None
-                             else timeout))
-    plan = plan_scaling(len(jax.devices()), pop_total=cfg.global_pop,
-                        sim_parallelism=max(args.contingencies, 1))
-    print(f"scaling plan: horizontal={plan.horizontal} "
-          f"vertical={plan.vertical}")
-    ckpt = Checkpointer(args.ckpt_dir) if args.ckpt_dir else None
-    eng = GAEngine(cfg, fitness_fn, cost_fn=cost_fn, backend=backend,
-                   num_workers=workers, checkpointer=ckpt,
-                   checkpoint_every=2 if ckpt else 0,
-                   sync_every=args.sync_every,
-                   pipeline_depth=args.pipeline_depth,
-                   log_fn=lambda r: print(
-                       f"epoch {r['epoch']:4d} best {r['best']:.5f} "
-                       f"skew {r['skew']:.3f}"))
-    try:
+                             else timeout),
+            keep_jobs=None if args.keep_jobs < 0 else args.keep_jobs)
+    # context-managed teardown: a crash anywhere past this point (engine
+    # construction included) must still drain in-flight pure_callbacks
+    # and free the pool / temp spool — a failed run must not strand them
+    with contextlib.ExitStack() as stack:
+        if backend is not None:
+            stack.enter_context(backend)
+        plan = plan_scaling(len(jax.devices()), pop_total=cfg.global_pop,
+                            sim_parallelism=max(args.contingencies, 1))
+        print(f"scaling plan: horizontal={plan.horizontal} "
+              f"vertical={plan.vertical}")
+        ckpt = Checkpointer(args.ckpt_dir) if args.ckpt_dir else None
+        eng = GAEngine(cfg, fitness_fn, cost_fn=cost_fn, backend=backend,
+                       num_workers=workers, checkpointer=ckpt,
+                       checkpoint_every=2 if ckpt else 0,
+                       sync_every=args.sync_every,
+                       pipeline_depth=args.pipeline_depth,
+                       log_fn=lambda r: print(
+                           f"epoch {r['epoch']:4d} best {r['best']:.5f} "
+                           f"skew {r['skew']:.3f}"))
         pop, hist = eng.run(wallclock_s=args.wallclock_s)
         g, f = eng.best(pop)
-    finally:
-        if backend is not None:
-            backend.close()      # drain in-flight callbacks, free the
-                                 # pool / temp spool
     print(f"best fitness: {f[0]:.6f}")
     print(f"best genome:  {np.round(g, 4)}")
     return pop, hist

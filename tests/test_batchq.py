@@ -1,5 +1,7 @@
-"""Batch-scheduled dispatch (SLURM-style array jobs): spool protocol,
-schedulers, timeout/re-queue, and DispatchBackend conformance."""
+"""Batch-scheduled dispatch (SLURM arrays + Kubernetes indexed Jobs):
+spool protocol, schedulers, timeout/re-queue, cost-sized chunking, spool
+GC, and DispatchBackend conformance."""
+import glob
 import json
 import os
 import pickle
@@ -8,14 +10,19 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from hypothesis import given, settings, strategies as st
 
 from repro.core.broker import (Broker, ChunkFailure, DispatchBackend,
                                HostPoolBackend, run_chunks_retry)
+from repro.core.hostbridge import cost_sized_chunk_sizes
 from repro.fitness import sphere
 from repro.fitness import hostsim
-from repro.runtime.batchq import (LocalMockScheduler, SlurmArrayBackend,
-                                  SlurmScheduler, _atomic_savez, chunk_path,
-                                  fail_path, result_path, run_worker)
+from repro.runtime.batchq import (KubernetesScheduler, LocalMockScheduler,
+                                  MockKubectl, SlurmArrayBackend,
+                                  SlurmScheduler, _atomic_savez,
+                                  _compress_index_set, _parse_index_set,
+                                  chunk_path, fail_path, result_path,
+                                  run_worker)
 
 SPEC = "repro.fitness.hostsim:sphere"
 
@@ -51,6 +58,28 @@ class TestConformance:
                                poll_interval_s=0.005) as backend:
             _conformance(backend)
         assert backend.stats["retries"] == 0
+
+    def test_k8s_backend_mock_thread(self, tmp_path):
+        """The K8s leg of the portability pair passes the identical
+        conformance suite: same backend, same spool, only the scheduler
+        (indexed Jobs via a mocked kubectl) differs."""
+        with SlurmArrayBackend(fn_spec=SPEC, num_workers=3,
+                               scheduler=KubernetesScheduler(
+                                   runner=MockKubectl(mode="thread")),
+                               spool_dir=str(tmp_path), chunk_timeout_s=60,
+                               poll_interval_s=0.005) as backend:
+            _conformance(backend)
+        assert backend.stats["retries"] == 0
+
+    def test_k8s_equal_chunking_conformance(self, tmp_path):
+        # the legacy equal split stays available behind the same backend
+        with SlurmArrayBackend(fn_spec=SPEC, num_workers=3,
+                               chunk_sizing="equal",
+                               scheduler=KubernetesScheduler(
+                                   runner=MockKubectl(mode="thread")),
+                               spool_dir=str(tmp_path), chunk_timeout_s=60,
+                               poll_interval_s=0.005) as backend:
+            _conformance(backend)
 
     def test_host_pool_backend_same_contract(self):
         with HostPoolBackend(hostsim.sphere, num_workers=3,
@@ -100,6 +129,18 @@ class TestConformance:
                                poll_interval_s=0.05) as backend:
             _conformance(backend, n=17)
 
+    @pytest.mark.slow
+    def test_k8s_backend_mock_subprocess_e2e(self, tmp_path):
+        """K8s-mock end-to-end on real worker subprocesses (the 'pods'),
+        slow-marked like the SLURM variant."""
+        with SlurmArrayBackend(fn_spec=SPEC, num_workers=2,
+                               scheduler=KubernetesScheduler(
+                                   runner=MockKubectl(mode="subprocess")),
+                               spool_dir=str(tmp_path),
+                               chunk_timeout_s=300,
+                               poll_interval_s=0.05) as backend:
+            _conformance(backend, n=17)
+
 
 # ---------------------------------------------------------------------------
 # timeout + re-queue (the acceptance case: a straggler chunk times out and
@@ -124,6 +165,26 @@ class TestTimeoutRetry:
             # the lost chunk timed out at least once and its re-queue
             # delivered the result (a loaded CI box may time out the
             # healthy chunk too — >= not ==)
+            assert backend.stats["timeouts"] >= 1
+            assert backend.stats["retries"] >= 1
+
+    def test_k8s_lost_pod_times_out_retry_succeeds(self, tmp_path):
+        """Same acceptance case on the K8s path: a lost pod (accepted by
+        the control plane, never started) times out; K8s can't cancel a
+        single index so the re-queued single-completion Job races it and
+        delivers."""
+        kubectl = MockKubectl(mode="thread",
+                              hang_substrings=("chunk_0001_try0",))
+        with SlurmArrayBackend(fn_spec=SPEC, num_workers=2,
+                               scheduler=KubernetesScheduler(
+                                   runner=kubectl),
+                               spool_dir=str(tmp_path),
+                               chunk_timeout_s=0.5, max_retries=2,
+                               poll_interval_s=0.005) as backend:
+            g = jax.random.uniform(jax.random.PRNGKey(3), (20, 3))
+            out = np.asarray(backend(g))
+            np.testing.assert_allclose(out, np.asarray(sphere(g)),
+                                       rtol=1e-6)
             assert backend.stats["timeouts"] >= 1
             assert backend.stats["retries"] >= 1
 
@@ -167,11 +228,13 @@ class TestTimeoutRetry:
             def cancel(self, handle):
                 pass
 
-        # queue delay (0.6s) far exceeds the chunk timeout (0.2s)
+        # queue delay (1.0s) far exceeds the chunk timeout (0.4s); the
+        # timeout is generous vs the instant eval so a loaded CI box
+        # doesn't time out the healthy chunk (0.2s proved too tight)
         with SlurmArrayBackend(fn_spec=SPEC, num_workers=2,
-                               scheduler=QueueingScheduler(0.6),
+                               scheduler=QueueingScheduler(1.0),
                                spool_dir=str(tmp_path),
-                               chunk_timeout_s=0.2, max_retries=0,
+                               chunk_timeout_s=0.4, max_retries=0,
                                poll_interval_s=0.01) as backend:
             g = jax.random.uniform(jax.random.PRNGKey(7), (12, 3))
             out = np.asarray(backend(g))
@@ -326,3 +389,307 @@ class TestSlurmScheduler:
         monkeypatch.setattr("repro.runtime.batchq.subprocess.run", fake)
         SlurmScheduler().cancel("4242_1")
         assert fake.calls == [["scancel", "4242_1"]]
+
+
+# ---------------------------------------------------------------------------
+# Kubernetes scheduler: command construction + state mapping (no cluster —
+# kubectl invocations are captured by a recording runner)
+# ---------------------------------------------------------------------------
+
+class _RecordingKubectl:
+    """Runner that records commands and replays canned responses."""
+
+    def __init__(self, responses=()):
+        self.calls = []
+        self.responses = list(responses)
+
+    def __call__(self, cmd):
+        self.calls.append(list(cmd))
+
+        class R:
+            returncode = 0
+            stdout = ""
+            stderr = ""
+
+        r = R()
+        if self.responses:
+            rc, stdout = self.responses.pop(0)
+            r.returncode, r.stdout = rc, stdout
+        return r
+
+
+class TestKubernetesScheduler:
+    def test_index_set_roundtrip(self):
+        assert _parse_index_set("1,3-5,7") == {1, 3, 4, 5, 7}
+        assert _parse_index_set("") == set()
+        assert _parse_index_set(None) == set()
+        assert _compress_index_set([7, 3, 4, 5, 1]) == "1,3-5,7"
+        assert _compress_index_set([]) == ""
+        for idxs in ([0], [0, 1, 2], [2, 5], [0, 2, 3, 9]):
+            assert _parse_index_set(_compress_index_set(idxs)) == set(idxs)
+
+    def test_apply_indexed_job_submission(self, tmp_path):
+        runner = _RecordingKubectl()
+        sched = KubernetesScheduler(namespace="ga", image="repo/worker:9",
+                                    python="python3", runner=runner,
+                                    env={"OMP_NUM_THREADS": 1})
+        job_dir = str(tmp_path / "job_000000")
+        os.makedirs(job_dir)
+        chunks = [chunk_path(job_dir, i, 0) for i in range(3)]
+        handles = sched.submit(chunks, job_dir=job_dir)
+        # one kubectl round-trip for the whole batch; per-index handles
+        assert len(runner.calls) == 1
+        cmd = runner.calls[0]
+        assert cmd[0] == "kubectl" and cmd[1] == "apply"
+        assert cmd[cmd.index("-n") + 1] == "ga"
+        assert [h.rpartition("/")[2] for h in handles] == ["0", "1", "2"]
+        assert len({h.rpartition("/")[0] for h in handles}) == 1
+        with open(cmd[cmd.index("-f") + 1]) as f:
+            spec = json.load(f)
+        assert spec["kind"] == "Job"
+        assert spec["metadata"]["namespace"] == "ga"
+        jspec = spec["spec"]
+        assert jspec["completionMode"] == "Indexed"
+        assert jspec["completions"] == 3 and jspec["parallelism"] == 3
+        container = jspec["template"]["spec"]["containers"][0]
+        assert container["image"] == "repo/worker:9"
+        shell = container["command"][-1]
+        # pod i resolves its chunk by completion index and runs the exact
+        # SLURM worker entrypoint
+        assert "JOB_COMPLETION_INDEX" in shell
+        assert "python3 -m repro.runtime.batchq" in shell
+        assert {"name": "OMP_NUM_THREADS", "value": "1"} in container["env"]
+        # shared-spool contract: the spool root is mounted at its own path
+        spool_root = os.path.dirname(os.path.abspath(job_dir))
+        assert container["volumeMounts"][0]["mountPath"] == spool_root
+        volume = jspec["template"]["spec"]["volumes"][0]
+        assert volume["hostPath"]["path"] == spool_root
+        # the chunk manifest maps index i -> chunk path
+        manifest = spec["metadata"]["annotations"][
+            KubernetesScheduler.MANIFEST_ANNOTATION]
+        assert open(manifest).read().splitlines() == chunks
+
+    def test_poll_state_mapping(self):
+        status_done = json.dumps(
+            {"status": {"active": 1, "completedIndexes": "0,2"}})
+        status_failed = json.dumps(
+            {"status": {"active": 1, "failedIndexes": "1"}})
+        status_running = json.dumps({"status": {"active": 2}})
+        status_pending = json.dumps({"status": {}})
+        status_job_failed = json.dumps(
+            {"status": {"conditions": [
+                {"type": "Failed", "status": "True"}]}})
+        for stdout, rc, idx, want in (
+                (status_done, 0, 0, "done"),
+                (status_done, 0, 1, "running"),
+                (status_failed, 0, 1, "failed"),
+                (status_running, 0, 0, "running"),
+                (status_pending, 0, 0, "pending"),
+                (status_job_failed, 0, 0, "failed"),
+                ("", 1, 0, "unknown")):
+            sched = KubernetesScheduler(
+                runner=_RecordingKubectl([(rc, stdout)]))
+            assert sched.poll(f"chambga-eval-1-0000/{idx}") == want
+
+    def test_cancel_deletes_only_single_completion_jobs(self, tmp_path):
+        runner = _RecordingKubectl()
+        sched = KubernetesScheduler(runner=runner)
+        job_dir = str(tmp_path)
+        multi = sched.submit([chunk_path(job_dir, i, 0) for i in range(2)],
+                             job_dir=job_dir)
+        single = sched.submit([chunk_path(job_dir, 1, 1)], job_dir=job_dir)
+        n_before = len(runner.calls)
+        sched.cancel(multi[0])      # K8s can't cancel one index: no-op
+        assert len(runner.calls) == n_before
+        sched.cancel(single[0])     # re-queue jobs are deleted outright
+        cmd = runner.calls[-1]
+        assert cmd[:3] == ["kubectl", "delete", "job"]
+        assert cmd[3] == single[0].rpartition("/")[0]
+
+    def test_reap_deletes_all_batch_jobs(self, tmp_path):
+        runner = _RecordingKubectl()
+        sched = KubernetesScheduler(runner=runner)
+        handles = sched.submit(
+            [chunk_path(str(tmp_path), i, 0) for i in range(2)],
+            job_dir=str(tmp_path))
+        handles += sched.submit([chunk_path(str(tmp_path), 0, 1)],
+                                job_dir=str(tmp_path))
+        sched.reap(handles)
+        deleted = {c[3] for c in runner.calls if c[1] == "delete"}
+        assert deleted == {h.rpartition("/")[0] for h in handles}
+        # reap is idempotent: forgotten jobs are not re-deleted
+        n = len(runner.calls)
+        sched.reap(handles)
+        assert len(runner.calls) == n
+
+
+# ---------------------------------------------------------------------------
+# spool garbage collection (keep_jobs pruning + superseded attempts)
+# ---------------------------------------------------------------------------
+
+class TestSpoolGC:
+    def test_long_run_keeps_at_most_keep_jobs_dirs(self, tmp_path):
+        """The acceptance case: job_* dirs must not accumulate unbounded
+        over a long run (one per epoch per evaluate)."""
+        with SlurmArrayBackend(fn_spec=SPEC, num_workers=2, keep_jobs=3,
+                               scheduler=LocalMockScheduler(mode="thread"),
+                               spool_dir=str(tmp_path), chunk_timeout_s=60,
+                               poll_interval_s=0.005) as backend:
+            g = np.ones((8, 3), np.float32)
+            for _ in range(10):
+                backend._host_eval(g)
+            assert backend.stats["jobs"] == 10
+            assert backend.stats["jobs_pruned"] == 7
+            remaining = sorted(os.path.basename(d) for d in
+                               glob.glob(str(tmp_path / "job_*")))
+            # the newest keep_jobs survive, oldest are pruned
+            assert remaining == ["job_000007", "job_000008", "job_000009"]
+
+    def test_keep_jobs_none_disables_pruning(self, tmp_path):
+        with SlurmArrayBackend(fn_spec=SPEC, num_workers=2, keep_jobs=None,
+                               scheduler=LocalMockScheduler(mode="thread"),
+                               spool_dir=str(tmp_path), chunk_timeout_s=60,
+                               poll_interval_s=0.005) as backend:
+            for _ in range(4):
+                backend._host_eval(np.ones((6, 2), np.float32))
+            assert len(glob.glob(str(tmp_path / "job_*"))) == 4
+
+    def test_superseded_attempt_files_pruned(self, tmp_path):
+        """Once a later attempt succeeds, the straggler's try0 files are
+        dead weight on the shared filesystem and must be deleted; the
+        winning attempt's files survive until the job dir itself is
+        pruned."""
+        sched = LocalMockScheduler(mode="thread",
+                                   hang_substrings=("chunk_0001_try0",))
+        with SlurmArrayBackend(fn_spec=SPEC, num_workers=2, keep_jobs=4,
+                               scheduler=sched, spool_dir=str(tmp_path),
+                               chunk_timeout_s=0.5, max_retries=2,
+                               poll_interval_s=0.005) as backend:
+            backend._host_eval(np.ones((8, 3), np.float32))
+        (job_dir,) = glob.glob(str(tmp_path / "job_*"))
+        names = set(os.listdir(job_dir))
+        assert "chunk_0001_try0.npz" not in names          # superseded
+        assert "chunk_0001_try1.npz" in names              # the winner
+        assert "chunk_0001_try1.result.npz" in names
+        # exactly one attempt per chunk survives, and it carries a result
+        # (a loaded CI box may have retried the healthy chunk too — the
+        # invariant is one winner per index, not which attempt won)
+        for idx in (0, 1):
+            kept = [n for n in names
+                    if n.startswith(f"chunk_{idx:04d}_try")
+                    and n.endswith(".npz") and ".result" not in n]
+            assert len(kept) == 1
+            assert kept[0][:-len(".npz")] + ".result.npz" in names
+
+
+# ---------------------------------------------------------------------------
+# cost-sized chunking (adaptive chunk sizing: array tasks finish together)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=60, deadline=None)
+@given(n=st.integers(1, 96), w=st.integers(1, 14),
+       seed=st.integers(0, 2**30), skew=st.floats(0.5, 3.0))
+def test_cost_sized_chunk_size_invariants(n, w, seed, skew):
+    """Sizes always sum to N, are >= 1, one per (capped) worker, and are
+    monotone in predicted cost: for distinct costs sorted descending, the
+    priciest chunk never holds more items than the cheapest. Per-chunk
+    predicted cost is within one item of the ideal equal share, and
+    scaling costs by a power of two (exact in fp) leaves the split
+    unchanged."""
+    rng = np.random.default_rng(seed)
+    cost = np.sort(rng.uniform(0.01, 1.0, n) ** skew)[::-1].copy()
+    cost += np.linspace(1e-6 * n, 0.0, n)        # break ties: distinct
+    sizes = cost_sized_chunk_sizes(cost, w)
+    weff = min(w, n)
+    assert len(sizes) == weff
+    assert sum(sizes) == n
+    assert min(sizes) >= 1
+    assert sizes[0] <= sizes[-1]                 # monotone in cost
+    bounds = np.cumsum(sizes)
+    chunk_costs = np.diff(np.concatenate(
+        [[0.0], np.cumsum(cost)[bounds - 1]]))
+    total = float(cost.sum())
+    assert chunk_costs.max() <= total / weff + cost.max() + 1e-9
+    assert cost_sized_chunk_sizes(cost * 32.0, w) == sizes
+
+
+class TestCostSizedChunks:
+    def test_uniform_cost_matches_equal_split(self):
+        for n, w in ((12, 4), (7, 3), (64, 8), (5, 5)):
+            sizes = cost_sized_chunk_sizes(np.full(n, 2.5), w)
+            equal = [a.size for a in np.array_split(np.arange(n), w)]
+            assert sorted(sizes) == sorted(equal)
+
+    def test_degenerate_inputs(self):
+        assert cost_sized_chunk_sizes(np.ones(5), 1) == [5]
+        assert cost_sized_chunk_sizes(np.ones(0), 4) == []
+        assert cost_sized_chunk_sizes(np.ones(2), 7) == [1, 1]
+        # zero / non-finite costs degrade to the equal split
+        assert sum(cost_sized_chunk_sizes(np.zeros(9), 3)) == 9
+        assert sum(cost_sized_chunk_sizes(
+            np.asarray([np.inf, np.nan, 1.0, -2.0, 1.0]), 2)) == 5
+
+    def test_padded_dispatch_never_spools_sentinel_rows(self, tmp_path):
+        """N % W != 0: the broker pads with duplicates of genome 0 whose
+        results are discarded — the cost-sizing backend must skip them
+        (marked -inf), not pile the 'free' pads into one chunk that
+        silently re-evaluates genome 0 up to W-1 times at its true cost."""
+        n, w = 13, 4                             # pads 13 -> 16
+        g = jax.random.uniform(jax.random.PRNGKey(11), (n, 3))
+        with SlurmArrayBackend(fn_spec=SPEC, num_workers=w, keep_jobs=4,
+                               scheduler=LocalMockScheduler(mode="thread"),
+                               spool_dir=str(tmp_path), chunk_timeout_s=60,
+                               poll_interval_s=0.005) as backend:
+            broker = Broker(cost_fn=lambda x: jnp.sum(jnp.abs(x), -1) + 0.1,
+                            num_workers=w, backend=backend)
+            fit, stats = jax.jit(broker.evaluate)(g)
+            np.testing.assert_allclose(np.asarray(fit),
+                                       np.asarray(sphere(g)), rtol=1e-6)
+            assert int(stats["padded"]) == 3
+            (job_dir,) = glob.glob(str(tmp_path / "job_*"))
+            spooled = sum(
+                np.load(p)["genomes"].shape[0] for p in
+                glob.glob(os.path.join(job_dir, "chunk_*_try0.npz")))
+            assert spooled == n                  # real rows only, no pads
+
+    def test_hot_genome_isolated_in_small_chunk(self, tmp_path):
+        """Integration: a heavily skewed cost model makes the backend
+        spool variable-size chunks — the hot genome rides alone while the
+        cheap ones spread over the remaining tasks — and fitness still
+        lands in the right rows after the host-side re-sort."""
+        n, w = 24, 4
+        g = jax.random.uniform(jax.random.PRNGKey(9), (n, 5))
+        cost_fn = lambda x: jnp.where(jnp.arange(n) == 5, 50.0, 1.0)
+        with SlurmArrayBackend(fn_spec=SPEC, num_workers=w, keep_jobs=4,
+                               scheduler=LocalMockScheduler(mode="thread"),
+                               spool_dir=str(tmp_path), chunk_timeout_s=60,
+                               poll_interval_s=0.005) as backend:
+            broker = Broker(cost_fn=cost_fn, num_workers=w,
+                            backend=backend)
+            fit, _ = jax.jit(broker.evaluate)(g)
+            np.testing.assert_allclose(np.asarray(fit),
+                                       np.asarray(sphere(g)), rtol=1e-6)
+            (job_dir,) = glob.glob(str(tmp_path / "job_*"))
+            chunk_rows = sorted(
+                np.load(p)["genomes"].shape[0] for p in
+                glob.glob(os.path.join(job_dir, "chunk_*_try0.npz")))
+            assert sum(chunk_rows) == n
+            assert chunk_rows[0] == 1            # the hot genome, alone
+            assert len(chunk_rows) == w
+
+
+# ---------------------------------------------------------------------------
+# ga_run end-to-end on the k8s-mock dispatch backend (the acceptance run:
+# full engine loop -> broker -> spool -> mocked indexed Jobs -> results)
+# ---------------------------------------------------------------------------
+
+def test_ga_run_k8s_mock_e2e(tmp_path):
+    from repro.launch.ga_run import main
+    pop, hist = main(["--fitness", "sphere", "--dispatch-backend",
+                      "k8s-mock", "--genes", "4", "--islands", "2",
+                      "--pop", "8", "--epochs", "2", "--gens-per-epoch",
+                      "2", "--chunk-timeout-s", "60", "--keep-jobs", "2",
+                      "--spool-dir", str(tmp_path / "spool")])
+    assert len(hist) == 2
+    # spool GC held: at most --keep-jobs job dirs left behind
+    assert len(glob.glob(str(tmp_path / "spool" / "job_*"))) <= 2

@@ -228,6 +228,29 @@ class TestCostEMA:
         np.testing.assert_array_equal(np.asarray(out),
                                       np.full(12, 1.0, np.float32))
 
+    def test_prime_fn_seeds_cold_start(self):
+        """CostEMA priming (ROADMAP): with a static cost model attached,
+        the FIRST read returns its prediction instead of a uniform table
+        — the first dispatch of a skewed workload is already balanced —
+        and measured wall times refine from there."""
+        static = lambda g: jnp.sum(jnp.abs(g), axis=-1)
+        ema = CostEMA(alpha=0.5, prime_fn=static)
+        g = jax.random.uniform(jax.random.PRNGKey(4), (8, 3))
+        out = jax.jit(lambda x: ema(x))(g)
+        expect = np.asarray(static(g))
+        np.testing.assert_allclose(np.asarray(out), expect, rtol=1e-6)
+        # online refinement folds into the primed table, not a reset one
+        ema.observe(np.arange(8), [4, 4], [4.0, 8.0])
+        est = ema.snapshot(8)
+        np.testing.assert_allclose(
+            est[:4], 0.5 * expect[:4] + 0.5 * 1.0, rtol=1e-6)
+        np.testing.assert_allclose(
+            est[4:], 0.5 * expect[4:] + 0.5 * 2.0, rtol=1e-6)
+        # reset (e.g. elastic resize) re-primes on the next read
+        ema.reset()
+        out2 = jax.jit(lambda x: ema(x))(g)
+        np.testing.assert_allclose(np.asarray(out2), expect, rtol=1e-6)
+
     def test_learns_hot_lane_and_rebalances(self):
         """A simulator with one expensive slot group: round 1 exposes the
         hot lane, the EMA charges its slots, and the next round's
