@@ -6,6 +6,14 @@ migration — against the pure fitness evaluation, plus the straggler-backup
 variant, the decoupled host-pool path (unlearned vs learned EMA cost
 model on a heterogeneous simulator), and the batch-queue (mock SLURM)
 spool overhead. Supports the "negligible overhead" claim quantitatively.
+
+Message-queue rows: ``batchq_tiny_chunks`` vs ``mq_tiny_chunks`` measures
+startup amortization on a many-tiny-chunks workload (fresh numpy
+interpreter per array task vs a persistent worker fleet; ~140x on a cold
+spawn), and ``ema_first_update_{batchq,mq}`` measures cost-model
+convergence WITHIN one generation — how far into a skewed batch the first
+``CostEMA`` observation lands (batch-end collection ≈ the full makespan;
+the streaming queue ≈ the fastest chunk).
 """
 from __future__ import annotations
 
@@ -182,6 +190,95 @@ def run(csv: bool = True):
         rows.append((f"batchq_{sizing}_chunks", us))
         if csv:
             print(f"batchq_{sizing}_chunks,{us:.0f},us_per_evaluate")
+
+    # persistent-worker message queue vs batch spool on a MANY-TINY-CHUNKS
+    # workload: 24 trivial genomes over 6 chunks. The batch backend spawns
+    # a fresh numpy interpreter per chunk per evaluate (~0.8s startup each,
+    # bounded by core count); the mq fleet pays startup once at launch and
+    # each evaluate is only queue-file traffic — the startup-amortization
+    # claim, measured
+    from repro.runtime.mq import LocalWorkerPool, QueueBackend
+    tiny_w = 6
+    tiny_g = jnp.asarray(np.random.default_rng(2).uniform(
+        -1, 1, (24, 6)).astype(np.float32))
+    backend = SlurmArrayBackend(
+        fn_spec="repro.fitness.hostsim:sphere", num_workers=tiny_w,
+        scheduler=LocalMockScheduler(mode="subprocess"),
+        chunk_timeout_s=300, poll_interval_s=0.01)
+    ev = jax.jit(lambda g, b=Broker(backend=backend): b.evaluate(g)[0])
+    jax.block_until_ready(ev(tiny_g))
+    us = _time(ev, tiny_g, reps=2)
+    backend.close()
+    rows.append(("batchq_tiny_chunks", us))
+    if csv:
+        print(f"batchq_tiny_chunks,{us:.0f},us_per_evaluate")
+    backend = QueueBackend(
+        fn_spec="repro.fitness.hostsim:sphere", num_workers=tiny_w,
+        worker_pool=LocalWorkerPool(num_workers=tiny_w, mode="subprocess"),
+        chunk_timeout_s=300, poll_interval_s=0.002)
+    ev = jax.jit(lambda g, b=Broker(backend=backend): b.evaluate(g)[0])
+    jax.block_until_ready(ev(tiny_g))           # includes fleet spin-up
+    us = _time(ev, tiny_g, reps=2)
+    backend.close()
+    rows.append(("mq_tiny_chunks", us))
+    if csv:
+        print(f"mq_tiny_chunks,{us:.0f},us_per_evaluate")
+
+    # cost convergence WITHIN a generation: time from batch start to the
+    # FIRST CostEMA observation on a skewed simulator. The batch backend
+    # observes at collect time (≈ the full makespan); the mq backend
+    # streams each chunk's duration as it lands (≈ the fastest chunk) —
+    # the next dispatch decision can be made that much earlier
+    class _FirstObsEMA(CostEMA):
+        def __init__(self):
+            super().__init__(alpha=0.5)
+            self.t_first = None
+
+        def observe(self, perm, chunk_sizes, durations):
+            if self.t_first is None:
+                self.t_first = time.perf_counter()
+            super().observe(perm, chunk_sizes, durations)
+
+    ema_n, ema_w = 32, 4
+    ema_g = np.random.default_rng(3).uniform(
+        -1, 1, (ema_n, 6)).astype(np.float32)
+    ema_g[:, 0] = -1.0
+    # the hot genomes fill exactly ONE lane of the uniform (unlearned)
+    # balanced assignment: that chunk serializes the whole hot makespan
+    # while the other chunks land almost immediately — the gap between
+    # "first chunk done" and "batch done" that streaming exploits
+    ema_perm0 = np.asarray(_bp(jnp.ones(ema_n), ema_w))
+    ema_g[ema_perm0[:ema_n // ema_w], 0] = 1.0
+    ema_gj = jnp.asarray(ema_g)
+    ema_fn = functools.partial(hostsim.delay_sphere, slow_s=0.030)
+    for name, make in (
+            ("batchq", lambda ema: SlurmArrayBackend(
+                ema_fn, num_workers=ema_w,
+                scheduler=LocalMockScheduler(mode="thread"),
+                chunk_timeout_s=60, poll_interval_s=0.002, cost_ema=ema)),
+            ("mq", lambda ema: QueueBackend(
+                ema_fn, num_workers=ema_w,
+                worker_pool=LocalWorkerPool(num_workers=ema_w,
+                                            mode="thread", fn=ema_fn,
+                                            poll_s=0.002),
+                chunk_timeout_s=60, poll_interval_s=0.002, cost_ema=ema))):
+        ema = _FirstObsEMA()
+        backend = make(ema)
+        broker = Broker(cost_fn=ema, num_workers=ema_w, backend=backend)
+        ev = jax.jit(lambda g, b=broker: b.evaluate(g)[0])
+        jax.block_until_ready(ev(jnp.asarray(
+            np.full_like(ema_g, -1.0))))        # compile on an all-fast batch
+        ema.reset()
+        ema.t_first = None
+        t0 = time.perf_counter()
+        jax.block_until_ready(ev(ema_gj))
+        t_batch = time.perf_counter() - t0
+        us = (ema.t_first - t0) * 1e6
+        backend.close()
+        rows.append((f"ema_first_update_{name}", us))
+        if csv:
+            print(f"ema_first_update_{name},{us:.0f},us_into_a_"
+                  f"{t_batch * 1e3:.0f}ms_batch")
 
     # engine loop: synchronous metric reads every epoch vs the pipelined
     # (async D2H + deferred device_get) path — async must be no slower

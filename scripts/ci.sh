@@ -8,9 +8,15 @@
 # thread-mode LocalMockScheduler workers in-process, and the Kubernetes
 # path (KubernetesScheduler against the in-process MockKubectl runner:
 # command construction + full submit->poll->result conformance, spool GC,
-# cost-sized chunking) without needing a cluster. Only multi-second
-# subprocess e2e tests (SLURM and k8s-mock array-task interpreter spawns,
-# multidevice runs) are @pytest.mark.slow and deferred to the full lane.
+# cost-sized chunking) without needing a cluster. It also includes the
+# message-queue subsystem (tests/test_mq.py): the shared DispatchBackend
+# conformance suite over QueueBackend, lease-expiry -> re-queue, streaming
+# CostEMA, broker-directory GC bounds, a Scheduler-launched fleet, and an
+# in-process `ga_run --dispatch-backend mq-mock` e2e checked bit-identical
+# against InlineBackend — all on thread-mode workers. Only multi-second
+# subprocess e2e tests (SLURM / k8s-mock array-task and persistent mq
+# worker interpreter spawns, multidevice runs) are @pytest.mark.slow and
+# deferred to the full lane.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 

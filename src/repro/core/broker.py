@@ -69,6 +69,21 @@ selects the batch-scheduled backend (real scheduler vs local mock),
 ``--k8s-namespace`` / ``--k8s-image`` parameterize the Kubernetes Job
 manifest, and ``--cost-ema`` enables the learned cost model (primed from
 the fitness backend's static cost model when one exists).
+
+Message-queue dispatch (persistent workers)
+-------------------------------------------
+``repro.runtime.mq`` goes beyond per-batch scheduling: a file-backed
+broker directory holds a leased task queue with at-least-once delivery,
+and a fleet of PERSISTENT workers — launched once per run (locally, or as
+one long-lived SLURM array / K8s indexed Job through the same
+``Scheduler`` protocol) — loops claim -> evaluate -> report, amortizing
+startup across chunks and generations.
+:class:`~repro.runtime.mq.QueueBackend` implements ``DispatchBackend`` on
+top of it and *streams* results: each finished chunk's measured duration
+is fed to :class:`CostEMA` mid-flight instead of at batch end, so the next
+generation's dispatch sees sharpened estimates even under long tails
+(``ga_run --dispatch-backend mq|mq-mock``, ``--mq-dir``, ``--lease-s``,
+``--num-mq-workers``, ``--mq-fleet``).
 """
 from __future__ import annotations
 

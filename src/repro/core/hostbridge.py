@@ -63,7 +63,8 @@ class PureCallbackBridge:
         return False
 
 
-def cost_sized_chunk_sizes(cost, num_chunks: int) -> List[int]:
+def cost_sized_chunk_sizes(cost, num_chunks: int, *,
+                           min_chunk_cost: float = 0.0) -> List[int]:
     """Contiguous chunk sizes balancing *predicted cost*, not item count.
 
     Splits ``len(cost)`` items into ``min(num_chunks, n)`` contiguous
@@ -74,12 +75,21 @@ def cost_sized_chunk_sizes(cost, num_chunks: int) -> List[int]:
     oversized head item doesn't skew every later boundary), rounded half
     toward the pricier side.
 
+    ``min_chunk_cost`` folds sub-startup-cost chunks (ROADMAP "worker-side
+    batching of tiny chunks"): a chunk whose predicted cost is below the
+    floor — e.g. one cheap genome that would still pay a full pod /
+    array-task startup — is merged into its cheaper adjacent neighbor
+    (cheapest sub-floor chunk first) until every remaining chunk clears
+    the floor or only one chunk is left. Folding may return FEWER than
+    ``num_chunks`` sizes; callers treat the returned length as the
+    effective worker count. An all-zero cost vector degrades to the equal
+    split without folding (there is no cost signal to fold by).
+
     Invariants (property-tested): sizes sum to ``n``, every size >= 1,
-    each chunk's predicted cost <= total/num_chunks + max(cost), and for
-    distinct costs sorted descending the first (priciest) chunk is never
-    larger than the last (cheapest) — monotone in predicted cost.
-    Non-finite or negative costs are treated as zero; an all-zero cost
-    vector degrades to the equal split.
+    each unfolded chunk's predicted cost <= total/num_chunks + max(cost),
+    and for distinct costs sorted descending the first (priciest) chunk
+    is never larger than the last (cheapest) — monotone in predicted
+    cost. Non-finite or negative costs are treated as zero.
     """
     cost = np.asarray(cost, np.float64).ravel()
     n = int(cost.size)
@@ -102,7 +112,7 @@ def cost_sized_chunk_sizes(cost, num_chunks: int) -> List[int]:
         if remaining <= 0.0:                     # zero-cost tail: equal
             for a in np.array_split(np.arange(n - start), k):
                 sizes.append(a.size)
-            return sizes
+            return _fold_small_chunks(sizes, c, min_chunk_cost)
         target = done + remaining / k
         j = int(np.searchsorted(cum, target, side="left"))
         j = min(max(j, start), n - 1)
@@ -114,7 +124,80 @@ def cost_sized_chunk_sizes(cost, num_chunks: int) -> List[int]:
         sizes.append(b - start)
         start = b
     sizes.append(n - start)
+    return _fold_small_chunks(sizes, c, min_chunk_cost)
+
+
+def _fold_small_chunks(sizes: List[int], c: np.ndarray,
+                       min_chunk_cost: float) -> List[int]:
+    """Merge chunks whose predicted cost is below ``min_chunk_cost`` into
+    their cheaper adjacent neighbor (chunks are contiguous, so only
+    neighbors preserve contiguity). Sum of sizes and the >=1 floor are
+    preserved; merging only ever grows a chunk."""
+    if min_chunk_cost <= 0.0 or len(sizes) <= 1:
+        return sizes
+    sizes = list(sizes)
+    bounds = np.cumsum(sizes)
+    costs = [float(s) for s in np.add.reduceat(
+        c, np.concatenate([[0], bounds[:-1]]))]
+    while len(sizes) > 1:
+        below = [i for i, ck in enumerate(costs) if ck < min_chunk_cost]
+        if not below:
+            break
+        i = min(below, key=lambda k: costs[k])   # cheapest sub-floor first
+        if i == 0:
+            j = 1
+        elif i == len(sizes) - 1:
+            j = i - 1
+        else:
+            j = i - 1 if costs[i - 1] <= costs[i + 1] else i + 1
+        sizes[j] += sizes[i]
+        costs[j] += costs[i]
+        del sizes[i], costs[i]
     return sizes
+
+
+def plan_cost_chunks(genomes: np.ndarray, perm: Optional[np.ndarray],
+                     cost: np.ndarray, num_chunks: int, *,
+                     min_chunk_cost: float = 0.0):
+    """Shared cost-sized chunk planner for the decoupled dispatch backends
+    (batch spool and message queue).
+
+    Drops sentinel pad slots (cost == -inf: they duplicate genome 0 at its
+    TRUE price and their results are discarded by the broker's masked
+    inverse — dispatching them would hand one chunk up to W-1 hidden
+    re-evaluations), re-orders the real rows pricier-first (stable, so the
+    result scatter is deterministic; contiguous cost quantiles of the
+    broker's interleaved snake order would drag cheap riders into hot
+    chunks), and cuts at predicted-cost quantiles with ``min_chunk_cost``
+    folding.
+
+    Returns ``(chunks, sizes, order, perm)``: the genome chunks, their
+    sizes, the pricier-first row order (scatter results back with it; pad
+    rows get zeros), and ``perm`` re-ordered to match (keeps a ``CostEMA``
+    keyed to the original slots).
+    """
+    cost = np.asarray(cost, np.float64).ravel()
+    real_idx = np.nonzero(~np.isneginf(cost))[0]
+    order = real_idx[np.argsort(-cost[real_idx], kind="stable")]
+    genomes = np.asarray(genomes)[order]
+    if perm is not None:
+        perm = np.asarray(perm)[order]
+    w = int(min(num_chunks, max(1, order.size)))
+    sizes = cost_sized_chunk_sizes(cost[order], w,
+                                   min_chunk_cost=min_chunk_cost)
+    chunks = np.split(genomes, np.cumsum(sizes)[:-1])
+    return chunks, sizes, order, perm
+
+
+def scatter_chunk_results(out: np.ndarray, order: np.ndarray,
+                          n: int) -> np.ndarray:
+    """Inverse of :func:`plan_cost_chunks`' pricier-first re-order:
+    scatter the concatenated chunk results back to the shuffled batch's
+    row order. Dropped pad rows stay zero — the broker's masked inverse
+    permutation never reads them."""
+    full = np.zeros((n, out.shape[1]), np.float32)
+    full[order] = out
+    return full
 
 
 def collect_chunk_results(outs: List[tuple], cost_ema,

@@ -10,10 +10,15 @@ genomes ``(N, G)`` -> fitness ``(N, 1)`` float32, minimized.
 overhead study's load model — possible here because host workers, unlike
 jitted code, can block), giving the broker's cost model something
 genuinely heterogeneous to balance. ``always_fail`` exercises the
-retry/re-queue path.
+retry/re-queue path. ``worker_pid`` reports the evaluating interpreter's
+PID as the fitness, letting dispatch tests observe WHICH worker served
+each genome — e.g. that a persistent message-queue fleet
+(``repro.runtime.mq``) reuses the same interpreters across generations,
+where batch array tasks spawn a fresh one per chunk.
 """
 from __future__ import annotations
 
+import os
 import time
 
 import numpy as np
@@ -70,3 +75,11 @@ def delay_sphere(genomes, *, slow_s: float = 0.004,
 
 def always_fail(genomes) -> np.ndarray:
     raise RuntimeError("hostsim.always_fail: simulated simulator crash")
+
+
+def worker_pid(genomes) -> np.ndarray:
+    """Fitness = the evaluating process id (constant per interpreter;
+    exact in float32 up to Linux's pid_max of 2^22). Not a real
+    objective — a probe for worker-identity assertions."""
+    g = np.asarray(genomes, np.float32)
+    return np.full((g.shape[0], 1), float(os.getpid()), np.float32)

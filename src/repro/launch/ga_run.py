@@ -18,6 +18,11 @@ Usage:
   # identical spool path against an in-process kubectl, no cluster)
   PYTHONPATH=src python -m repro.launch.ga_run --fitness sphere \
       --dispatch-backend k8s --k8s-namespace ga --k8s-image my/worker:1
+  # persistent-worker message queue: the fleet starts once and streams
+  # results (mq-mock drives the same queue on in-process threads)
+  PYTHONPATH=src python -m repro.launch.ga_run --fitness sphere \
+      --dispatch-backend mq --mq-fleet slurm --num-mq-workers 16 \
+      --cost-ema
 """
 from __future__ import annotations
 
@@ -50,7 +55,32 @@ Schedulers (--dispatch-backend slurm|slurm-mock|k8s|k8s-mock):
   mounted at the same path in every worker pod). Completed job_* spool
   dirs are pruned down to --keep-jobs; chunks are sized by predicted
   per-genome cost whenever a cost model is active (equal counts
-  otherwise).
+  otherwise); chunks predicted cheaper than --min-chunk-cost-s are
+  folded into a neighbor instead of paying a full task startup.
+
+Message queue (--dispatch-backend mq|mq-mock):
+  The paper's central broker as a persistent subsystem: --mq-dir holds a
+  file-backed task queue + result queue (same shared-volume contract as
+  the batch spool), and a fleet of PERSISTENT workers — launched once,
+  not per batch — loops claim -> evaluate -> report, amortizing
+  interpreter startup and fitness resolution across every chunk of every
+  generation. Delivery is at-least-once: a worker claims a task by
+  atomic rename and heartbeats a lease while evaluating; the manager
+  re-queues any task whose lease goes stale for --lease-s (dead-worker
+  liveness, no retry budget consumed) and keeps --chunk-timeout-s as the
+  backstop for live-but-stuck workers (same retry semantics as the batch
+  backends). Results are consumed as a stream: each finished chunk's
+  measured duration reaches the --cost-ema model mid-flight, before the
+  batch's stragglers land.
+    mq         persistent workers; the fleet is --mq-fleet local (numpy
+               subprocesses on this host), or slurm / k8s — ONE
+               long-lived array job / indexed Job submitted through the
+               same Scheduler protocol via *.worker.json tickets.
+    mq-mock    in-process thread workers — CI and smoke runs.
+  --num-mq-workers sizes the fleet (default: the dispatch lane count).
+  The broker directory stays bounded: completed jobs are reduced to
+  their winning result files and swept beyond --keep-jobs, stale leases
+  of killed workers included.
 """
 
 from repro.configs.base import GAConfig
@@ -130,13 +160,16 @@ def main(argv=None):
     ap.add_argument("--wallclock-s", type=float, default=None)
     ap.add_argument("--dispatch-backend", default="inline",
                     choices=("inline", "host-thread", "host-process",
-                             "slurm", "slurm-mock", "k8s", "k8s-mock"),
+                             "slurm", "slurm-mock", "k8s", "k8s-mock",
+                             "mq", "mq-mock"),
                     help="inline: fitness traced into the XLA program; "
                          "host-*: decoupled simulation backend on a host "
                          "executor pool (external/embedded simulators); "
                          "slurm: batch-scheduled array jobs via sbatch; "
                          "k8s: Kubernetes indexed Jobs via kubectl; "
-                         "*-mock: same spool path on local workers (no "
+                         "mq: persistent-worker message queue (leased "
+                         "tasks, streaming results; see Message queue "
+                         "below); *-mock: same path on local workers (no "
                          "cluster needed; see Schedulers below)")
     ap.add_argument("--num-workers", type=int, default=None,
                     help="broker dispatch lanes (default: dp shards)")
@@ -158,7 +191,29 @@ def main(argv=None):
     ap.add_argument("--keep-jobs", type=int, default=4,
                     help="completed job_* spool directories kept per "
                          "batch backend (older ones are pruned; -1 "
-                         "disables pruning)")
+                         "disables pruning); for mq backends, completed "
+                         "queue jobs kept before their files are swept")
+    ap.add_argument("--min-chunk-cost-s", type=float, default=0.0,
+                    help="fold cost-sized chunks predicted cheaper than "
+                         "this into a neighbor (a tiny chunk still pays "
+                         "a full task startup); 0 disables")
+    ap.add_argument("--mq-dir", default=None,
+                    help="message-queue broker directory (mq backends; "
+                         "default: a fresh temp dir). Must be a shared "
+                         "volume reachable by every worker")
+    ap.add_argument("--lease-s", type=float, default=15.0,
+                    help="mq task lease: workers heartbeat at lease/4; "
+                         "the manager re-queues tasks whose lease goes "
+                         "stale this long (dead-worker liveness)")
+    ap.add_argument("--num-mq-workers", type=int, default=None,
+                    help="persistent mq fleet size (default: the "
+                         "dispatch lane count)")
+    ap.add_argument("--mq-fleet", default="local",
+                    choices=("local", "slurm", "k8s"),
+                    help="how --dispatch-backend mq launches its "
+                         "persistent fleet: local numpy subprocesses, or "
+                         "ONE long-lived SLURM array / K8s indexed Job "
+                         "through the Scheduler protocol")
     ap.add_argument("--cost-ema", action="store_true",
                     help="learn the dispatch cost model online from "
                          "measured per-lane wall times (needs a "
@@ -177,7 +232,8 @@ def main(argv=None):
     if args.cost_ema:
         if args.dispatch_backend == "inline":
             ap.error("--cost-ema needs measured per-lane wall times — "
-                     "use a decoupled backend (host-*, slurm* or k8s*)")
+                     "use a decoupled backend (host-*, slurm*, k8s* "
+                     "or mq*)")
         from repro.core.broker import CostEMA
         # when the fitness backend ships a static cost model (HVDC), it
         # primes the EMA's slot table so even the FIRST dispatch of a
@@ -227,7 +283,51 @@ def main(argv=None):
             scheduler=scheduler, spool_dir=args.spool_dir,
             chunk_timeout_s=(300.0 if args.chunk_timeout_s is None
                              else timeout),
+            min_chunk_cost_s=args.min_chunk_cost_s,
             keep_jobs=None if args.keep_jobs < 0 else args.keep_jobs)
+    elif args.dispatch_backend.startswith("mq"):
+        from repro.runtime.mq import (LocalWorkerPool, MQWorkerFleet,
+                                      QueueBackend)
+        from repro.fitness import hostsim
+        fn_spec = (f"repro.fitness.hostsim:{args.fitness}"
+                   if hasattr(hostsim, args.fitness) else None)
+        n_mq = args.num_mq_workers or workers
+        if args.dispatch_backend == "mq-mock":
+            # in-process thread workers: the CI / smoke-run fleet
+            pool = LocalWorkerPool(num_workers=n_mq, mode="thread",
+                                   lease_s=args.lease_s)
+        elif args.mq_fleet == "local":
+            # persistent numpy-only worker subprocesses on this host
+            pool = LocalWorkerPool(num_workers=n_mq, mode="subprocess",
+                                   lease_s=args.lease_s)
+        else:
+            # ONE long-lived array job / indexed Job carrying the whole
+            # fleet, submitted through the batchq Scheduler protocol
+            if not args.mq_dir:
+                ap.error("--mq-fleet slurm|k8s needs an explicit --mq-dir "
+                         "on a volume shared with the cluster workers — a "
+                         "local temp dir would leave the fleet idling on "
+                         "a path it cannot see")
+            from repro.runtime.batchq import (KubernetesScheduler,
+                                              SlurmScheduler)
+            # the fleet must outlive the whole run, not SlurmScheduler's
+            # 30-minute per-batch default
+            sched = (SlurmScheduler(partition=args.slurm_partition,
+                                    time_limit="7-00:00:00")
+                     if args.mq_fleet == "slurm" else
+                     KubernetesScheduler(namespace=args.k8s_namespace,
+                                         image=args.k8s_image))
+            pool = MQWorkerFleet(sched, n_mq, lease_s=args.lease_s)
+        backend = QueueBackend(
+            fitness_fn, fn_spec=fn_spec,
+            num_objectives=cfg.num_objectives,
+            num_workers=workers,
+            mq_dir=args.mq_dir, lease_s=args.lease_s,
+            chunk_timeout_s=(300.0 if args.chunk_timeout_s is None
+                             else timeout),
+            min_chunk_cost_s=args.min_chunk_cost_s,
+            keep_jobs=None if args.keep_jobs < 0 else args.keep_jobs,
+            worker_pool=pool)
     # context-managed teardown: a crash anywhere past this point (engine
     # construction included) must still drain in-flight pure_callbacks
     # and free the pool / temp spool — a failed run must not strand them

@@ -15,6 +15,9 @@ _EXPORTS = {
     "SlurmScheduler": "repro.runtime.batchq",
     "LocalMockScheduler": "repro.runtime.batchq",
     "Scheduler": "repro.runtime.batchq",
+    "QueueBackend": "repro.runtime.mq",
+    "LocalWorkerPool": "repro.runtime.mq",
+    "MQWorkerFleet": "repro.runtime.mq",
 }
 
 __all__ = list(_EXPORTS)

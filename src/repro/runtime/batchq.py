@@ -58,6 +58,17 @@ Import discipline: jax is imported lazily inside the backend methods so
 the worker entrypoint stays numpy-only — at 3,500-core scale the array
 tasks' interpreter startup is on the critical path, and a fitness function
 that needs jax pays for it only when it actually imports it.
+
+Persistent-worker alternative: this backend is batch-synchronous — every
+``evaluate`` pays scheduler submission and worker startup per chunk. The
+message-queue subsystem (``repro.runtime.mq``) keeps the same shared-
+volume spool contract but inverts the flow: a fleet of persistent workers
+(launched ONCE through this module's ``Scheduler`` protocol via
+``*.worker.json`` tickets — see :func:`run_worker`) pulls leased tasks
+from a queue directory and streams results back, amortizing startup
+across chunks and generations and feeding the ``CostEMA`` mid-flight. Its
+module docstring documents the full queue contract (atomic-rename claims,
+lease/heartbeat liveness, at-least-once delivery).
 """
 from __future__ import annotations
 
@@ -78,7 +89,7 @@ from typing import (Callable, Dict, Iterable, List, Optional, Protocol,
 import numpy as np
 
 from repro.core.hostbridge import (PureCallbackBridge, collect_chunk_results,
-                                   cost_sized_chunk_sizes)
+                                   plan_cost_chunks, scatter_chunk_results)
 
 _PAYLOAD = "payload.json"
 _FN_PKL = "fn.pkl"
@@ -129,7 +140,17 @@ def resolve_fn(job_dir: str) -> Callable:
 
 def run_worker(chunk: str) -> int:
     """Array-task body: evaluate one spooled chunk. Exceptions become a
-    ``.fail`` marker (so the polling backend re-queues) + nonzero exit."""
+    ``.fail`` marker (so the polling backend re-queues) + nonzero exit.
+
+    A ``*.worker.json`` path is not a chunk but a persistent-fleet ticket:
+    the same scheduler work item then runs a long-lived message-queue
+    worker (``repro.runtime.mq``) instead of a single chunk — this is how
+    a persistent fleet is launched as ONE long-lived SLURM array /
+    Kubernetes indexed Job through the unchanged ``Scheduler`` protocol
+    (see :class:`repro.runtime.mq.MQWorkerFleet`)."""
+    if chunk.endswith(".worker.json"):
+        from repro.runtime import mq
+        return mq.run_worker_ticket(chunk)
     try:
         fn = resolve_fn(os.path.dirname(chunk))
         genomes = np.load(chunk)["genomes"]
@@ -745,7 +766,11 @@ class SlurmArrayBackend(PureCallbackBridge):
     is re-ordered pricier-first host-side (contiguous cost quantiles of
     the broker's interleaved snake order would drag cheap riders into
     every expensive chunk) and results are scattered back before
-    returning. ``chunk_sizing="equal"`` forces the legacy equal split.
+    returning. ``min_chunk_cost_s`` folds chunks whose predicted cost is
+    below the floor into their cheapest neighbor — a 1-genome chunk still
+    pays a full pod/array-task startup, so sub-startup-cost chunks are
+    merged instead of scheduled. ``chunk_sizing="equal"`` forces the
+    legacy equal split.
 
     Per-chunk ``chunk_timeout_s`` (clocked from when the work item leaves
     the scheduler queue — PENDING time doesn't count) + re-queue of
@@ -776,6 +801,7 @@ class SlurmArrayBackend(PureCallbackBridge):
                  poll_interval_s: float = 0.02,
                  cost_ema=None,
                  chunk_sizing: str = "cost",
+                 min_chunk_cost_s: float = 0.0,
                  keep_jobs: Optional[int] = 4):
         if fitness_fn is None and not fn_spec:
             raise ValueError("need fitness_fn (pickled) or fn_spec "
@@ -797,6 +823,7 @@ class SlurmArrayBackend(PureCallbackBridge):
         self.poll_interval_s = poll_interval_s
         self.cost_ema = cost_ema
         self.chunk_sizing = chunk_sizing
+        self.min_chunk_cost_s = float(min_chunk_cost_s)
         self.keep_jobs = keep_jobs
         self.stats = {"jobs": 0, "retries": 0, "timeouts": 0,
                       "jobs_pruned": 0}
@@ -847,24 +874,13 @@ class SlurmArrayBackend(PureCallbackBridge):
         w = min(self.num_workers, max(1, n))
         order = None
         if cost is not None and self.chunk_sizing == "cost" and w > 1:
-            # cost-sized chunking: drop sentinel pad slots (cost == -inf;
-            # they duplicate genome 0 at its TRUE price and their results
-            # are discarded by the broker's masked inverse — spooling them
-            # would hand one chunk up to W-1 hidden re-evaluations), then
-            # re-order the real rows pricier-first (stable, so the result
-            # scatter is deterministic) and cut at predicted-cost
-            # quantiles — expensive genomes land in small chunks and every
-            # array task finishes in ~total/W predicted time
-            cost = np.asarray(cost, np.float64).ravel()
-            real_idx = np.nonzero(~np.isneginf(cost))[0]
-            order = real_idx[np.argsort(-cost[real_idx], kind="stable")]
-            genomes = genomes[order]
-            if perm is not None:
-                perm = np.asarray(perm)[order]   # keeps CostEMA keyed to
-                                                 # the original slots
-            w = min(w, max(1, order.size))
-            sizes = cost_sized_chunk_sizes(cost[order], w)
-            chunks = np.split(genomes, np.cumsum(sizes)[:-1])
+            # shared cost-sized planner: drop sentinel pads, re-order
+            # pricier-first, cut at predicted-cost quantiles, fold chunks
+            # cheaper than min_chunk_cost_s into a neighbor (a 1-genome
+            # chunk still pays a full pod/array-task startup)
+            chunks, _sizes, order, perm = plan_cost_chunks(
+                genomes, perm, cost, w,
+                min_chunk_cost=self.min_chunk_cost_s)
         else:
             chunks = np.array_split(genomes, w)
         job_dir = self._new_job_dir()
@@ -955,11 +971,7 @@ class SlurmArrayBackend(PureCallbackBridge):
                                     [len(c) for c in chunks])
         self._finish_job(job_dir)
         if order is not None:
-            # scatter results back to shuffled order; dropped pad rows get
-            # zeros (the broker's masked inverse never reads them)
-            full = np.zeros((n, out.shape[1]), np.float32)
-            full[order] = out
-            out = full
+            out = scatter_chunk_results(out, order, n)
         return out
 
     # -- spool garbage collection --------------------------------------

@@ -1,0 +1,943 @@
+"""Persistent-worker message queue: the paper's central broker as a subsystem.
+
+CHAMB-GA's architectural core is "a central message broker coordinating
+asynchronous manager-worker communication between microservices". The
+batch-scheduled path (``repro.runtime.batchq``) approximates it one batch
+at a time — spool, submit, poll, collect — so every generation pays full
+scheduler/pod startup per chunk and the learned cost model only sees
+timings after a whole batch lands. This module is the queue itself: a
+file-backed broker directory (the same shared-volume contract as the
+batchq spool, so it runs unchanged on SLURM and Kubernetes) holding a task
+queue and a result queue with **at-least-once delivery**, consumed by
+**persistent workers** that amortize startup across chunks *and*
+generations.
+
+Broker directory layout (one directory per :class:`QueueBackend`)::
+
+    <mq>/payload.json            # num_objectives + fitness import spec
+    <mq>/fn.pkl                  # pickled fitness (when no import spec)
+    <mq>/tasks/                  # READY queue: one .npz task per chunk
+        j000007_c0003_t0_d0.npz  #   job 7, chunk 3, attempt 0, delivery 0
+    <mq>/claimed/                # LEASED: tasks renamed here by workers
+        j000007_c0003_t0_d0.npz
+        j000007_c0003_t0_d0.npz.lease   # heartbeat file (mtime renewed)
+    <mq>/results/
+        j000007_c0003_t0_d0.result.npz  # fitness + duration (atomic)
+        j000007_c0003_t0_d0.fail        # traceback marker on failure
+    <mq>/fleet/                  # worker tickets (Scheduler-launched fleet)
+    <mq>/STOP                    # shutdown sentinel: workers exit
+
+Queue contract (lease / heartbeat semantics)
+--------------------------------------------
+* **Claim** is an atomic ``os.rename`` from ``tasks/`` into ``claimed/``
+  — exactly one worker wins; losers see ``OSError`` and move on. The
+  winner immediately writes a ``.lease`` file and renews its mtime every
+  ``lease_s / 4`` from a heartbeat thread while evaluating.
+* **Report**: results and failure markers are written atomically
+  (tmp + ``os.replace``) into ``results/``; the worker then removes its
+  claimed file and lease. Workers never talk to the manager directly —
+  delivery is always via the shared filesystem, which is why the broker
+  directory must be a volume shared between manager and workers (SLURM:
+  the cluster FS; Kubernetes: a volume mounted at the same path in every
+  worker pod), exactly like the batchq spool.
+* **Liveness, not just timeouts**: the manager re-queues a claimed task
+  whose lease has gone stale for ``lease_s`` (the worker died — renaming
+  the claimed file back into ``tasks/`` under a bumped delivery suffix),
+  replacing timeout-only straggler detection with heartbeat liveness.
+  Lease re-queues do NOT consume the retry budget; ``chunk_timeout_s``
+  (clocked from the first claim of the current attempt) remains the
+  backstop for live-but-stuck workers and feeds the shared
+  ``run_chunks_retry`` attempt budget, same as the batch backends.
+* **At-least-once**: a stale-lease re-queue races the original worker
+  (which may merely have been slow); every delivery of a chunk evaluates
+  identical genomes, and the manager accepts the FIRST result from any
+  delivery or attempt it ever issued. Duplicate results are garbage-
+  collected with the job.
+
+Persistent workers (``python -m repro.runtime.mq --worker --mq-dir D``)
+are numpy-only like the batchq array task: they resolve the fitness once
+(import spec or pickle) and then loop claim -> evaluate -> report, so
+interpreter startup and fitness resolution are paid once per worker
+instead of once per chunk. :class:`LocalWorkerPool` runs the same loop on
+threads (fast CI) or subprocesses (cluster stand-in), with
+``hang_substrings`` fault injection (a worker that claims a matching task
+dies without reporting — exercising the lease path). On a real cluster
+the fleet is launched ONCE as a long-lived SLURM array / Kubernetes
+indexed Job via :class:`MQWorkerFleet`, which rides the existing batchq
+``Scheduler`` protocol: each array task / pod receives a ``*.worker.json``
+ticket instead of a chunk, and the standard
+``python -m repro.runtime.batchq --worker`` entrypoint detects the ticket
+and becomes a persistent queue worker.
+
+:class:`QueueBackend` is the manager side — a ``DispatchBackend`` (via
+``PureCallbackBridge``) that enqueues cost-sized chunks
+(``hostbridge.plan_cost_chunks``: pad-dropping, pricier-first re-order,
+``min_chunk_cost_s`` folding of sub-startup-cost chunks) and then
+**streams** the result queue: each finished chunk's measured duration is
+fed to ``CostEMA.observe`` the moment it lands — mid-flight, not at batch
+end — so under long tails the next generation's dispatch already sees
+sharpened estimates. It composes with ``Broker``'s padded cost-balanced
+dispatch and the shared ``run_chunks_retry`` timeout/retry semantics
+unchanged.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+import subprocess
+import sys
+import tempfile
+import threading
+import time
+import traceback
+from typing import Callable, Dict, List, Optional
+
+import numpy as np
+
+from repro.core.hostbridge import (PureCallbackBridge, collect_chunk_results,
+                                   plan_cost_chunks, scatter_chunk_results)
+from repro.runtime.batchq import _PAYLOAD, _SRC_ROOT, _atomic_savez, resolve_fn
+
+TASKS_DIR = "tasks"
+CLAIMED_DIR = "claimed"
+RESULTS_DIR = "results"
+FLEET_DIR = "fleet"
+STOP_NAME = "STOP"
+RESOLVE_FAIL_NAME = "RESOLVE_FAIL"
+LEASE_SUFFIX = ".lease"
+TICKET_SUFFIX = ".worker.json"
+
+
+# ---------------------------------------------------------------------------
+# Queue file naming
+# ---------------------------------------------------------------------------
+
+def task_name(job: int, chunk: int, attempt: int, delivery: int) -> str:
+    """``j<job>_c<chunk>_t<attempt>_d<delivery>.npz`` — attempt counts
+    manager-side retries (failures / timeouts, via ``run_chunks_retry``),
+    delivery counts stale-lease re-queues within an attempt."""
+    return f"j{job:06d}_c{chunk:04d}_t{attempt}_d{delivery}.npz"
+
+
+def job_prefix(job: int) -> str:
+    return f"j{job:06d}_"
+
+
+def mq_result_path(mq_dir: str, name: str) -> str:
+    return os.path.join(mq_dir, RESULTS_DIR, name[:-len(".npz")]
+                        + ".result.npz")
+
+
+def mq_fail_path(mq_dir: str, name: str) -> str:
+    return os.path.join(mq_dir, RESULTS_DIR, name[:-len(".npz")] + ".fail")
+
+
+def _atomic_text(path: str, text: str) -> None:
+    """Write-then-rename so a polling reader never sees a torn file."""
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        f.write(text)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, path)
+
+
+def make_broker_dirs(mq_dir: str) -> None:
+    for sub in (TASKS_DIR, CLAIMED_DIR, RESULTS_DIR):
+        os.makedirs(os.path.join(mq_dir, sub), exist_ok=True)
+
+
+# ---------------------------------------------------------------------------
+# Worker side (numpy-only; this is what runs on the cluster)
+# ---------------------------------------------------------------------------
+
+class _Heartbeat:
+    """Background thread renewing a lease file's mtime while evaluating.
+    Stops silently if the lease vanishes (the manager gave up on us and
+    re-queued — our eventual result is still accepted, at-least-once)."""
+
+    def __init__(self, lease_path: str, interval_s: float):
+        self._path = lease_path
+        self._interval = interval_s
+        self._stop = threading.Event()
+        self._thread = threading.Thread(target=self._run, daemon=True)
+
+    def _run(self):
+        while not self._stop.wait(self._interval):
+            try:
+                os.utime(self._path, None)
+            except OSError:
+                return
+
+    def start(self):
+        self._thread.start()
+
+    def stop(self):
+        self._stop.set()
+
+
+def claim_next(mq_dir: str) -> Optional[str]:
+    """Claim the oldest ready task by atomic rename into ``claimed/``.
+    Returns the task NAME, or None when the queue is empty (or every
+    rename was lost to another worker — indistinguishable, try again)."""
+    tasks = os.path.join(mq_dir, TASKS_DIR)
+    try:
+        names = sorted(os.listdir(tasks))
+    except OSError:
+        return None
+    for name in names:
+        if not name.endswith(".npz"):
+            continue                             # .tmp of an in-flight write
+        try:
+            os.rename(os.path.join(tasks, name),
+                      os.path.join(mq_dir, CLAIMED_DIR, name))
+        except OSError:
+            continue                             # another worker won
+        return name
+    return None
+
+
+def process_task(mq_dir: str, name: str, fn: Callable, *,
+                 heartbeat_s: float = 1.0, hang: bool = False) -> bool:
+    """Evaluate one claimed task: lease -> heartbeat -> eval -> atomic
+    result/fail -> release claim. ``hang=True`` simulates a worker killed
+    mid-task (lease written once, never renewed, nothing reported) so the
+    manager's stale-lease re-queue path can be exercised."""
+    claimed = os.path.join(mq_dir, CLAIMED_DIR, name)
+    lease = claimed + LEASE_SUFFIX
+    try:
+        with open(lease, "w") as f:
+            f.write(f"{os.getpid()}\n")
+    except OSError:
+        pass
+    if hang:
+        return False
+    hb = _Heartbeat(lease, heartbeat_s)
+    hb.start()
+    ok = False
+    try:
+        genomes = np.load(claimed)["genomes"]
+        t0 = time.perf_counter()
+        fit = np.asarray(fn(genomes), np.float32).reshape(len(genomes), -1)
+        duration = time.perf_counter() - t0
+        _atomic_savez(mq_result_path(mq_dir, name), fitness=fit,
+                      duration=np.float64(duration))
+        ok = True
+    except Exception:
+        tb = traceback.format_exc()
+        try:
+            _atomic_text(mq_fail_path(mq_dir, name), tb)
+        except OSError:
+            pass
+        sys.stderr.write(tb)
+    finally:
+        hb.stop()
+        for path in (claimed, lease):
+            try:
+                os.remove(path)
+            except OSError:
+                pass                             # manager re-queued it
+    return ok
+
+
+def worker_loop(mq_dir: str, *, fn: Optional[Callable] = None,
+                lease_s: float = 15.0, poll_s: float = 0.05,
+                max_tasks: Optional[int] = None,
+                idle_exit_s: Optional[float] = None,
+                hang_substrings: tuple = ()) -> int:
+    """Persistent worker body: claim -> evaluate -> report until the STOP
+    sentinel appears (or ``max_tasks`` / ``idle_exit_s`` triggers). The
+    fitness is resolved ONCE (``fn`` override for in-process thread pools,
+    else import spec / pickle from the broker's payload — waited for if
+    the manager hasn't written it yet), amortizing startup across every
+    chunk of every generation. Returns the number of tasks completed."""
+    heartbeat_s = max(0.05, lease_s / 4.0)
+    done = 0
+    idle_t0 = time.monotonic()
+    while True:
+        if os.path.exists(os.path.join(mq_dir, STOP_NAME)):
+            return done
+        if fn is None:
+            if os.path.exists(os.path.join(mq_dir, _PAYLOAD)):
+                try:
+                    fn = resolve_fn(mq_dir)
+                except Exception:
+                    # a worker that cannot resolve the fitness (bad import
+                    # spec, unpicklable callable) is useless — surface the
+                    # traceback to the manager instead of dying silently,
+                    # or a fully dead fleet would leave tasks unclaimed
+                    # forever (the straggler clock only starts at first
+                    # claim)
+                    tb = traceback.format_exc()
+                    try:
+                        _atomic_text(os.path.join(mq_dir,
+                                                  RESOLVE_FAIL_NAME), tb)
+                    except OSError:
+                        pass
+                    sys.stderr.write(tb)
+                    return done
+            else:
+                time.sleep(poll_s)
+                continue
+        name = claim_next(mq_dir)
+        if name is None:
+            if (idle_exit_s is not None
+                    and time.monotonic() - idle_t0 > idle_exit_s):
+                return done
+            time.sleep(poll_s)
+            continue
+        idle_t0 = time.monotonic()
+        hang = any(s in name for s in hang_substrings)
+        process_task(mq_dir, name, fn, heartbeat_s=heartbeat_s, hang=hang)
+        if hang:
+            return done                          # the simulated kill -9
+        done += 1
+        if max_tasks is not None and done >= max_tasks:
+            return done
+
+
+def run_worker_ticket(ticket_path: str) -> int:
+    """Entry for a Scheduler-launched fleet member: the batchq array-task
+    entrypoint hands a ``*.worker.json`` ticket here and the work item
+    becomes a persistent queue worker (see :class:`MQWorkerFleet`)."""
+    try:
+        with open(ticket_path) as f:
+            cfg = json.load(f)
+        worker_loop(cfg["mq_dir"],
+                    lease_s=float(cfg.get("lease_s", 15.0)),
+                    poll_s=float(cfg.get("poll_s", 0.05)),
+                    max_tasks=cfg.get("max_tasks"),
+                    idle_exit_s=cfg.get("idle_exit_s"),
+                    hang_substrings=tuple(cfg.get("hang_substrings", ())))
+        return 0
+    except Exception:
+        sys.stderr.write(traceback.format_exc())
+        return 1
+
+
+# ---------------------------------------------------------------------------
+# Worker fleets
+# ---------------------------------------------------------------------------
+
+class LocalWorkerPool:
+    """Local persistent-worker fleet: threads (fast, in-process — CI and
+    conformance tests; ``fn`` may override payload resolution so tests can
+    inject closures) or subprocesses (real numpy-only interpreters, the
+    cluster stand-in). ``hang_substrings`` injects worker death: a worker
+    claiming a matching task writes its lease once and dies, so the
+    manager's stale-lease re-queue must recover the chunk.
+
+    ``mq_dir`` may be bound later (``QueueBackend(worker_pool=...)`` binds
+    its own broker directory before starting the pool)."""
+
+    def __init__(self, num_workers: int = 4, mode: str = "thread", *,
+                 mq_dir: Optional[str] = None, fn: Optional[Callable] = None,
+                 lease_s: float = 15.0, poll_s: float = 0.01,
+                 hang_substrings: tuple = (), python: Optional[str] = None):
+        if mode not in ("thread", "subprocess"):
+            raise ValueError(f"mode must be thread|subprocess: {mode}")
+        self.num_workers = max(1, num_workers)
+        self.mode = mode
+        self.mq_dir = mq_dir
+        self.fn = fn
+        self.lease_s = lease_s
+        self.poll_s = poll_s
+        self.hang_substrings = tuple(hang_substrings)
+        self.python = python or sys.executable
+        self._members: list = []
+        self._started = False
+
+    def start(self):
+        if self._started:
+            return self
+        if self.mq_dir is None:
+            raise ValueError("LocalWorkerPool.start: mq_dir not bound")
+        make_broker_dirs(self.mq_dir)
+        for _ in range(self.num_workers):
+            if self.mode == "thread":
+                t = threading.Thread(
+                    target=worker_loop, args=(self.mq_dir,),
+                    kwargs=dict(fn=self.fn, lease_s=self.lease_s,
+                                poll_s=self.poll_s,
+                                hang_substrings=self.hang_substrings),
+                    daemon=True)
+                t.start()
+                self._members.append(t)
+            else:
+                env = dict(os.environ)
+                env["PYTHONPATH"] = _SRC_ROOT + (
+                    os.pathsep + env["PYTHONPATH"]
+                    if env.get("PYTHONPATH") else "")
+                cmd = [self.python, "-m", "repro.runtime.mq", "--worker",
+                       "--mq-dir", self.mq_dir,
+                       "--lease-s", str(self.lease_s),
+                       "--poll-s", str(self.poll_s)]
+                if self.hang_substrings:
+                    cmd += ["--hang-substrings",
+                            ",".join(self.hang_substrings)]
+                self._members.append(subprocess.Popen(
+                    cmd, env=env, stdout=subprocess.DEVNULL,
+                    stderr=subprocess.DEVNULL))
+        self._started = True
+        return self
+
+    def stop(self, timeout_s: float = 10.0):
+        """Raise the STOP sentinel and collect the fleet. Threads that
+        ignore the deadline are daemons (abandoned); subprocesses are
+        killed."""
+        if not self._started:
+            return
+        try:
+            _atomic_text(os.path.join(self.mq_dir, STOP_NAME), "stop\n")
+        except OSError:
+            pass
+        deadline = time.monotonic() + timeout_s
+        for m in self._members:
+            left = max(0.0, deadline - time.monotonic())
+            if isinstance(m, threading.Thread):
+                m.join(timeout=left)
+            else:
+                try:
+                    m.wait(timeout=left)
+                except subprocess.TimeoutExpired:
+                    m.kill()
+        self._members = []
+        self._started = False
+
+    def __enter__(self):
+        return self.start()
+
+    def __exit__(self, *exc_info):
+        self.stop()
+        return False
+
+
+class MQWorkerFleet:
+    """Persistent fleet launched through the batchq ``Scheduler`` protocol
+    — ONE long-lived SLURM array job / Kubernetes indexed Job for the
+    whole GA run, instead of one per batch. Each work item is handed a
+    ``*.worker.json`` ticket (instead of a chunk); the standard array-task
+    entrypoint (``python -m repro.runtime.batchq --worker <ticket>``)
+    detects the suffix and runs :func:`worker_loop` until STOP. The same
+    shared-volume contract as the batch spool applies: ``mq_dir`` must be
+    reachable at the same path inside every array task / pod."""
+
+    def __init__(self, scheduler, num_workers: int, *,
+                 mq_dir: Optional[str] = None, lease_s: float = 15.0,
+                 poll_s: float = 0.05, idle_exit_s: Optional[float] = None):
+        self.scheduler = scheduler
+        self.num_workers = max(1, num_workers)
+        self.mq_dir = mq_dir
+        self.lease_s = lease_s
+        self.poll_s = poll_s
+        self.idle_exit_s = idle_exit_s
+        self.handles: List[str] = []
+        self._started = False
+
+    def start(self):
+        if self._started:
+            return self
+        if self.mq_dir is None:
+            raise ValueError("MQWorkerFleet.start: mq_dir not bound")
+        make_broker_dirs(self.mq_dir)
+        fleet_dir = os.path.join(self.mq_dir, FLEET_DIR)
+        os.makedirs(fleet_dir, exist_ok=True)
+        tickets = []
+        for i in range(self.num_workers):
+            path = os.path.join(fleet_dir, f"worker_{i:04d}{TICKET_SUFFIX}")
+            _atomic_text(path, json.dumps({
+                "mq_dir": self.mq_dir, "lease_s": self.lease_s,
+                "poll_s": self.poll_s, "idle_exit_s": self.idle_exit_s}))
+            tickets.append(path)
+        self.handles = list(self.scheduler.submit(tickets,
+                                                  job_dir=fleet_dir))
+        self._started = True
+        return self
+
+    def stop(self, timeout_s: float = 10.0):
+        """STOP the fleet, give it a grace period to drain off the queue,
+        then cancel stragglers and reap scheduler objects."""
+        if not self._started:
+            return
+        try:
+            _atomic_text(os.path.join(self.mq_dir, STOP_NAME), "stop\n")
+        except OSError:
+            pass
+        deadline = time.monotonic() + timeout_s
+        pending = list(self.handles)
+        while pending and time.monotonic() < deadline:
+            pending = [h for h in pending
+                       if self.scheduler.poll(h) in ("pending", "running")]
+            if pending:
+                time.sleep(0.05)
+        for h in pending:
+            try:
+                self.scheduler.cancel(h)
+            except Exception:
+                pass
+        reap = getattr(self.scheduler, "reap", None)
+        if reap is not None:
+            try:
+                reap(tuple(self.handles))
+            except Exception:
+                pass
+        self._started = False
+
+    def __enter__(self):
+        return self.start()
+
+    def __exit__(self, *exc_info):
+        self.stop()
+        return False
+
+
+# ---------------------------------------------------------------------------
+# Manager side: the DispatchBackend
+# ---------------------------------------------------------------------------
+
+class _ChunkTrack:
+    """Manager-side delivery state for one chunk of one job."""
+
+    __slots__ = ("all_names", "latest", "delivery", "attempt", "t_exec",
+                 "seen_wall", "done", "done_name", "failed_msg")
+
+    def __init__(self):
+        self.all_names: List[str] = []   # every name ever issued (accept
+        self.latest = ""                 # a result from ANY of them)
+        self.delivery = 0
+        self.attempt = 0
+        self.t_exec: Optional[float] = None   # first claim of this attempt
+        self.seen_wall: Optional[float] = None
+        self.done: Optional[tuple] = None
+        self.done_name: Optional[str] = None
+        self.failed_msg: Optional[str] = None
+
+    def track(self, name: str):
+        self.all_names.append(name)
+        self.latest = name
+        self.seen_wall = None
+
+    def new_attempt(self, attempt: int):
+        self.attempt = attempt
+        self.delivery = 0
+        self.t_exec = None
+        self.failed_msg = None
+
+
+class QueueBackend(PureCallbackBridge):
+    """``DispatchBackend`` over the persistent-worker message queue.
+
+    Each ``evaluate`` becomes one *job*: the (shuffled, padded) batch is
+    chunked — cost-sized via the shared planner when the broker dispatches
+    with a cost model (sentinel pads dropped, pricier-first re-order,
+    ``min_chunk_cost_s`` folds sub-startup-cost chunks into their cheapest
+    neighbor), equal counts otherwise — and every chunk is enqueued up
+    front as a task file. The manager then *streams* the result queue:
+
+    * a finished chunk's measured duration is fed to ``cost_ema.observe``
+      the moment its result lands (mid-flight — ``stats["streamed"]``
+      counts these), not when the whole batch completes;
+    * a claimed task whose lease goes stale for ``lease_s`` is re-queued
+      under a bumped delivery suffix (``stats["lease_requeues"]``) without
+      touching the retry budget — dead workers are detected by liveness;
+    * failures and ``chunk_timeout_s`` stragglers (clocked from the first
+      claim of the current attempt; queue wait before that never counts)
+      are re-queued as fresh attempts through the shared
+      ``run_chunks_retry``, same semantics as the batch backends.
+
+    Results are accepted from ANY delivery or attempt ever issued for a
+    chunk (at-least-once; all deliveries carry identical genomes). On job
+    completion everything but the winning result files is deleted, and
+    completed jobs beyond ``keep_jobs`` are swept entirely — the broker
+    directory stays bounded over arbitrarily long runs, stale leases of
+    killed workers included.
+
+    The workers are NOT owned by the backend by default: pass a
+    ``worker_pool`` (:class:`LocalWorkerPool` or :class:`MQWorkerFleet`,
+    started against this backend's ``mq_dir`` and stopped on ``close()``),
+    or launch a fleet externally against the same directory.
+    """
+
+    name = "mq"
+
+    def __init__(self, fitness_fn: Optional[Callable] = None, *,
+                 fn_spec: Optional[str] = None,
+                 num_objectives: int = 1, num_workers: int = 4,
+                 mq_dir: Optional[str] = None,
+                 lease_s: float = 15.0,
+                 chunk_timeout_s: Optional[float] = 300.0,
+                 max_retries: int = 2,
+                 poll_interval_s: float = 0.02,
+                 cost_ema=None,
+                 chunk_sizing: str = "cost",
+                 min_chunk_cost_s: float = 0.0,
+                 keep_jobs: Optional[int] = 4,
+                 worker_pool=None):
+        if fitness_fn is None and not fn_spec:
+            raise ValueError("need fitness_fn (pickled) or fn_spec "
+                             "(module:attr import path)")
+        if chunk_sizing not in ("cost", "equal"):
+            raise ValueError(
+                f"chunk_sizing must be cost|equal: {chunk_sizing}")
+        self.fitness_fn = fitness_fn
+        self.fn_spec = fn_spec
+        self.num_objectives = num_objectives
+        self.num_workers = max(1, num_workers)
+        self._owns_dir = mq_dir is None
+        self.mq_dir = mq_dir or tempfile.mkdtemp(prefix="chambga-mq-")
+        make_broker_dirs(self.mq_dir)
+        self.lease_s = float(lease_s)
+        self.chunk_timeout_s = chunk_timeout_s
+        self.max_retries = max_retries
+        self.poll_interval_s = poll_interval_s
+        self.cost_ema = cost_ema
+        self.chunk_sizing = chunk_sizing
+        self.min_chunk_cost_s = float(min_chunk_cost_s)
+        self.keep_jobs = keep_jobs
+        self.stats = {"jobs": 0, "retries": 0, "timeouts": 0,
+                      "lease_requeues": 0, "streamed": 0, "jobs_pruned": 0}
+        self._lock = threading.Lock()
+        self._cond = threading.Condition(self._lock)
+        self._inflight = 0
+        self._seq = 0
+        self._closed = False
+        self._done_jobs: List[int] = []
+        self._active_jobs: set = set()
+        self._job_winners: Dict[int, set] = {}
+        # a reused directory may hold a previous run's sentinels
+        for stale in (STOP_NAME, RESOLVE_FAIL_NAME):
+            try:
+                os.remove(os.path.join(self.mq_dir, stale))
+            except OSError:
+                pass
+        self._write_payload()
+        self.worker_pool = worker_pool
+        if worker_pool is not None:
+            if getattr(worker_pool, "mq_dir", None) is None:
+                worker_pool.mq_dir = self.mq_dir
+            worker_pool.start()
+
+    def _write_payload(self):
+        import pickle
+        if not self.fn_spec:
+            try:
+                blob = pickle.dumps(self.fitness_fn)
+            except Exception:
+                # unpicklable callables still work with in-process thread
+                # pools carrying an fn override; a payload-resolving
+                # worker will surface a RESOLVE_FAIL instead of hanging
+                blob = None
+            if blob is not None:
+                tmp = os.path.join(self.mq_dir, "fn.pkl.tmp")
+                with open(tmp, "wb") as f:
+                    f.write(blob)
+                os.replace(tmp, os.path.join(self.mq_dir, "fn.pkl"))
+        # payload.json LAST, atomically: externally launched workers poll
+        # for its existence before resolving — they must never see it
+        # before fn.pkl, or torn mid-write
+        _atomic_text(os.path.join(self.mq_dir, _PAYLOAD),
+                     json.dumps({"num_objectives": self.num_objectives,
+                                 "fn_spec": self.fn_spec}))
+
+    # -- queue paths ----------------------------------------------------
+    @property
+    def tasks_dir(self) -> str:
+        return os.path.join(self.mq_dir, TASKS_DIR)
+
+    @property
+    def claimed_dir(self) -> str:
+        return os.path.join(self.mq_dir, CLAIMED_DIR)
+
+    @property
+    def results_dir(self) -> str:
+        return os.path.join(self.mq_dir, RESULTS_DIR)
+
+    # -- host-side evaluation ------------------------------------------
+    def _host_eval(self, genomes: np.ndarray,
+                   perm: Optional[np.ndarray] = None,
+                   cost: Optional[np.ndarray] = None) -> np.ndarray:
+        with self._cond:
+            if self._closed:
+                raise RuntimeError("QueueBackend used after close()")
+            self._inflight += 1
+        try:
+            return self._host_eval_inner(genomes, perm, cost)
+        finally:
+            with self._cond:
+                self._inflight -= 1
+                self._cond.notify_all()
+
+    def _host_eval_inner(self, genomes: np.ndarray,
+                         perm: Optional[np.ndarray],
+                         cost: Optional[np.ndarray]) -> np.ndarray:
+        from repro.core.broker import ChunkFailure, run_chunks_retry
+        genomes = np.asarray(genomes)
+        n = genomes.shape[0]
+        w = min(self.num_workers, max(1, n))
+        order = None
+        if cost is not None and self.chunk_sizing == "cost" and w > 1:
+            chunks, sizes, order, perm = plan_cost_chunks(
+                genomes, perm, cost, w,
+                min_chunk_cost=self.min_chunk_cost_s)
+        else:
+            chunks = np.array_split(genomes, w)
+            sizes = [len(c) for c in chunks]
+        with self._lock:
+            job = self._seq
+            self._seq += 1
+            self.stats["jobs"] += 1
+            self._active_jobs.add(job)
+        perm_np = np.asarray(perm) if perm is not None else None
+        offs = np.concatenate([[0], np.cumsum(sizes)]).astype(int)
+        tracks = [_ChunkTrack() for _ in chunks]
+
+        def enqueue(i, chunk, attempt, delivery) -> str:
+            name = task_name(job, i, attempt, delivery)
+            _atomic_savez(os.path.join(self.tasks_dir, name),
+                          genomes=np.asarray(chunk, np.float32))
+            return name
+
+        def submit(i, chunk, attempt):
+            tr = tracks[i]
+            tr.new_attempt(attempt)
+            tr.track(enqueue(i, chunk, attempt, 0))
+            return attempt
+
+        # the whole batch hits the queue up front — idle workers start
+        # pulling immediately, in cost order (priciest chunks first)
+        for i, chunk in enumerate(chunks):
+            tracks[i].track(enqueue(i, chunk, 0, 0))
+
+        def stream_result(i, tr, fit, dur):
+            tr.done = (np.asarray(fit, np.float32), dur)
+            if self.cost_ema is not None and perm_np is not None:
+                # mid-flight EMA update: this chunk's slots learn NOW,
+                # while other chunks of the same batch are still running
+                self.cost_ema.observe(perm_np[offs[i]:offs[i + 1]],
+                                      [int(sizes[i])], [dur])
+                with self._lock:
+                    self.stats["streamed"] += 1
+
+        def pump():
+            """One streaming sweep over every outstanding chunk: collect
+            landed results (feeding the EMA immediately), surface failure
+            markers, and re-queue stale leases."""
+            now_w = time.time()
+            for i, tr in enumerate(tracks):
+                if tr.done is not None or tr.failed_msg is not None:
+                    continue
+                for name in tr.all_names:
+                    res = mq_result_path(self.mq_dir, name)
+                    if not os.path.exists(res):
+                        continue
+                    with np.load(res) as d:
+                        fit = d["fitness"]
+                        dur = float(d["duration"])
+                    if fit.shape != (int(sizes[i]), self.num_objectives):
+                        tr.failed_msg = (
+                            f"result shape {fit.shape} != "
+                            f"({int(sizes[i])}, {self.num_objectives})")
+                        break
+                    tr.done_name = name
+                    stream_result(i, tr, fit, dur)
+                    break
+                if tr.done is not None or tr.failed_msg is not None:
+                    continue
+                # only the LATEST delivery's failure counts: an older
+                # delivery that crashed after being re-queued is already
+                # superseded by its replacement
+                fp = mq_fail_path(self.mq_dir, tr.latest)
+                if os.path.exists(fp):
+                    with open(fp) as f:
+                        tr.failed_msg = f.read()
+                    continue
+                claimed = os.path.join(self.claimed_dir, tr.latest)
+                if not os.path.exists(claimed):
+                    continue                     # still queued (or racing)
+                if tr.t_exec is None:
+                    tr.t_exec = time.monotonic()
+                if tr.seen_wall is None:
+                    tr.seen_wall = now_w
+                lease = claimed + LEASE_SUFFIX
+                try:
+                    beat = os.path.getmtime(lease)
+                except OSError:
+                    beat = tr.seen_wall          # claim seen, lease not yet
+                if now_w - beat > self.lease_s:
+                    # dead worker: re-queue under a bumped delivery — the
+                    # atomic rename means a worker that is merely slow
+                    # either keeps the file (rename fails, we retry next
+                    # sweep) or has already released it
+                    new = task_name(job, i, tr.attempt, tr.delivery + 1)
+                    try:
+                        os.rename(claimed,
+                                  os.path.join(self.tasks_dir, new))
+                    except OSError:
+                        continue                 # it just finished/failed
+                    try:
+                        os.remove(lease)
+                    except OSError:
+                        pass
+                    tr.delivery += 1
+                    tr.track(new)
+                    with self._lock:
+                        self.stats["lease_requeues"] += 1
+
+        resolve_fail = os.path.join(self.mq_dir, RESOLVE_FAIL_NAME)
+
+        def wait(i, token, timeout_s):
+            tr = tracks[i]
+            while True:
+                pump()
+                if tr.done is not None:
+                    return tr.done
+                if tr.failed_msg is not None:
+                    raise ChunkFailure(
+                        f"chunk {i} worker failed:\n{tr.failed_msg}")
+                if os.path.exists(resolve_fail):
+                    # a worker could not resolve the fitness (bad import
+                    # spec / unpicklable callable): the condition is
+                    # global and permanent, so fail fast instead of
+                    # waiting on tasks a dead fleet will never claim
+                    with open(resolve_fail) as f:
+                        raise ChunkFailure(
+                            "a worker failed to resolve the fitness "
+                            f"(chunk {i} waiting):\n{f.read()}")
+                if (timeout_s is not None and tr.t_exec is not None
+                        and time.monotonic() - tr.t_exec > timeout_s):
+                    with self._lock:
+                        self.stats["timeouts"] += 1
+                    raise TimeoutError(
+                        f"chunk {i} straggled past {timeout_s}s "
+                        f"(delivery {tr.delivery})")
+                time.sleep(self.poll_interval_s)
+
+        def on_retry(i, attempt, exc):
+            with self._lock:
+                self.stats["retries"] += 1
+
+        try:
+            outs = run_chunks_retry(chunks, submit, wait,
+                                    timeout_s=self.chunk_timeout_s,
+                                    max_retries=self.max_retries,
+                                    on_retry=on_retry,
+                                    initial_tokens=[0] * len(chunks))
+        finally:
+            self._finish_job(job, tracks)
+        # durations were already streamed to the EMA as each chunk landed
+        # — pass cost_ema=None so the epilogue doesn't observe them twice
+        out = collect_chunk_results(outs, None, None, sizes)
+        if order is not None:
+            out = scatter_chunk_results(out, order, n)
+        return out
+
+    # -- broker-directory garbage collection ---------------------------
+    _JOB_RE = re.compile(r"j(\d{6})_")
+
+    def _finish_job(self, job: int, tracks: List[_ChunkTrack]) -> None:
+        """Completed-job epilogue, win or lose: record the job's winning
+        result files, evict whole jobs beyond ``keep_jobs``, then sweep.
+        The sweep is global over non-active jobs — so a duplicate result
+        from an at-least-once race that lands AFTER its own job finished
+        is still collected on the next job's epilogue, ``keep_jobs=None``
+        included (that setting retains winners forever, not garbage)."""
+        winners = set()
+        for tr in tracks:
+            if tr.done_name:
+                winners.add(os.path.basename(
+                    mq_result_path(self.mq_dir, tr.done_name)))
+        with self._lock:
+            self._active_jobs.discard(job)
+            self._job_winners[job] = winners
+            self._done_jobs.append(job)
+            if self.keep_jobs is not None:
+                while len(self._done_jobs) > max(0, int(self.keep_jobs)):
+                    self._job_winners.pop(self._done_jobs.pop(0), None)
+                    self.stats["jobs_pruned"] += 1
+            active = set(self._active_jobs)
+            keep_by_job = {j: set(w) for j, w in self._job_winners.items()}
+        self._gc_sweep(active, keep_by_job)
+
+    def _gc_sweep(self, active: set, keep_by_job: Dict[int, set]) -> None:
+        """Remove every queue file of a non-active job that is not a
+        retained winning result: stale tasks from superseded deliveries,
+        claimed files + leases left by killed workers, and duplicate or
+        late results from at-least-once races. Files that don't match the
+        task naming scheme are foreign content and never touched."""
+        for d in (self.tasks_dir, self.claimed_dir, self.results_dir):
+            try:
+                entries = os.listdir(d)
+            except OSError:
+                continue
+            for name in entries:
+                m = self._JOB_RE.match(name)
+                if m is None:
+                    continue
+                j = int(m.group(1))
+                if j in active or name in keep_by_job.get(j, ()):
+                    continue
+                try:
+                    os.remove(os.path.join(d, name))
+                except OSError:
+                    pass
+
+    def close(self, remove_dir: Optional[bool] = None):
+        """Drain in-flight evaluations (a pure_callback may still be
+        polling the queue), raise STOP for the persistent workers, stop an
+        owned pool/fleet, and optionally delete the broker directory
+        (default: only when the backend created a temp dir itself)."""
+        with self._cond:
+            if self._closed:
+                return
+            self._closed = True
+            while self._inflight:
+                self._cond.wait()
+        try:
+            _atomic_text(os.path.join(self.mq_dir, STOP_NAME), "stop\n")
+        except OSError:
+            pass
+        if self.worker_pool is not None:
+            self.worker_pool.stop()
+        if remove_dir is None:
+            remove_dir = self._owns_dir
+        if remove_dir:
+            shutil.rmtree(self.mq_dir, ignore_errors=True)
+
+
+# ---------------------------------------------------------------------------
+# Worker entrypoint:  python -m repro.runtime.mq --worker --mq-dir DIR
+# ---------------------------------------------------------------------------
+
+def main(argv=None) -> int:
+    import argparse
+    ap = argparse.ArgumentParser(
+        prog="repro.runtime.mq",
+        description="Persistent message-queue worker: claim -> evaluate "
+                    "-> report until the broker raises STOP.")
+    ap.add_argument("--worker", action="store_true", required=True,
+                    help="run the persistent worker loop")
+    ap.add_argument("--mq-dir", required=True,
+                    help="broker directory (shared volume)")
+    ap.add_argument("--lease-s", type=float, default=15.0,
+                    help="lease duration; heartbeats renew at lease/4")
+    ap.add_argument("--poll-s", type=float, default=0.05,
+                    help="idle queue poll interval")
+    ap.add_argument("--max-tasks", type=int, default=None,
+                    help="exit after N completed tasks")
+    ap.add_argument("--idle-exit-s", type=float, default=None,
+                    help="exit after this long with an empty queue")
+    ap.add_argument("--hang-substrings", default="",
+                    help="comma-separated fault injection: die (leaving a "
+                         "stale lease) on tasks whose name matches")
+    args = ap.parse_args(argv)
+    hang = tuple(s for s in args.hang_substrings.split(",") if s)
+    worker_loop(args.mq_dir, lease_s=args.lease_s, poll_s=args.poll_s,
+                max_tasks=args.max_tasks, idle_exit_s=args.idle_exit_s,
+                hang_substrings=hang)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -613,7 +613,42 @@ def test_cost_sized_chunk_size_invariants(n, w, seed, skew):
     assert cost_sized_chunk_sizes(cost * 32.0, w) == sizes
 
 
+@settings(max_examples=60, deadline=None)
+@given(n=st.integers(1, 96), w=st.integers(1, 12),
+       seed=st.integers(0, 2**30), frac=st.floats(0.0, 2.0))
+def test_folded_chunk_sizes_invariants(n, w, seed, frac):
+    """min_chunk_cost folding (worker-side batching of tiny chunks,
+    shared by batchq and mq) preserves the core laws: folded sizes still
+    sum to N with every size >= 1, the chunk count never grows, and what
+    remains is either a single chunk or chunks that all clear the
+    floor."""
+    rng = np.random.default_rng(seed)
+    cost = np.sort(rng.uniform(0.01, 1.0, n))[::-1].copy()
+    floor = frac * float(cost.sum()) / max(w, 1)
+    sizes = cost_sized_chunk_sizes(cost, w, min_chunk_cost=floor)
+    assert sum(sizes) == n
+    assert min(sizes) >= 1
+    assert len(sizes) <= len(cost_sized_chunk_sizes(cost, w))
+    if len(sizes) > 1:
+        bounds = np.concatenate([[0], np.cumsum(sizes)]).astype(int)
+        chunk_costs = np.add.reduceat(cost, bounds[:-1])
+        assert float(chunk_costs.min()) >= floor - 1e-9
+
+
 class TestCostSizedChunks:
+    def test_fold_merges_into_cheaper_neighbor(self):
+        # [10, 10, 10, .1, .1] over 5 chunks, floor 1.0: the trailing
+        # cheap chunks merge together first (cheaper neighbor), then the
+        # still-sub-floor pair folds into the adjacent pricey chunk
+        sizes = cost_sized_chunk_sizes(
+            np.array([10.0, 10.0, 10.0, 0.1, 0.1]), 5, min_chunk_cost=1.0)
+        assert sizes == [1, 1, 3]
+
+    def test_fold_disabled_by_default(self):
+        cost = np.linspace(5.0, 0.01, 17)
+        assert (cost_sized_chunk_sizes(cost, 4)
+                == cost_sized_chunk_sizes(cost, 4, min_chunk_cost=0.0))
+
     def test_uniform_cost_matches_equal_split(self):
         for n, w in ((12, 4), (7, 3), (64, 8), (5, 5)):
             sizes = cost_sized_chunk_sizes(np.full(n, 2.5), w)

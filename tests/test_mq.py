@@ -1,0 +1,449 @@
+"""Persistent-worker message queue (repro.runtime.mq): queue protocol,
+lease/heartbeat liveness, streaming CostEMA, broker-directory GC,
+Scheduler-launched fleets, and DispatchBackend conformance."""
+import glob
+import os
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.broker import Broker, ChunkFailure, CostEMA
+from repro.core.hostbridge import cost_sized_chunk_sizes
+from repro.fitness import sphere
+from repro.fitness import hostsim
+from repro.runtime.batchq import LocalMockScheduler
+from repro.runtime.mq import (CLAIMED_DIR, LEASE_SUFFIX, RESULTS_DIR,
+                              STOP_NAME, TASKS_DIR, LocalWorkerPool,
+                              MQWorkerFleet, QueueBackend, claim_next,
+                              task_name, worker_loop)
+
+from test_batchq import _conformance
+
+SPEC = "repro.fitness.hostsim:sphere"
+
+FAST = dict(poll_interval_s=0.005, chunk_timeout_s=60)
+
+
+def _thread_pool(n=3, **kw):
+    kw.setdefault("lease_s", 5.0)
+    kw.setdefault("poll_s", 0.005)
+    return LocalWorkerPool(num_workers=n, mode="thread", **kw)
+
+
+# ---------------------------------------------------------------------------
+# shared DispatchBackend conformance (satellite: the same suite every
+# decoupled backend passes, now parametrized over QueueBackend)
+# ---------------------------------------------------------------------------
+
+class TestConformance:
+    def test_queue_backend_thread_pool(self, tmp_path):
+        with QueueBackend(fn_spec=SPEC, num_workers=3,
+                          worker_pool=_thread_pool(3),
+                          mq_dir=str(tmp_path), **FAST) as backend:
+            _conformance(backend)
+        assert backend.stats["retries"] == 0
+        assert backend.stats["lease_requeues"] == 0
+
+    def test_queue_backend_equal_chunking(self, tmp_path):
+        with QueueBackend(fn_spec=SPEC, num_workers=3,
+                          chunk_sizing="equal",
+                          worker_pool=_thread_pool(3),
+                          mq_dir=str(tmp_path), **FAST) as backend:
+            _conformance(backend)
+
+    def test_fleet_via_scheduler_protocol(self, tmp_path):
+        """The persistent fleet is launched as ONE submission through the
+        unchanged batchq Scheduler protocol: each work item receives a
+        *.worker.json ticket and becomes a long-lived queue worker."""
+        sched = LocalMockScheduler(mode="thread")
+        submits = []
+        orig_submit = sched.submit
+
+        def counting_submit(paths, *, job_dir):
+            submits.append(list(paths))
+            return orig_submit(paths, job_dir=job_dir)
+
+        sched.submit = counting_submit
+        fleet = MQWorkerFleet(sched, 3, lease_s=5.0, poll_s=0.005)
+        with QueueBackend(fn_spec=SPEC, num_workers=3, worker_pool=fleet,
+                          mq_dir=str(tmp_path), **FAST) as backend:
+            _conformance(backend)
+            # one scheduler round-trip launched the whole fleet, and the
+            # tickets — not chunks — were what it submitted
+            assert len(submits) == 1
+            assert all(p.endswith(".worker.json") for p in submits[0])
+        # STOP drained the fleet: every scheduler work item has exited
+        assert all(sched.poll(h) == "done" for h in fleet.handles)
+
+    def test_pickled_fitness_thread_pool(self, tmp_path):
+        # no import spec: workers unpickle the callable from the broker
+        with QueueBackend(hostsim.rastrigin, num_workers=2,
+                          worker_pool=_thread_pool(2),
+                          mq_dir=str(tmp_path), **FAST) as backend:
+            g = jax.random.uniform(jax.random.PRNGKey(1), (11, 4))
+            np.testing.assert_allclose(np.asarray(backend(g)),
+                                       hostsim.rastrigin(np.asarray(g)),
+                                       rtol=1e-5)
+
+    @pytest.mark.slow
+    def test_subprocess_pool_amortizes_startup(self, tmp_path):
+        """Persistent numpy-only worker subprocesses: the SAME
+        interpreters serve every generation (fitness = worker PID), where
+        a batch backend would spawn fresh array tasks per chunk."""
+        with QueueBackend(fn_spec="repro.fitness.hostsim:worker_pid",
+                          num_workers=2,
+                          worker_pool=LocalWorkerPool(
+                              num_workers=2, mode="subprocess",
+                              lease_s=10.0),
+                          mq_dir=str(tmp_path), poll_interval_s=0.01,
+                          chunk_timeout_s=300) as backend:
+            g = np.ones((8, 3), np.float32)
+            pids1 = set(backend._host_eval(g).ravel().tolist())
+            pids2 = set(backend._host_eval(g).ravel().tolist())
+            # the fleet's two interpreters serve every chunk of every
+            # generation, and at least one is reused across generations
+            # (a loaded box may bring worker 2 up only after eval 1 — the
+            # invariant is NO fresh interpreter per chunk, not that both
+            # evals saw the identical worker subset)
+            all_pids = pids1 | pids2
+            assert 1 <= len(all_pids) <= 2
+            assert pids1 & pids2             # startup amortized: reused
+            assert os.getpid() not in all_pids   # and not our interpreter
+
+    @pytest.mark.slow
+    def test_fleet_subprocess_e2e(self, tmp_path):
+        """Cluster-shaped end-to-end: mock scheduler launches persistent
+        worker subprocesses from tickets via the standard batchq
+        entrypoint; two evaluates reuse them."""
+        fleet = MQWorkerFleet(LocalMockScheduler(mode="subprocess"), 2,
+                              lease_s=10.0, poll_s=0.02)
+        with QueueBackend(fn_spec=SPEC, num_workers=2, worker_pool=fleet,
+                          mq_dir=str(tmp_path), poll_interval_s=0.02,
+                          chunk_timeout_s=300) as backend:
+            for seed in (2, 3):
+                g = jax.random.uniform(jax.random.PRNGKey(seed), (9, 4))
+                np.testing.assert_allclose(np.asarray(backend(g)),
+                                           np.asarray(sphere(g)),
+                                           rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# lease / heartbeat liveness (the queue's replacement for timeout-only
+# straggler detection)
+# ---------------------------------------------------------------------------
+
+class TestLeases:
+    def test_expired_lease_requeued_run_completes(self, tmp_path):
+        """Acceptance: a worker claims a task and dies (lease never
+        renewed); the manager re-queues it under a bumped delivery and a
+        surviving worker completes it — WITHOUT consuming the retry
+        budget (liveness, not timeout)."""
+        pool = _thread_pool(2, lease_s=0.4,
+                            hang_substrings=("c0001_t0_d0",))
+        with QueueBackend(fn_spec=SPEC, num_workers=2, worker_pool=pool,
+                          lease_s=0.4, chunk_timeout_s=30,
+                          poll_interval_s=0.005,
+                          mq_dir=str(tmp_path)) as backend:
+            broker = Broker(cost_fn=lambda g: jnp.sum(jnp.abs(g), -1) + 0.1,
+                            num_workers=2, backend=backend)
+            g = jax.random.uniform(jax.random.PRNGKey(2), (14, 3))
+            fit, _ = jax.jit(broker.evaluate)(g)
+            np.testing.assert_allclose(np.asarray(fit),
+                                       np.asarray(sphere(g)), rtol=1e-6)
+            assert backend.stats["lease_requeues"] >= 1
+            assert backend.stats["retries"] == 0
+            assert backend.stats["timeouts"] == 0
+
+    def test_slow_heartbeating_worker_is_not_requeued(self, tmp_path):
+        """A worker that is slow but ALIVE keeps its lease fresh via
+        heartbeats — the manager must not re-queue it (the heartbeat
+        interval is lease/4, so an evaluation several leases long still
+        renews in time)."""
+        def slow_sphere(genomes):
+            time.sleep(0.9)                      # ~3x the lease
+            return hostsim.sphere(genomes)
+
+        pool = _thread_pool(2, fn=slow_sphere, lease_s=0.3)
+        with QueueBackend(slow_sphere, num_workers=2, worker_pool=pool,
+                          lease_s=0.3, chunk_timeout_s=30,
+                          poll_interval_s=0.005,
+                          mq_dir=str(tmp_path)) as backend:
+            g = np.random.default_rng(3).uniform(-1, 1, (6, 3)).astype(
+                np.float32)
+            np.testing.assert_allclose(backend._host_eval(g),
+                                       hostsim.sphere(g), rtol=1e-6)
+            assert backend.stats["lease_requeues"] == 0
+
+    def test_unresolvable_fitness_fails_fast_not_hangs(self, tmp_path):
+        """A fleet whose workers cannot resolve the fitness (typo'd
+        import spec) dies before claiming anything — since the straggler
+        clock only starts at first claim, this must surface as a
+        ChunkFailure, not an unbounded wait."""
+        with QueueBackend(fn_spec="repro.fitness.hostsim:no_such_fn",
+                          num_workers=2,
+                          worker_pool=LocalWorkerPool(
+                              num_workers=2, mode="thread", lease_s=5.0,
+                              poll_s=0.005),
+                          max_retries=1, mq_dir=str(tmp_path),
+                          **FAST) as backend:
+            with pytest.raises(ChunkFailure,
+                               match="resolve the fitness"):
+                backend._host_eval(np.ones((6, 2), np.float32))
+
+    def test_failing_chunk_exhausts_retries(self, tmp_path):
+        with QueueBackend(fn_spec="repro.fitness.hostsim:always_fail",
+                          num_workers=2, worker_pool=_thread_pool(2),
+                          max_retries=1, mq_dir=str(tmp_path),
+                          **FAST) as backend:
+            with pytest.raises(ChunkFailure, match="simulated simulator"):
+                backend._host_eval(np.ones((6, 2), np.float32))
+            assert backend.stats["retries"] == 1
+
+    def test_claim_is_exclusive(self, tmp_path):
+        """Two racing claimers: the atomic rename hands each ready task
+        to exactly one of them."""
+        mq = str(tmp_path)
+        for d in (TASKS_DIR, CLAIMED_DIR, RESULTS_DIR):
+            os.makedirs(os.path.join(mq, d))
+        names = [task_name(0, i, 0, 0) for i in range(8)]
+        for n in names:
+            with open(os.path.join(mq, TASKS_DIR, n), "wb") as f:
+                f.write(b"x")
+        claims: list = []
+        lock = threading.Lock()
+
+        def grab():
+            while True:
+                name = claim_next(mq)
+                if name is None:
+                    return
+                with lock:
+                    claims.append(name)
+
+        threads = [threading.Thread(target=grab) for _ in range(4)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        assert sorted(claims) == sorted(names)   # each task exactly once
+
+
+# ---------------------------------------------------------------------------
+# streaming results: the EMA learns mid-flight, not at batch end
+# ---------------------------------------------------------------------------
+
+def test_cost_ema_observes_before_final_chunk_completes(tmp_path):
+    release = threading.Event()
+
+    def gated(genomes):
+        g = np.asarray(genomes, np.float32)
+        if bool(np.any(g[:, 0] > 0)):            # the designated straggler
+            release.wait(timeout=30)
+        return hostsim.sphere(g)
+
+    ema = CostEMA(alpha=0.5)
+    pool = _thread_pool(2, fn=gated)
+    backend = QueueBackend(gated, num_workers=2, worker_pool=pool,
+                           cost_ema=ema, mq_dir=str(tmp_path), **FAST)
+    broker = Broker(cost_fn=ema, num_workers=2, backend=backend)
+    g = np.full((8, 3), -1.0, np.float32)
+    g[3, 0] = 1.0                                # exactly one hot genome
+    gj = jnp.asarray(g)
+    box = {}
+
+    def run():
+        box["fit"] = np.asarray(jax.jit(broker.evaluate)(gj)[0])
+
+    t = threading.Thread(target=run, daemon=True)
+    t.start()
+    deadline = time.monotonic() + 20
+    while ema.updates < 1 and time.monotonic() < deadline:
+        time.sleep(0.005)
+    try:
+        # mid-flight: the fast chunk's duration reached the EMA while the
+        # gated chunk is still running — batch-end observation would see
+        # zero updates here
+        assert ema.updates >= 1
+        assert t.is_alive()
+    finally:
+        release.set()
+    t.join(timeout=30)
+    assert not t.is_alive()
+    np.testing.assert_allclose(box["fit"], hostsim.sphere(g), rtol=1e-6)
+    assert backend.stats["streamed"] >= 2        # both chunks streamed
+    backend.close()
+
+
+# ---------------------------------------------------------------------------
+# broker-directory GC (bounded over long runs; stale leases reaped)
+# ---------------------------------------------------------------------------
+
+class TestBrokerGC:
+    def test_ten_eval_run_leaves_bounded_directory(self, tmp_path):
+        """Acceptance: a 10-eval mq run leaves a bounded broker directory
+        — completed jobs reduce to their winning results and old jobs are
+        swept beyond keep_jobs."""
+        with QueueBackend(fn_spec=SPEC, num_workers=2, keep_jobs=3,
+                          worker_pool=_thread_pool(2),
+                          mq_dir=str(tmp_path), **FAST) as backend:
+            g = np.ones((10, 3), np.float32)
+            for _ in range(10):
+                backend._host_eval(g)
+            assert backend.stats["jobs"] == 10
+            assert backend.stats["jobs_pruned"] == 7
+            assert glob.glob(str(tmp_path / TASKS_DIR / "*")) == []
+            assert glob.glob(str(tmp_path / CLAIMED_DIR / "*")) == []
+            results = [os.path.basename(p) for p in
+                       glob.glob(str(tmp_path / RESULTS_DIR / "*"))]
+            # winning results of the newest keep_jobs jobs only: 2 chunks
+            # per job, jobs 7..9
+            assert len(results) == 6
+            assert {r[:8] for r in results} == {"j000007_", "j000008_",
+                                                "j000009_"}
+
+    def test_orphan_claims_and_leases_reaped(self, tmp_path):
+        """Claimed files + lease files left by killed workers are swept
+        with their job (the lease-requeue path already reclaims live
+        jobs; this is the epilogue for whatever remains)."""
+        mq = str(tmp_path)
+        with QueueBackend(fn_spec=SPEC, num_workers=2, keep_jobs=4,
+                          worker_pool=_thread_pool(2), mq_dir=mq,
+                          **FAST) as backend:
+            # a worker killed mid-task in job 0 left its claim + lease
+            orphan = task_name(0, 99, 0, 0)
+            for path in (os.path.join(mq, CLAIMED_DIR, orphan),
+                         os.path.join(mq, CLAIMED_DIR,
+                                      orphan + LEASE_SUFFIX)):
+                with open(path, "w") as f:
+                    f.write("orphan")
+            backend._host_eval(np.ones((6, 2), np.float32))   # job 0
+            leftovers = os.listdir(os.path.join(mq, CLAIMED_DIR))
+            assert leftovers == []
+
+    def test_requeued_duplicate_results_are_swept(self, tmp_path):
+        """At-least-once delivery can produce duplicate results (the
+        re-queued delivery races the original); job GC keeps exactly one
+        winner per chunk."""
+        pool = _thread_pool(2, lease_s=0.4,
+                            hang_substrings=("c0001_t0_d0",))
+        with QueueBackend(fn_spec=SPEC, num_workers=2, worker_pool=pool,
+                          lease_s=0.4, keep_jobs=4, chunk_timeout_s=30,
+                          poll_interval_s=0.005,
+                          mq_dir=str(tmp_path)) as backend:
+            backend._host_eval(np.ones((8, 3), np.float32))
+            results = sorted(os.path.basename(p) for p in
+                             glob.glob(str(tmp_path / RESULTS_DIR / "*")))
+            chunks = {r.split("_t")[0] for r in results}
+            assert len(results) == len(chunks) == 2   # one winner each
+            assert all(r.endswith(".result.npz") for r in results)
+
+
+# ---------------------------------------------------------------------------
+# worker-side folding of sub-startup-cost chunks (integration; the size
+# invariants are property-tested next to the other chunking laws in
+# test_batchq.py)
+# ---------------------------------------------------------------------------
+
+def test_min_chunk_cost_folds_tiny_chunks_in_dispatch(tmp_path):
+    n, w = 12, 4
+    cost = np.where(np.arange(n) < 2, 10.0, 0.1)
+    expected = len(cost_sized_chunk_sizes(
+        np.sort(cost)[::-1], w, min_chunk_cost=1.5))
+    assert expected < w                          # the floor actually folds
+    with QueueBackend(fn_spec=SPEC, num_workers=w, keep_jobs=1,
+                      min_chunk_cost_s=1.5,
+                      worker_pool=_thread_pool(2),
+                      mq_dir=str(tmp_path), **FAST) as backend:
+        broker = Broker(cost_fn=lambda g: jnp.asarray(cost, jnp.float32),
+                        num_workers=w, backend=backend)
+        g = jax.random.uniform(jax.random.PRNGKey(5), (n, 3))
+        fit, _ = jax.jit(broker.evaluate)(g)
+        np.testing.assert_allclose(np.asarray(fit), np.asarray(sphere(g)),
+                                   rtol=1e-6)
+        results = glob.glob(str(tmp_path / RESULTS_DIR / "*.result.npz"))
+        assert len(results) == expected          # folded chunk count
+
+
+# ---------------------------------------------------------------------------
+# drain-before-close (the pipelined epoch loop can still have a
+# pure_callback polling the queue when the backend is torn down)
+# ---------------------------------------------------------------------------
+
+def test_close_drains_inflight_then_stops_workers(tmp_path):
+    def slow(genomes):
+        time.sleep(0.3)
+        return hostsim.sphere(np.asarray(genomes))
+
+    pool = _thread_pool(2, fn=slow)
+    backend = QueueBackend(slow, num_workers=2, worker_pool=pool,
+                           mq_dir=str(tmp_path), **FAST)
+    g = np.random.default_rng(7).uniform(-1, 1, (6, 3)).astype(np.float32)
+    box = {}
+    t = threading.Thread(
+        target=lambda: box.update(out=backend._host_eval(g)), daemon=True)
+    t.start()
+    time.sleep(0.05)                             # eval is in flight
+    backend.close()                              # must drain, not strand
+    t.join(timeout=30)
+    assert not t.is_alive()
+    np.testing.assert_allclose(box["out"], hostsim.sphere(g), rtol=1e-6)
+    # closed: the STOP sentinel is up and further use is an error
+    assert os.path.exists(str(tmp_path / STOP_NAME))
+    with pytest.raises(RuntimeError, match="after close"):
+        backend._host_eval(g)
+
+
+def test_worker_loop_exits_on_stop_and_max_tasks(tmp_path):
+    mq = str(tmp_path)
+    for d in (TASKS_DIR, CLAIMED_DIR, RESULTS_DIR):
+        os.makedirs(os.path.join(mq, d))
+    from repro.runtime.batchq import _atomic_savez
+    for i in range(3):
+        _atomic_savez(os.path.join(mq, TASKS_DIR, task_name(0, i, 0, 0)),
+                      genomes=np.ones((2, 2), np.float32))
+    done = worker_loop(mq, fn=hostsim.sphere, max_tasks=2, poll_s=0.005)
+    assert done == 2
+    with open(os.path.join(mq, STOP_NAME), "w") as f:
+        f.write("stop")
+    assert worker_loop(mq, fn=hostsim.sphere, poll_s=0.005) == 0
+
+
+# ---------------------------------------------------------------------------
+# ga_run end-to-end on the mq-mock backend (acceptance: bit-identical best
+# fitness to InlineBackend on the same seed, bounded broker directory)
+# ---------------------------------------------------------------------------
+
+def test_ga_run_mq_mock_e2e_bit_identical_to_inline(tmp_path):
+    from repro.launch.ga_run import main
+    common = ["--fitness", "sphere", "--genes", "1", "--islands", "2",
+              "--pop", "8", "--epochs", "2", "--gens-per-epoch", "2",
+              "--seed", "3"]
+    pop_inline, hist_inline = main(common)
+    pop_mq, hist_mq = main(common + [
+        "--dispatch-backend", "mq-mock", "--chunk-timeout-s", "60",
+        "--keep-jobs", "2", "--lease-s", "30",
+        "--mq-dir", str(tmp_path / "mq")])
+    assert len(hist_mq) == len(hist_inline) == 2
+    # bit-identical trajectory: same fitness bits, same genomes, same best
+    assert np.array_equal(np.asarray(pop_inline.fitness),
+                          np.asarray(pop_mq.fitness))
+    assert np.array_equal(np.asarray(pop_inline.genomes),
+                          np.asarray(pop_mq.genomes))
+    # broker-directory GC held under the full engine loop
+    results = glob.glob(str(tmp_path / "mq" / RESULTS_DIR / "*"))
+    assert len({os.path.basename(p)[:8] for p in results}) <= 2
+    assert glob.glob(str(tmp_path / "mq" / TASKS_DIR / "*")) == []
+
+
+def test_ga_run_remote_fleet_requires_shared_mq_dir():
+    """--mq-fleet slurm|k8s with the default temp broker dir would leave
+    the cluster fleet idling on a path it cannot see — rejected up
+    front."""
+    from repro.launch.ga_run import main
+    with pytest.raises(SystemExit):
+        main(["--fitness", "sphere", "--dispatch-backend", "mq",
+              "--mq-fleet", "slurm"])
