@@ -14,9 +14,22 @@ spawn), and ``ema_first_update_{batchq,mq}`` measures cost-model
 convergence WITHIN one generation — how far into a skewed batch the first
 ``CostEMA`` observation lands (batch-end collection ≈ the full makespan;
 the streaming queue ≈ the fastest chunk).
+
+Multi-tenant rows: ``mq_dedicated_fleets`` vs ``mq_shared_fleet`` runs
+two concurrent skewed GA evaluations (one heavy, one light) on two
+dedicated half-size fleets vs ONE shared run-scoped fleet — cross-run
+work stealing lets the light run's idle workers drain the heavy queue,
+pulling the combined makespan toward total_work/W instead of
+heavy_work/(W/2). ``mq_fixed_min_fleet`` vs ``mq_autoscale_ramp`` puts a
+burst of work on a 1-worker floor: the ``FleetAutoscaler`` sees the
+queue depth, ramps the fleet to max_workers, and drains back to the
+floor afterwards.
 """
 from __future__ import annotations
 
+import shutil
+import tempfile
+import threading
 import time
 
 import jax
@@ -279,6 +292,107 @@ def run(csv: bool = True):
         if csv:
             print(f"ema_first_update_{name},{us:.0f},us_into_a_"
                   f"{t_batch * 1e3:.0f}ms_batch")
+
+    # multi-tenant fleet sharing: two concurrent runs — one heavy (every
+    # genome sleeps 30ms), one light (2ms) — on (a) two DEDICATED fleets
+    # of 2 workers each vs (b) ONE shared 4-worker fleet with run-scoped
+    # queues. Cross-run work stealing lets the light run's idle workers
+    # drain the heavy queue once their own is empty: combined makespan
+    # drops toward total_work/4 instead of heavy_work/2
+    from repro.core.broker import Broker as _Broker
+    from repro.runtime.mq import FleetAutoscaler
+    heavy_fn = functools.partial(hostsim.delay_sphere, slow_s=0.030)
+    light_fn = functools.partial(hostsim.delay_sphere, base_s=0.002)
+    g_heavy = np.random.default_rng(5).uniform(-1, 1, (24, 4)).astype(
+        np.float32)
+    g_heavy[:, 0] = 1.0
+    g_light = np.random.default_rng(6).uniform(-1, 1, (24, 4)).astype(
+        np.float32)
+    g_light[:, 0] = -1.0
+
+    def _two_run_wall(shared: bool) -> float:
+        dirs, pools, backends = [], [], []
+        mt_fast = dict(chunk_timeout_s=300, poll_interval_s=0.002,
+                       num_workers=8)           # 8 chunks > any fleet
+        try:
+            if shared:
+                d = tempfile.mkdtemp(prefix="chambga-mt-")
+                dirs.append(d)
+                pools.append(LocalWorkerPool(
+                    num_workers=4, mode="thread", mq_dir=d,
+                    lease_s=30.0, poll_s=0.002).start())
+                b_h = QueueBackend(heavy_fn, run_id="heavy", mq_dir=d,
+                                   **mt_fast)
+                b_l = QueueBackend(light_fn, run_id="light", mq_dir=d,
+                                   **mt_fast)
+            else:
+                b_h = b_l = None
+                for tag, fn in (("heavy", heavy_fn), ("light", light_fn)):
+                    d = tempfile.mkdtemp(prefix="chambga-mt-")
+                    dirs.append(d)
+                    b = QueueBackend(
+                        fn, run_id=tag, mq_dir=d,
+                        worker_pool=LocalWorkerPool(
+                            num_workers=2, mode="thread",
+                            lease_s=30.0, poll_s=0.002),
+                        **mt_fast)
+                    b_h, b_l = (b, b_l) if tag == "heavy" else (b_h, b)
+            backends += [b_h, b_l]
+            outs = {}
+            threads = [
+                threading.Thread(target=lambda: outs.update(
+                    h=b_h._host_eval(g_heavy)), daemon=True),
+                threading.Thread(target=lambda: outs.update(
+                    l=b_l._host_eval(g_light)), daemon=True)]
+            t0 = time.perf_counter()
+            for t in threads:
+                t.start()
+            for t in threads:
+                t.join()
+            return time.perf_counter() - t0
+        finally:
+            for b in backends:
+                b.close()
+            for p in pools:
+                p.stop()
+            for d in dirs:
+                shutil.rmtree(d, ignore_errors=True)
+
+    for shared in (False, True):
+        wall = min(_two_run_wall(shared) for _ in range(2))
+        name = "mq_shared_fleet" if shared else "mq_dedicated_fleets"
+        rows.append((name, wall * 1e6))
+        if csv:
+            print(f"{name},{wall * 1e6:.0f},us_both_runs_makespan")
+
+    # queue-depth autoscaling: the same heavy burst on a fleet FLOORED at
+    # one worker. Fixed: serial makespan. Autoscaled: the controller sees
+    # the depth, ramps to max_workers through the pool's incremental
+    # submit, and drains back to the floor via poison STOP tickets
+    for autoscaled in (False, True):
+        d = tempfile.mkdtemp(prefix="chambga-ramp-")
+        pool = LocalWorkerPool(num_workers=1, mode="thread", mq_dir=d,
+                               lease_s=30.0, poll_s=0.002)
+        scaler = (FleetAutoscaler(pool, min_workers=1, max_workers=4,
+                                  interval_s=0.02, cooldown_s=0.04)
+                  if autoscaled else None)
+        backend = QueueBackend(heavy_fn, run_id="ramp", mq_dir=d,
+                               worker_pool=pool, autoscaler=scaler,
+                               chunk_timeout_s=300, poll_interval_s=0.002,
+                               num_workers=8)
+        ramp_broker = _Broker(backend=backend)
+        t0 = time.perf_counter()
+        backend._host_eval(g_heavy)
+        wall = time.perf_counter() - t0
+        peak = scaler.stats["peak_workers"] if scaler else 1
+        bstats = ramp_broker.backend_stats()
+        backend.close()
+        shutil.rmtree(d, ignore_errors=True)
+        name = "mq_autoscale_ramp" if autoscaled else "mq_fixed_min_fleet"
+        rows.append((name, wall * 1e6))
+        if csv:
+            print(f"{name},{wall * 1e6:.0f},us_per_evaluate_peak_{peak}"
+                  f"_workers_jobs_{bstats.get('jobs', 0)}")
 
     # engine loop: synchronous metric reads every epoch vs the pipelined
     # (async D2H + deferred device_get) path — async must be no slower

@@ -1,22 +1,38 @@
 #!/usr/bin/env bash
 # CI entrypoint. Usage:
-#   scripts/ci.sh         # full tier-1 lane (everything, incl. slow)
-#   scripts/ci.sh fast    # fast lane: skips @pytest.mark.slow subprocess tests
+#   scripts/ci.sh            # full tier-1 lane (everything, incl. slow)
+#   scripts/ci.sh fast       # fast lane: skips @pytest.mark.slow tests
+#   scripts/ci.sh durations  # fast lane + the 15 slowest tests listed
 #
-# The fast lane includes the batch-dispatch (mock-scheduler) conformance
-# tests: tests/test_batchq.py runs the spool/timeout/re-queue machinery on
-# thread-mode LocalMockScheduler workers in-process, and the Kubernetes
-# path (KubernetesScheduler against the in-process MockKubectl runner:
-# command construction + full submit->poll->result conformance, spool GC,
-# cost-sized chunking) without needing a cluster. It also includes the
-# message-queue subsystem (tests/test_mq.py): the shared DispatchBackend
-# conformance suite over QueueBackend, lease-expiry -> re-queue, streaming
-# CostEMA, broker-directory GC bounds, a Scheduler-launched fleet, and an
-# in-process `ga_run --dispatch-backend mq-mock` e2e checked bit-identical
-# against InlineBackend — all on thread-mode workers. Only multi-second
-# subprocess e2e tests (SLURM / k8s-mock array-task and persistent mq
-# worker interpreter spawns, multidevice runs) are @pytest.mark.slow and
-# deferred to the full lane.
+# The fast lane names tests/backend_conformance.py FIRST: the unified
+# DispatchBackend contract suite (eager/jit parity, padded-broker
+# compose, pickled fitness, drain-before-close, timeout -> re-queue ->
+# retry) parametrized over all four decoupled backends — HostPool,
+# slurm-mock, k8s-mock, and the message queue — so a contract regression
+# fails before the backend-specific suites start. (pytest de-duplicates
+# the explicit path against the tests/ directory collection.)
+#
+# Multi-tenant + elastic mq coverage (all thread-mode, fast lane):
+#   tests/test_mq_multitenant.py — two concurrent ga_run invocations
+#     sharing ONE worker fleet finish bit-identical to dedicated-fleet
+#     runs at --genes 1; cross-run priority claim order (deterministic
+#     prefix + >= counts, no == timing asserts); per-run close leaves a
+#     shared fleet alive; run-aware GC never sweeps another run's files.
+#   tests/test_mq_properties.py — queue chaos/property sweeps via the
+#     hypothesis stub: task-name parse round-trip, barrier-raced
+#     single-winner claims, monotone delivery bumps that never burn the
+#     retry budget, first-result-wins under late superseded duplicates.
+#   tests/test_mq.py — queue protocol, lease liveness, streaming CostEMA,
+#     GC bounds, FleetAutoscaler grow-on-depth / shrink-on-drain, poison
+#     STOP tickets honored at chunk boundaries, and the in-process
+#     `ga_run --dispatch-backend mq-mock` e2e (bit-identical to inline).
+# Only multi-second subprocess e2e tests (SLURM / k8s-mock array-task
+# and persistent mq worker interpreter spawns, multidevice runs) are
+# @pytest.mark.slow and deferred to the full lane.
+#
+# The durations lane prints `pytest --durations=15` so timing-sensitive
+# dispatch tests that are drifting toward their timeout floors get
+# flagged BEFORE they start flaking on a loaded box.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -29,7 +45,11 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
 LANE="${1:-full}"
 case "$LANE" in
-    fast) exec python -m pytest -x -q -m "not slow" ;;
-    full) exec python -m pytest -x -q ;;
-    *)    echo "unknown lane: $LANE (want: fast|full)" >&2; exit 2 ;;
+    fast)      exec python -m pytest -x -q -m "not slow" \
+                    tests/backend_conformance.py tests ;;
+    durations) exec python -m pytest -q -m "not slow" --durations=15 \
+                    tests/backend_conformance.py tests ;;
+    full)      exec python -m pytest -x -q ;;
+    *)         echo "unknown lane: $LANE (want: fast|durations|full)" >&2
+               exit 2 ;;
 esac

@@ -84,6 +84,17 @@ is fed to :class:`CostEMA` mid-flight instead of at batch end, so the next
 generation's dispatch sees sharpened estimates even under long tails
 (``ga_run --dispatch-backend mq|mq-mock``, ``--mq-dir``, ``--lease-s``,
 ``--num-mq-workers``, ``--mq-fleet``).
+
+The queue is MULTI-TENANT and ELASTIC: several concurrent GA runs (each
+with its own ``Broker`` + ``QueueBackend``) can share one worker fleet —
+task names are run-scoped, a ``runs/`` registry assigns claim priorities
+(idle workers steal work from whichever run is loaded, highest priority
+first), and per-run teardown/GC never touches another run's files
+(``ga_run --mq-run-id``, ``--mq-priority``, a shared ``--mq-dir``).
+``mq.FleetAutoscaler`` grows/shrinks the fleet from observed queue depth
+(``ga_run --mq-autoscale MIN:MAX``). :meth:`Broker.backend_stats`
+snapshots the backend's counters (jobs, retries, timeouts, lease
+re-queues, streamed EMA updates) for benchmarks and run logs.
 """
 from __future__ import annotations
 
@@ -509,6 +520,14 @@ class Broker:
                 and hasattr(backend, "cost_ema")
                 and getattr(backend, "cost_ema") is None):
             backend.cost_ema = cost_fn
+
+    def backend_stats(self) -> dict:
+        """Snapshot of the dispatch backend's host-side counters — jobs,
+        retries, timeouts, lease re-queues, streamed EMA updates, pruned
+        jobs, whatever the backend keeps (empty for backends that keep
+        none, e.g. inline SPMD). Returns a copy: safe to mutate, and
+        stable while in-flight evaluations keep counting."""
+        return dict(getattr(self.backend, "stats", None) or {})
 
     def _identity_stats(self) -> dict:
         one = jnp.ones(())

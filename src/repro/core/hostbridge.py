@@ -12,6 +12,15 @@ Import discipline: NO jax at module scope — ``runtime.batchq`` is imported
 by numpy-only array-task workers whose interpreter startup is on the
 critical path; jax is imported lazily inside the bridged calls, which only
 ever run on the submitting host.
+
+Multi-tenancy note: per-run chunk *planning* is unchanged by fleet
+sharing — each run's manager plans and scatters its own batch — but the
+``perm`` keys that flow through :func:`plan_cost_chunks` into
+``CostEMA.observe`` are implicitly run-scoped: every run owns its own
+``CostEMA`` (slot ``i`` of ITS batch), and the message-queue backend
+carries the run id in the task names it derives from these plans
+(``runtime.mq.task_name``), so measured durations can never be attributed
+across runs even when the chunks were evaluated by one shared fleet.
 """
 from __future__ import annotations
 

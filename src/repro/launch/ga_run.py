@@ -73,14 +73,45 @@ Message queue (--dispatch-backend mq|mq-mock):
   measured duration reaches the --cost-ema model mid-flight, before the
   batch's stragglers land.
     mq         persistent workers; the fleet is --mq-fleet local (numpy
-               subprocesses on this host), or slurm / k8s — ONE
-               long-lived array job / indexed Job submitted through the
-               same Scheduler protocol via *.worker.json tickets.
+               subprocesses on this host), slurm / k8s — ONE long-lived
+               array job / indexed Job submitted through the same
+               Scheduler protocol via *.worker.json tickets — or
+               external: attach to a fleet another invocation owns (see
+               Fleet sharing below).
     mq-mock    in-process thread workers — CI and smoke runs.
   --num-mq-workers sizes the fleet (default: the dispatch lane count).
   The broker directory stays bounded: completed jobs are reduced to
   their winning result files and swept beyond --keep-jobs, stale leases
-  of killed workers included.
+  of killed workers included — and the sweep is run-aware: it never
+  touches another run's files in a shared directory.
+
+Fleet sharing (multi-tenant message queue):
+  Several GA runs — parameter sweeps, the meta-GA, multi-stage HVDC
+  workflows — can share ONE persistent worker fleet. Every run registers
+  itself (--mq-run-id, --mq-priority) in the broker directory's runs/
+  registry, its task names are run-scoped, and idle workers steal work
+  across runs: the highest-priority run's oldest task is always claimed
+  first. Teardown is per-run — a finishing run deregisters and sweeps
+  only its own files; the fleet-wide STOP sentinel is raised only by the
+  invocation that owns the fleet. Two-terminal example:
+
+    # terminal 1: launch the fleet AND run at high priority
+    ga_run --fitness sphere --dispatch-backend mq \\
+        --mq-dir /shared/broker --num-mq-workers 8 --mq-priority 10
+    # terminal 2: attach to the same fleet at low priority
+    ga_run --fitness rastrigin --dispatch-backend mq \\
+        --mq-fleet external --mq-dir /shared/broker --mq-priority 1
+
+  (the fleet-owning invocation should outlive attached ones; for a
+  standalone fleet, start workers directly:
+  python -m repro.runtime.mq --worker --mq-dir /shared/broker)
+
+  --mq-autoscale MIN:MAX makes the owned fleet ELASTIC: a manager-side
+  controller watches queue depth + lease counts, grows the fleet toward
+  MAX while tasks queue (incremental Scheduler submit — one more sbatch
+  --array / kubectl apply round-trip), and shrinks it back to MIN on
+  drain by dropping poison STOP tickets that idle workers honor at
+  chunk boundaries (never mid-evaluation, never ahead of queued work).
 """
 
 from repro.configs.base import GAConfig
@@ -200,7 +231,9 @@ def main(argv=None):
     ap.add_argument("--mq-dir", default=None,
                     help="message-queue broker directory (mq backends; "
                          "default: a fresh temp dir). Must be a shared "
-                         "volume reachable by every worker")
+                         "volume reachable by every worker; point several "
+                         "invocations at the same directory to share one "
+                         "fleet (see Fleet sharing below)")
     ap.add_argument("--lease-s", type=float, default=15.0,
                     help="mq task lease: workers heartbeat at lease/4; "
                          "the manager re-queues tasks whose lease goes "
@@ -209,11 +242,26 @@ def main(argv=None):
                     help="persistent mq fleet size (default: the "
                          "dispatch lane count)")
     ap.add_argument("--mq-fleet", default="local",
-                    choices=("local", "slurm", "k8s"),
-                    help="how --dispatch-backend mq launches its "
-                         "persistent fleet: local numpy subprocesses, or "
-                         "ONE long-lived SLURM array / K8s indexed Job "
-                         "through the Scheduler protocol")
+                    choices=("local", "slurm", "k8s", "external"),
+                    help="how --dispatch-backend mq gets its persistent "
+                         "fleet: local numpy subprocesses, ONE long-lived "
+                         "SLURM array / K8s indexed Job through the "
+                         "Scheduler protocol, or external — attach to a "
+                         "shared fleet another invocation owns")
+    ap.add_argument("--mq-run-id", default=None,
+                    help="run id namespacing this run's tasks in a "
+                         "(possibly shared) broker directory — lowercase "
+                         "alphanumerics and dashes; default: a generated "
+                         "unique id")
+    ap.add_argument("--mq-priority", type=int, default=0,
+                    help="claim priority among runs sharing a fleet: "
+                         "higher-priority runs' tasks are claimed first "
+                         "(default 0)")
+    ap.add_argument("--mq-autoscale", default=None, metavar="MIN:MAX",
+                    help="elastic fleet: start at MIN workers, grow "
+                         "toward MAX on queue depth, shrink back to MIN "
+                         "on drain via poison STOP tickets (owned fleets "
+                         "only)")
     ap.add_argument("--cost-ema", action="store_true",
                     help="learn the dispatch cost model online from "
                          "measured per-lane wall times (needs a "
@@ -286,16 +334,37 @@ def main(argv=None):
             min_chunk_cost_s=args.min_chunk_cost_s,
             keep_jobs=None if args.keep_jobs < 0 else args.keep_jobs)
     elif args.dispatch_backend.startswith("mq"):
-        from repro.runtime.mq import (LocalWorkerPool, MQWorkerFleet,
-                                      QueueBackend)
+        from repro.runtime.mq import (FleetAutoscaler, LocalWorkerPool,
+                                      MQWorkerFleet, QueueBackend)
         from repro.fitness import hostsim
         fn_spec = (f"repro.fitness.hostsim:{args.fitness}"
                    if hasattr(hostsim, args.fitness) else None)
         n_mq = args.num_mq_workers or workers
+        autoscale = None
+        if args.mq_autoscale:
+            lo, _, hi = args.mq_autoscale.partition(":")
+            try:
+                autoscale = (int(lo), int(hi))
+            except ValueError:
+                ap.error("--mq-autoscale wants MIN:MAX, e.g. 1:16")
+            if autoscale[0] < 1 or autoscale[1] < autoscale[0]:
+                ap.error("--mq-autoscale wants 1 <= MIN <= MAX")
+            n_mq = autoscale[0]      # start at the floor, grow on depth
+        pool = None
         if args.dispatch_backend == "mq-mock":
             # in-process thread workers: the CI / smoke-run fleet
             pool = LocalWorkerPool(num_workers=n_mq, mode="thread",
                                    lease_s=args.lease_s)
+        elif args.mq_fleet == "external":
+            # attach to a fleet another invocation owns (the two-terminal
+            # shared-fleet pattern; see Fleet sharing in the epilog) —
+            # close() then deregisters this run WITHOUT stopping workers
+            if not args.mq_dir:
+                ap.error("--mq-fleet external needs the shared --mq-dir "
+                         "the fleet-owning invocation uses")
+            if autoscale:
+                ap.error("--mq-autoscale cannot resize an external fleet "
+                         "— only the invocation that owns it can")
         elif args.mq_fleet == "local":
             # persistent numpy-only worker subprocesses on this host
             pool = LocalWorkerPool(num_workers=n_mq, mode="subprocess",
@@ -318,16 +387,20 @@ def main(argv=None):
                      KubernetesScheduler(namespace=args.k8s_namespace,
                                          image=args.k8s_image))
             pool = MQWorkerFleet(sched, n_mq, lease_s=args.lease_s)
+        scaler = (FleetAutoscaler(pool, min_workers=autoscale[0],
+                                  max_workers=autoscale[1])
+                  if autoscale else None)
         backend = QueueBackend(
             fitness_fn, fn_spec=fn_spec,
             num_objectives=cfg.num_objectives,
             num_workers=workers,
-            mq_dir=args.mq_dir, lease_s=args.lease_s,
+            mq_dir=args.mq_dir, run_id=args.mq_run_id,
+            priority=args.mq_priority, lease_s=args.lease_s,
             chunk_timeout_s=(300.0 if args.chunk_timeout_s is None
                              else timeout),
             min_chunk_cost_s=args.min_chunk_cost_s,
             keep_jobs=None if args.keep_jobs < 0 else args.keep_jobs,
-            worker_pool=pool)
+            worker_pool=pool, autoscaler=scaler)
     # context-managed teardown: a crash anywhere past this point (engine
     # construction included) must still drain in-flight pure_callbacks
     # and free the pool / temp spool — a failed run must not strand them
@@ -349,6 +422,10 @@ def main(argv=None):
                            f"skew {r['skew']:.3f}"))
         pop, hist = eng.run(wallclock_s=args.wallclock_s)
         g, f = eng.best(pop)
+        stats = eng.broker.backend_stats()
+        if stats:
+            print("dispatch stats: " + " ".join(
+                f"{k}={v}" for k, v in sorted(stats.items())))
     print(f"best fitness: {f[0]:.6f}")
     print(f"best genome:  {np.round(g, 4)}")
     return pop, hist

@@ -18,6 +18,7 @@ _EXPORTS = {
     "QueueBackend": "repro.runtime.mq",
     "LocalWorkerPool": "repro.runtime.mq",
     "MQWorkerFleet": "repro.runtime.mq",
+    "FleetAutoscaler": "repro.runtime.mq",
 }
 
 __all__ = list(_EXPORTS)

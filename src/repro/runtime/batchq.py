@@ -52,7 +52,11 @@ cancels the single array task, Kubernetes can only delete whole Jobs so a
 timed-out index of a multi-index Job keeps running and the re-queued
 attempt races it (speculative retry). Schedulers MAY provide
 ``reap(handles)``: called once a batch's results are in, to delete
-scheduler-side objects (K8s Job resources).
+scheduler-side objects (K8s Job resources). ``submit`` is INCREMENTAL:
+callers may invoke it again for the same ``job_dir`` at any time (the
+retry path already does; ``mq.MQWorkerFleet.grow`` relies on it to scale
+a persistent fleet up — one more ``sbatch --array`` / ``kubectl apply``
+round-trip that leaves the work items already running untouched).
 
 Import discipline: jax is imported lazily inside the backend methods so
 the worker entrypoint stays numpy-only — at 3,500-core scale the array
@@ -66,9 +70,16 @@ volume spool contract but inverts the flow: a fleet of persistent workers
 (launched ONCE through this module's ``Scheduler`` protocol via
 ``*.worker.json`` tickets — see :func:`run_worker`) pulls leased tasks
 from a queue directory and streams results back, amortizing startup
-across chunks and generations and feeding the ``CostEMA`` mid-flight. Its
-module docstring documents the full queue contract (atomic-rename claims,
-lease/heartbeat liveness, at-least-once delivery).
+across chunks and generations and feeding the ``CostEMA`` mid-flight.
+The queue is MULTI-TENANT: task names are namespaced by a run id, a
+``runs/`` registry assigns each concurrent GA run a claim priority
+(workers serve the highest-priority run first — cross-run work
+stealing), and the fleet is ELASTIC — ``mq.FleetAutoscaler`` grows it
+through this protocol's incremental ``submit`` and shrinks it with
+poison ``*.stop`` tickets that idle workers honor at chunk boundaries.
+Its module docstring documents the full queue contract (atomic-rename
+claims, lease/heartbeat liveness, at-least-once delivery, run
+namespacing, priority claims, per-run vs fleet-wide STOP).
 """
 from __future__ import annotations
 

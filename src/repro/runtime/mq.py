@@ -10,25 +10,44 @@ file-backed broker directory (the same shared-volume contract as the
 batchq spool, so it runs unchanged on SLURM and Kubernetes) holding a task
 queue and a result queue with **at-least-once delivery**, consumed by
 **persistent workers** that amortize startup across chunks *and*
-generations.
+generations — and shared by **multiple concurrent GA runs** (parameter
+sweeps, the meta-GA, multi-stage HVDC workflows), each a *tenant* with its
+own run-scoped queue namespace and claim priority.
 
-Broker directory layout (one directory per :class:`QueueBackend`)::
+Broker directory layout (one directory per worker FLEET; any number of
+concurrent runs)::
 
-    <mq>/payload.json            # num_objectives + fitness import spec
-    <mq>/fn.pkl                  # pickled fitness (when no import spec)
-    <mq>/tasks/                  # READY queue: one .npz task per chunk
-        j000007_c0003_t0_d0.npz  #   job 7, chunk 3, attempt 0, delivery 0
-    <mq>/claimed/                # LEASED: tasks renamed here by workers
-        j000007_c0003_t0_d0.npz
-        j000007_c0003_t0_d0.npz.lease   # heartbeat file (mtime renewed)
+    <mq>/runs/                     # the multi-tenant run registry
+        run-a.json                 #   priority + fitness import spec
+        run-a.fn.pkl               #   pickled fitness (when no spec)
+        run-a.RESOLVE_FAIL         #   per-run marker: fitness unresolvable
+    <mq>/tasks/                    # READY queue: one .npz task per chunk
+        rrun-a_j000007_c0003_t0_d0.npz  # run a, job 7, chunk 3,
+                                        #   attempt 0, delivery 0
+        zzzstop-1f40-0000.stop     #   poison STOP ticket (autoscaler
+                                   #   scale-down; claimed only when idle)
+    <mq>/claimed/                  # LEASED: tasks renamed here by workers
+        rrun-a_j000007_c0003_t0_d0.npz
+        rrun-a_j000007_c0003_t0_d0.npz.lease  # heartbeat (mtime renewed)
     <mq>/results/
-        j000007_c0003_t0_d0.result.npz  # fitness + duration (atomic)
-        j000007_c0003_t0_d0.fail        # traceback marker on failure
-    <mq>/fleet/                  # worker tickets (Scheduler-launched fleet)
-    <mq>/STOP                    # shutdown sentinel: workers exit
+        rrun-a_j000007_c0003_t0_d0.result.npz # fitness + duration (atomic)
+        rrun-a_j000007_c0003_t0_d0.fail       # traceback marker on failure
+    <mq>/fleet/                    # worker tickets (Scheduler-launched)
+    <mq>/STOP                      # FLEET-WIDE shutdown sentinel
 
-Queue contract (lease / heartbeat semantics)
---------------------------------------------
+Queue contract (lease / heartbeat / multi-tenant semantics)
+-----------------------------------------------------------
+* **Run namespacing**: every task/claim/result name carries the run id of
+  the GA run that enqueued it (``r<run>_j<job>_c<chunk>_t<attempt>_d<del>``),
+  and every run registers itself in ``runs/<run>.json`` before enqueueing
+  (priority integer + fitness payload). A run's manager only ever tracks,
+  re-queues, times out, or garbage-collects names in ITS OWN namespace —
+  two runs sharing a broker directory cannot touch each other's files.
+* **Priority claims (work stealing across runs)**: :func:`claim_next` is
+  a CROSS-RUN claim — among runs with ready tasks it serves the
+  highest-priority run first (ties break on run id), oldest task within
+  it. An idle worker therefore steals work from whichever run is loaded,
+  and a contended fleet drains high-priority runs first.
 * **Claim** is an atomic ``os.rename`` from ``tasks/`` into ``claimed/``
   — exactly one worker wins; losers see ``OSError`` and move on. The
   winner immediately writes a ``.lease`` file and renews its mtime every
@@ -53,19 +72,31 @@ Queue contract (lease / heartbeat semantics)
   identical genomes, and the manager accepts the FIRST result from any
   delivery or attempt it ever issued. Duplicate results are garbage-
   collected with the job.
+* **Per-run STOP / drain**: a finishing run deregisters itself from
+  ``runs/`` and sweeps only its own queue files. The fleet-wide ``STOP``
+  sentinel is raised only by whoever OWNS the workers (the pool/fleet
+  object, or a backend that created its own temp directory) — one run
+  finishing never kills a fleet other runs still use.
+* **Poison STOP tickets (elastic scale-down)**: :class:`FleetAutoscaler`
+  shrinks a fleet by dropping ``*.stop`` tickets into the task queue.
+  Workers claim them only when NO real task is ready and exit at a chunk
+  boundary — a shrinking fleet never abandons a claimed chunk
+  mid-evaluation and never starves queued work. Scale-up rides the batchq
+  ``Scheduler`` protocol's incremental submit (more ``*.worker.json``
+  tickets) or spawns more local workers.
 
 Persistent workers (``python -m repro.runtime.mq --worker --mq-dir D``)
-are numpy-only like the batchq array task: they resolve the fitness once
-(import spec or pickle) and then loop claim -> evaluate -> report, so
-interpreter startup and fitness resolution are paid once per worker
-instead of once per chunk. :class:`LocalWorkerPool` runs the same loop on
-threads (fast CI) or subprocesses (cluster stand-in), with
-``hang_substrings`` fault injection (a worker that claims a matching task
-dies without reporting — exercising the lease path). On a real cluster
-the fleet is launched ONCE as a long-lived SLURM array / Kubernetes
-indexed Job via :class:`MQWorkerFleet`, which rides the existing batchq
-``Scheduler`` protocol: each array task / pod receives a ``*.worker.json``
-ticket instead of a chunk, and the standard
+are numpy-only like the batchq array task: they loop claim -> evaluate ->
+report, resolving each run's fitness ONCE from the ``runs/`` registry
+(cached per run), so interpreter startup and fitness resolution are paid
+once per worker instead of once per chunk. :class:`LocalWorkerPool` runs
+the same loop on threads (fast CI) or subprocesses (cluster stand-in),
+with ``hang_substrings`` fault injection (a worker that claims a matching
+task dies without reporting — exercising the lease path). On a real
+cluster the fleet is launched ONCE as a long-lived SLURM array /
+Kubernetes indexed Job via :class:`MQWorkerFleet`, which rides the
+existing batchq ``Scheduler`` protocol: each array task / pod receives a
+``*.worker.json`` ticket instead of a chunk, and the standard
 ``python -m repro.runtime.batchq --worker`` entrypoint detects the ticket
 and becomes a persistent queue worker.
 
@@ -82,8 +113,10 @@ unchanged.
 """
 from __future__ import annotations
 
+import importlib
 import json
 import os
+import pickle
 import re
 import shutil
 import subprocess
@@ -104,25 +137,52 @@ TASKS_DIR = "tasks"
 CLAIMED_DIR = "claimed"
 RESULTS_DIR = "results"
 FLEET_DIR = "fleet"
+RUNS_DIR = "runs"
 STOP_NAME = "STOP"
-RESOLVE_FAIL_NAME = "RESOLVE_FAIL"
+RESOLVE_FAIL_SUFFIX = ".RESOLVE_FAIL"
 LEASE_SUFFIX = ".lease"
 TICKET_SUFFIX = ".worker.json"
+POISON_SUFFIX = ".stop"
+DEFAULT_PRIORITY = 0
 
 
 # ---------------------------------------------------------------------------
-# Queue file naming
+# Queue file naming (run-scoped)
 # ---------------------------------------------------------------------------
 
-def task_name(job: int, chunk: int, attempt: int, delivery: int) -> str:
-    """``j<job>_c<chunk>_t<attempt>_d<delivery>.npz`` — attempt counts
-    manager-side retries (failures / timeouts, via ``run_chunks_retry``),
-    delivery counts stale-lease re-queues within an attempt."""
-    return f"j{job:06d}_c{chunk:04d}_t{attempt}_d{delivery}.npz"
+def sanitize_run_id(run_id: str) -> str:
+    """Queue-safe run id: lowercase alphanumerics and ``-`` only — the id
+    is embedded in task file names, where ``_`` separates fields. Any
+    other character becomes ``-``; an id that sanitizes to nothing is an
+    error."""
+    rid = re.sub(r"[^a-z0-9-]+", "-", str(run_id).lower()).strip("-")
+    if not rid:
+        raise ValueError(f"run id sanitizes to nothing: {run_id!r}")
+    return rid
 
 
-def job_prefix(job: int) -> str:
-    return f"j{job:06d}_"
+def task_name(run_id: str, job: int, chunk: int, attempt: int,
+              delivery: int) -> str:
+    """``r<run>_j<job>_c<chunk>_t<attempt>_d<delivery>.npz`` — ``run``
+    namespaces concurrent GA runs sharing one broker directory, attempt
+    counts manager-side retries (failures / timeouts, via
+    ``run_chunks_retry``), delivery counts stale-lease re-queues within an
+    attempt."""
+    return (f"r{run_id}_j{job:06d}_c{chunk:04d}_t{attempt}_d{delivery}.npz")
+
+
+_TASK_RE = re.compile(r"r([a-z0-9-]+)_j(\d+)_c(\d+)_t(\d+)_d(\d+)\.npz")
+
+
+def parse_task_name(name: str):
+    """Inverse of :func:`task_name`: ``(run_id, job, chunk, attempt,
+    delivery)``, or None for anything that is not a task name (foreign
+    content, ``.tmp`` of an in-flight write, poison tickets)."""
+    m = _TASK_RE.fullmatch(name)
+    if m is None:
+        return None
+    run = m.group(1)
+    return (run,) + tuple(int(x) for x in m.groups()[1:])
 
 
 def mq_result_path(mq_dir: str, name: str) -> str:
@@ -145,8 +205,124 @@ def _atomic_text(path: str, text: str) -> None:
 
 
 def make_broker_dirs(mq_dir: str) -> None:
-    for sub in (TASKS_DIR, CLAIMED_DIR, RESULTS_DIR):
+    for sub in (TASKS_DIR, CLAIMED_DIR, RESULTS_DIR, RUNS_DIR):
         os.makedirs(os.path.join(mq_dir, sub), exist_ok=True)
+
+
+# ---------------------------------------------------------------------------
+# Run registry (multi-tenancy: priorities + per-run fitness payloads)
+# ---------------------------------------------------------------------------
+
+def run_registry_path(mq_dir: str, run_id: str) -> str:
+    return os.path.join(mq_dir, RUNS_DIR, run_id + ".json")
+
+
+def run_pickle_path(mq_dir: str, run_id: str) -> str:
+    return os.path.join(mq_dir, RUNS_DIR, run_id + ".fn.pkl")
+
+
+def resolve_fail_path(mq_dir: str, run_id: str) -> str:
+    return os.path.join(mq_dir, RUNS_DIR, run_id + RESOLVE_FAIL_SUFFIX)
+
+
+def register_run(mq_dir: str, run_id: str, *, priority: int = 0,
+                 num_objectives: int = 1, fn_spec: Optional[str] = None,
+                 fitness_fn: Optional[Callable] = None) -> None:
+    """Register a GA run with a (possibly shared) broker directory: its
+    claim priority and fitness payload, written BEFORE any of the run's
+    tasks are enqueued so a worker that claims one can always resolve the
+    run's fitness. The pickle is written first and the registry file last,
+    atomically — a polling worker never sees a run without its payload."""
+    os.makedirs(os.path.join(mq_dir, RUNS_DIR), exist_ok=True)
+    if not fn_spec and fitness_fn is not None:
+        try:
+            blob = pickle.dumps(fitness_fn)
+        except Exception:
+            # unpicklable callables still work with in-process thread
+            # pools carrying an fn override; a registry-resolving worker
+            # will surface a per-run RESOLVE_FAIL instead of hanging
+            blob = None
+        if blob is not None:
+            tmp = run_pickle_path(mq_dir, run_id) + ".tmp"
+            with open(tmp, "wb") as f:
+                f.write(blob)
+            os.replace(tmp, run_pickle_path(mq_dir, run_id))
+    _atomic_text(run_registry_path(mq_dir, run_id),
+                 json.dumps({"priority": int(priority),
+                             "num_objectives": int(num_objectives),
+                             "fn_spec": fn_spec}))
+
+
+def deregister_run(mq_dir: str, run_id: str) -> None:
+    """Per-run STOP: drop the run from the registry (workers stop seeing
+    its priority; its namespace is dead). Never touches the fleet-wide
+    STOP sentinel — other runs keep the workers."""
+    for path in (run_registry_path(mq_dir, run_id),
+                 run_pickle_path(mq_dir, run_id),
+                 resolve_fail_path(mq_dir, run_id)):
+        try:
+            os.remove(path)
+        except OSError:
+            pass
+
+
+def registry_stamp(mq_dir: str, run_id: str):
+    """Identity of a run's registry entry (mtime/size/inode), or None
+    when unregistered. ``register_run`` replaces the file atomically, so
+    a changed stamp means the run id was re-registered — workers use it
+    to invalidate per-run fitness caches and bad-run skips."""
+    try:
+        st = os.stat(run_registry_path(mq_dir, run_id))
+        return (st.st_mtime_ns, st.st_size, st.st_ino)
+    except OSError:
+        return None
+
+
+#: per-process cache of parsed registry priorities keyed on the stamp —
+#: claim_next runs in every worker's poll loop, and on a cluster FS the
+#: scarce resource is metadata ops: one stat per ready run per claim
+#: instead of open+read+parse
+_PRIORITY_CACHE: Dict[str, tuple] = {}
+
+
+def run_priority(mq_dir: str, run_id: str) -> int:
+    """Claim priority of a registered run (higher = claimed first);
+    unregistered runs default to ``DEFAULT_PRIORITY``."""
+    path = run_registry_path(mq_dir, run_id)
+    stamp = registry_stamp(mq_dir, run_id)
+    if stamp is None:
+        return DEFAULT_PRIORITY
+    hit = _PRIORITY_CACHE.get(path)
+    if hit is not None and hit[0] == stamp:
+        return hit[1]
+    try:
+        with open(path) as f:
+            prio = int(json.load(f).get("priority", DEFAULT_PRIORITY))
+    except (OSError, ValueError):
+        return DEFAULT_PRIORITY
+    _PRIORITY_CACHE[path] = (stamp, prio)
+    return prio
+
+
+def resolve_run_fn(mq_dir: str, run_id: str) -> Callable:
+    """Fitness callable for one registered run — import spec first,
+    pickle fallback; directories populated by hand (no registry entry)
+    fall back to the broker's legacy global ``payload.json``."""
+    reg = run_registry_path(mq_dir, run_id)
+    if os.path.exists(reg):
+        with open(reg) as f:
+            payload = json.load(f)
+        spec = payload.get("fn_spec")
+        if spec:
+            mod, _, attr = spec.partition(":")
+            return getattr(importlib.import_module(mod), attr)
+        with open(run_pickle_path(mq_dir, run_id), "rb") as f:
+            return pickle.load(f)
+    if os.path.exists(os.path.join(mq_dir, _PAYLOAD)):
+        return resolve_fn(mq_dir)
+    raise FileNotFoundError(
+        f"run {run_id!r} is not registered in {mq_dir}/runs/ and the "
+        f"broker has no legacy payload.json")
 
 
 # ---------------------------------------------------------------------------
@@ -178,23 +354,52 @@ class _Heartbeat:
         self._stop.set()
 
 
-def claim_next(mq_dir: str) -> Optional[str]:
-    """Claim the oldest ready task by atomic rename into ``claimed/``.
-    Returns the task NAME, or None when the queue is empty (or every
+def claim_next(mq_dir: str, skip_runs=()) -> Optional[str]:
+    """Cross-run claim of the next ready task by atomic rename into
+    ``claimed/`` — exactly one winner per task.
+
+    Multi-tenant order: among runs that currently have ready tasks, the
+    highest-priority run (per its ``runs/`` registry entry; ties break on
+    run id) is served first, oldest task within it — idle workers steal
+    work from whichever run is loaded. ``skip_runs`` hides runs this
+    worker cannot serve (e.g. after a fitness-resolution failure). Poison
+    STOP tickets (``*.stop``, autoscaler scale-down) are claimed only when
+    NO real task is ready, so a shrinking fleet never starves queued work.
+    Returns the claimed NAME, or None when nothing was claimable (or every
     rename was lost to another worker — indistinguishable, try again)."""
     tasks = os.path.join(mq_dir, TASKS_DIR)
     try:
         names = sorted(os.listdir(tasks))
     except OSError:
         return None
+    by_run: Dict[str, List[str]] = {}
+    poison: List[str] = []
     for name in names:
+        if name.endswith(POISON_SUFFIX):
+            poison.append(name)
+            continue
         if not name.endswith(".npz"):
             continue                             # .tmp of an in-flight write
+        parsed = parse_task_name(name)
+        run = parsed[0] if parsed else ""
+        if run in skip_runs:
+            continue
+        by_run.setdefault(run, []).append(name)
+    prio = {run: run_priority(mq_dir, run) for run in by_run}
+    for run in sorted(by_run, key=lambda r: (-prio[r], r)):
+        for name in by_run[run]:
+            try:
+                os.rename(os.path.join(tasks, name),
+                          os.path.join(mq_dir, CLAIMED_DIR, name))
+            except OSError:
+                continue                         # another worker won
+            return name
+    for name in poison:
         try:
             os.rename(os.path.join(tasks, name),
                       os.path.join(mq_dir, CLAIMED_DIR, name))
         except OSError:
-            continue                             # another worker won
+            continue
         return name
     return None
 
@@ -247,50 +452,82 @@ def worker_loop(mq_dir: str, *, fn: Optional[Callable] = None,
                 max_tasks: Optional[int] = None,
                 idle_exit_s: Optional[float] = None,
                 hang_substrings: tuple = ()) -> int:
-    """Persistent worker body: claim -> evaluate -> report until the STOP
-    sentinel appears (or ``max_tasks`` / ``idle_exit_s`` triggers). The
-    fitness is resolved ONCE (``fn`` override for in-process thread pools,
-    else import spec / pickle from the broker's payload — waited for if
-    the manager hasn't written it yet), amortizing startup across every
-    chunk of every generation. Returns the number of tasks completed."""
+    """Persistent worker body: claim -> evaluate -> report until the
+    fleet-wide STOP sentinel appears (or ``max_tasks`` / ``idle_exit_s``
+    triggers). The worker is MULTI-TENANT: each claimed task names its
+    run, whose fitness is resolved once from the ``runs/`` registry and
+    cached per run, keyed on the registry entry's identity — a REUSED run
+    id (deregister + re-register with a different payload) invalidates
+    the cache, so a persistent fleet never evaluates a new run with a
+    previous run's fitness. ``fn`` overrides resolution for every run
+    (in-process thread pools). A run whose fitness cannot be resolved
+    gets a per-run RESOLVE_FAIL marker (its manager fails fast) and is
+    skipped while its registration is unchanged; the worker keeps serving
+    other runs — one tenant's typo never kills a shared fleet. Claiming a poison STOP
+    ticket (autoscaler scale-down) exits AFTER the current chunk — at a
+    chunk boundary, never mid-evaluation. Returns the number of tasks
+    completed."""
     heartbeat_s = max(0.05, lease_s / 4.0)
     done = 0
+    fns: Dict[str, tuple] = {}       # run -> (registry stamp, fitness)
+    bad_runs: Dict[str, object] = {}  # run -> stamp when it failed
     idle_t0 = time.monotonic()
     while True:
         if os.path.exists(os.path.join(mq_dir, STOP_NAME)):
             return done
-        if fn is None:
-            if os.path.exists(os.path.join(mq_dir, _PAYLOAD)):
-                try:
-                    fn = resolve_fn(mq_dir)
-                except Exception:
-                    # a worker that cannot resolve the fitness (bad import
-                    # spec, unpicklable callable) is useless — surface the
-                    # traceback to the manager instead of dying silently,
-                    # or a fully dead fleet would leave tasks unclaimed
-                    # forever (the straggler clock only starts at first
-                    # claim)
-                    tb = traceback.format_exc()
-                    try:
-                        _atomic_text(os.path.join(mq_dir,
-                                                  RESOLVE_FAIL_NAME), tb)
-                    except OSError:
-                        pass
-                    sys.stderr.write(tb)
-                    return done
-            else:
-                time.sleep(poll_s)
-                continue
-        name = claim_next(mq_dir)
+        # a re-registered run id (stamp changed) gets a fresh chance: the
+        # bad-spec skip and the fitness cache must not outlive the run
+        # that created them on a persistent fleet
+        for run in [r for r, s in list(bad_runs.items())
+                    if registry_stamp(mq_dir, r) != s]:
+            del bad_runs[run]
+        name = claim_next(mq_dir, skip_runs=bad_runs)
         if name is None:
             if (idle_exit_s is not None
                     and time.monotonic() - idle_t0 > idle_exit_s):
                 return done
             time.sleep(poll_s)
             continue
+        if name.endswith(POISON_SUFFIX):
+            try:
+                os.remove(os.path.join(mq_dir, CLAIMED_DIR, name))
+            except OSError:
+                pass
+            return done                          # scale-down: one worker out
         idle_t0 = time.monotonic()
+        parsed = parse_task_name(name)
+        run = parsed[0] if parsed else ""
+        task_fn = fn
+        if task_fn is None:
+            stamp = registry_stamp(mq_dir, run)
+            hit = fns.get(run)
+            if hit is not None and hit[0] == stamp:
+                task_fn = hit[1]
+        if task_fn is None:
+            try:
+                task_fn = resolve_run_fn(mq_dir, run)
+                fns[run] = (stamp, task_fn)
+            except Exception:
+                # cannot serve THIS run (bad import spec, unpicklable
+                # callable): surface the traceback on a per-run marker so
+                # its manager fails fast instead of waiting forever (the
+                # straggler clock only starts at first claim), then keep
+                # serving the other tenants
+                tb = traceback.format_exc()
+                try:
+                    _atomic_text(resolve_fail_path(mq_dir, run), tb)
+                except OSError:
+                    pass
+                sys.stderr.write(tb)
+                bad_runs[run] = stamp
+                try:
+                    os.remove(os.path.join(mq_dir, CLAIMED_DIR, name))
+                except OSError:
+                    pass
+                continue
         hang = any(s in name for s in hang_substrings)
-        process_task(mq_dir, name, fn, heartbeat_s=heartbeat_s, hang=hang)
+        process_task(mq_dir, name, task_fn, heartbeat_s=heartbeat_s,
+                     hang=hang)
         if hang:
             return done                          # the simulated kill -9
         done += 1
@@ -330,7 +567,11 @@ class LocalWorkerPool:
     manager's stale-lease re-queue must recover the chunk.
 
     ``mq_dir`` may be bound later (``QueueBackend(worker_pool=...)`` binds
-    its own broker directory before starting the pool)."""
+    its own broker directory before starting the pool). For a SHARED
+    fleet, bind ``mq_dir`` up front and start the pool yourself; any
+    number of ``QueueBackend`` runs may then point at the same directory
+    with ``worker_pool=None``. ``grow(n)`` adds workers incrementally
+    (:class:`FleetAutoscaler` scale-up)."""
 
     def __init__(self, num_workers: int = 4, mode: str = "thread", *,
                  mq_dir: Optional[str] = None, fn: Optional[Callable] = None,
@@ -349,6 +590,32 @@ class LocalWorkerPool:
         self._members: list = []
         self._started = False
 
+    def _spawn_member(self):
+        if self.mode == "thread":
+            t = threading.Thread(
+                target=worker_loop, args=(self.mq_dir,),
+                kwargs=dict(fn=self.fn, lease_s=self.lease_s,
+                            poll_s=self.poll_s,
+                            hang_substrings=self.hang_substrings),
+                daemon=True)
+            t.start()
+            self._members.append(t)
+        else:
+            env = dict(os.environ)
+            env["PYTHONPATH"] = _SRC_ROOT + (
+                os.pathsep + env["PYTHONPATH"]
+                if env.get("PYTHONPATH") else "")
+            cmd = [self.python, "-m", "repro.runtime.mq", "--worker",
+                   "--mq-dir", self.mq_dir,
+                   "--lease-s", str(self.lease_s),
+                   "--poll-s", str(self.poll_s)]
+            if self.hang_substrings:
+                cmd += ["--hang-substrings",
+                        ",".join(self.hang_substrings)]
+            self._members.append(subprocess.Popen(
+                cmd, env=env, stdout=subprocess.DEVNULL,
+                stderr=subprocess.DEVNULL))
+
     def start(self):
         if self._started:
             return self
@@ -356,32 +623,31 @@ class LocalWorkerPool:
             raise ValueError("LocalWorkerPool.start: mq_dir not bound")
         make_broker_dirs(self.mq_dir)
         for _ in range(self.num_workers):
-            if self.mode == "thread":
-                t = threading.Thread(
-                    target=worker_loop, args=(self.mq_dir,),
-                    kwargs=dict(fn=self.fn, lease_s=self.lease_s,
-                                poll_s=self.poll_s,
-                                hang_substrings=self.hang_substrings),
-                    daemon=True)
-                t.start()
-                self._members.append(t)
-            else:
-                env = dict(os.environ)
-                env["PYTHONPATH"] = _SRC_ROOT + (
-                    os.pathsep + env["PYTHONPATH"]
-                    if env.get("PYTHONPATH") else "")
-                cmd = [self.python, "-m", "repro.runtime.mq", "--worker",
-                       "--mq-dir", self.mq_dir,
-                       "--lease-s", str(self.lease_s),
-                       "--poll-s", str(self.poll_s)]
-                if self.hang_substrings:
-                    cmd += ["--hang-substrings",
-                            ",".join(self.hang_substrings)]
-                self._members.append(subprocess.Popen(
-                    cmd, env=env, stdout=subprocess.DEVNULL,
-                    stderr=subprocess.DEVNULL))
+            self._spawn_member()
         self._started = True
         return self
+
+    def grow(self, n: int):
+        """Incremental scale-up (:class:`FleetAutoscaler`): spawn ``n``
+        more workers against the same broker directory."""
+        n = max(0, int(n))
+        self.num_workers += n
+        if self._started:
+            for _ in range(n):
+                self._spawn_member()
+        return self
+
+    def alive_workers(self) -> int:
+        """Workers still running (threads alive / subprocesses not
+        exited) — poison STOP tickets and the fleet-wide STOP reduce
+        this as workers drain out."""
+        alive = 0
+        for m in self._members:
+            if isinstance(m, threading.Thread):
+                alive += m.is_alive()
+            else:
+                alive += m.poll() is None
+        return alive
 
     def stop(self, timeout_s: float = 10.0):
         """Raise the STOP sentinel and collect the fleet. Threads that
@@ -417,12 +683,17 @@ class LocalWorkerPool:
 class MQWorkerFleet:
     """Persistent fleet launched through the batchq ``Scheduler`` protocol
     — ONE long-lived SLURM array job / Kubernetes indexed Job for the
-    whole GA run, instead of one per batch. Each work item is handed a
-    ``*.worker.json`` ticket (instead of a chunk); the standard array-task
-    entrypoint (``python -m repro.runtime.batchq --worker <ticket>``)
-    detects the suffix and runs :func:`worker_loop` until STOP. The same
-    shared-volume contract as the batch spool applies: ``mq_dir`` must be
-    reachable at the same path inside every array task / pod."""
+    whole GA run (or several runs sharing the directory), instead of one
+    per batch. Each work item is handed a ``*.worker.json`` ticket
+    (instead of a chunk); the standard array-task entrypoint
+    (``python -m repro.runtime.batchq --worker <ticket>``) detects the
+    suffix and runs :func:`worker_loop` until STOP. ``grow(n)`` submits
+    ``n`` more tickets through the SAME scheduler — the protocol's
+    incremental submit, one more ``sbatch --array`` / ``kubectl apply``
+    round-trip without touching workers already running
+    (:class:`FleetAutoscaler` scale-up). The same shared-volume contract
+    as the batch spool applies: ``mq_dir`` must be reachable at the same
+    path inside every array task / pod."""
 
     def __init__(self, scheduler, num_workers: int, *,
                  mq_dir: Optional[str] = None, lease_s: float = 15.0,
@@ -434,7 +705,23 @@ class MQWorkerFleet:
         self.poll_s = poll_s
         self.idle_exit_s = idle_exit_s
         self.handles: List[str] = []
+        self._ticket_seq = 0
         self._started = False
+
+    def _submit_tickets(self, n: int):
+        fleet_dir = os.path.join(self.mq_dir, FLEET_DIR)
+        os.makedirs(fleet_dir, exist_ok=True)
+        tickets = []
+        for _ in range(n):
+            i = self._ticket_seq
+            self._ticket_seq += 1
+            path = os.path.join(fleet_dir, f"worker_{i:04d}{TICKET_SUFFIX}")
+            _atomic_text(path, json.dumps({
+                "mq_dir": self.mq_dir, "lease_s": self.lease_s,
+                "poll_s": self.poll_s, "idle_exit_s": self.idle_exit_s}))
+            tickets.append(path)
+        self.handles.extend(self.scheduler.submit(tickets,
+                                                  job_dir=fleet_dir))
 
     def start(self):
         if self._started:
@@ -442,19 +729,22 @@ class MQWorkerFleet:
         if self.mq_dir is None:
             raise ValueError("MQWorkerFleet.start: mq_dir not bound")
         make_broker_dirs(self.mq_dir)
-        fleet_dir = os.path.join(self.mq_dir, FLEET_DIR)
-        os.makedirs(fleet_dir, exist_ok=True)
-        tickets = []
-        for i in range(self.num_workers):
-            path = os.path.join(fleet_dir, f"worker_{i:04d}{TICKET_SUFFIX}")
-            _atomic_text(path, json.dumps({
-                "mq_dir": self.mq_dir, "lease_s": self.lease_s,
-                "poll_s": self.poll_s, "idle_exit_s": self.idle_exit_s}))
-            tickets.append(path)
-        self.handles = list(self.scheduler.submit(tickets,
-                                                  job_dir=fleet_dir))
+        self._submit_tickets(self.num_workers)
         self._started = True
         return self
+
+    def grow(self, n: int):
+        """Incremental scale-up through the unchanged ``Scheduler``
+        protocol: one more submission carrying ``n`` fresh tickets."""
+        n = max(0, int(n))
+        self.num_workers += n
+        if self._started and n:
+            self._submit_tickets(n)
+        return self
+
+    def alive_workers(self) -> int:
+        return sum(self.scheduler.poll(h) in ("pending", "running")
+                   for h in self.handles)
 
     def stop(self, timeout_s: float = 10.0):
         """STOP the fleet, give it a grace period to drain off the queue,
@@ -484,6 +774,179 @@ class MQWorkerFleet:
             except Exception:
                 pass
         self._started = False
+
+    def __enter__(self):
+        return self.start()
+
+    def __exit__(self, *exc_info):
+        self.stop()
+        return False
+
+
+# ---------------------------------------------------------------------------
+# Elastic fleet autoscaling (ROADMAP "grow/shrink MQWorkerFleet from
+# queue depth")
+# ---------------------------------------------------------------------------
+
+class FleetAutoscaler:
+    """Manager-side elastic fleet controller: a background loop watches
+    the broker directory's queue depth (ready tasks) and lease count
+    (claimed, in evaluation) and resizes the worker pool between
+    ``min_workers`` and ``max_workers``.
+
+    * **Scale-up** rides the pool's incremental submit: ``pool.grow(n)``
+      spawns more local workers (:class:`LocalWorkerPool`) or submits
+      more ``*.worker.json`` tickets through the batchq ``Scheduler``
+      protocol (:class:`MQWorkerFleet`) — one extra ``sbatch --array`` /
+      ``kubectl apply`` round-trip; nothing already running is touched.
+      Pending (unclaimed) poison tickets are revoked first: cancelling a
+      scale-down that has not happened yet is cheaper than a launch.
+    * **Scale-down** drops poison STOP tickets (``*.stop`` files) into
+      the task queue. Workers claim them only when no real task is ready
+      and exit at a CHUNK BOUNDARY — a shrinking fleet never abandons a
+      claimed chunk mid-evaluation and never starves queued work.
+    * ``cooldown_s`` rate-limits resize actions so a bursty queue does
+      not thrash the scheduler; ``backlog_per_worker`` sets how much
+      outstanding work (ready + leased tasks) justifies one worker.
+
+    The autoscaler owns neither the pool nor the queue: ``stop()`` halts
+    the control loop only (``QueueBackend.close`` stops it before the
+    pool, so a dying manager never resizes a fleet it is abandoning).
+    ``stats``: ``scale_ups`` / ``scale_downs`` / ``peak_workers`` /
+    ``ticks``; ``size`` is the intended fleet size."""
+
+    def __init__(self, pool, *, min_workers: int = 1, max_workers: int = 8,
+                 interval_s: float = 0.25, cooldown_s: float = 1.0,
+                 backlog_per_worker: float = 1.0):
+        if min_workers < 1 or max_workers < min_workers:
+            raise ValueError(
+                f"need 1 <= min_workers <= max_workers: "
+                f"{min_workers}:{max_workers}")
+        if backlog_per_worker <= 0:
+            raise ValueError(
+                f"backlog_per_worker must be > 0: {backlog_per_worker}")
+        self.pool = pool
+        self.min_workers = int(min_workers)
+        self.max_workers = int(max_workers)
+        self.interval_s = float(interval_s)
+        self.cooldown_s = float(cooldown_s)
+        self.backlog_per_worker = float(backlog_per_worker)
+        self.size = int(pool.num_workers)
+        self.stats = {"scale_ups": 0, "scale_downs": 0,
+                      "peak_workers": int(pool.num_workers), "ticks": 0}
+        self.mq_dir: Optional[str] = None
+        self._poisons: List[str] = []
+        self._poison_seq = 0
+        self._last_action: Optional[float] = None
+        self._stop_evt = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+
+    def queue_state(self):
+        """One directory scan: ``(ready, leased, pending_poison)``."""
+        ready = leased = poison = 0
+        try:
+            for name in os.listdir(os.path.join(self.mq_dir, TASKS_DIR)):
+                if name.endswith(POISON_SUFFIX):
+                    poison += 1
+                elif name.endswith(".npz"):
+                    ready += 1
+        except OSError:
+            pass
+        try:
+            for name in os.listdir(os.path.join(self.mq_dir, CLAIMED_DIR)):
+                if name.endswith(".npz"):
+                    leased += 1
+        except OSError:
+            pass
+        return ready, leased, poison
+
+    def _tick(self, now: float) -> None:
+        ready, leased, _poison = self.queue_state()
+        # reconcile the intended size with reality: a worker that CRASHED
+        # (as opposed to retiring on a poison ticket, which decremented
+        # size when issued) leaves size overstating the fleet — without
+        # this, a drained-then-reloaded queue would never re-grow past
+        # the ghosts and could starve on an empty fleet
+        alive_fn = getattr(self.pool, "alive_workers", None)
+        if alive_fn is not None:
+            try:
+                self.size = min(self.size, int(alive_fn()))
+            except Exception:
+                pass                             # scheduler poll hiccup
+        outstanding = ready + leased
+        want = -(-outstanding // max(self.backlog_per_worker, 1e-9))
+        desired = min(self.max_workers, max(self.min_workers, int(want)))
+        self.stats["ticks"] += 1
+        if desired == self.size:
+            return
+        if (self._last_action is not None
+                and now - self._last_action < self.cooldown_s):
+            return
+        if desired > self.size:
+            delta = desired - self.size
+            # revoke pending poison first: an unclaimed .stop file is a
+            # scale-down that has not happened yet
+            revoked = 0
+            while self._poisons and revoked < delta:
+                path = self._poisons.pop()
+                try:
+                    os.remove(path)
+                    revoked += 1
+                except OSError:
+                    pass                         # already claimed: that
+                                                 # worker really exited
+            if delta - revoked > 0:
+                self.pool.grow(delta - revoked)
+            self.stats["scale_ups"] += 1
+        else:
+            for _ in range(self.size - desired):
+                path = os.path.join(
+                    self.mq_dir, TASKS_DIR,
+                    f"zzzstop-{os.getpid():x}-{self._poison_seq:04d}"
+                    f"{POISON_SUFFIX}")
+                self._poison_seq += 1
+                try:
+                    _atomic_text(path, "stop\n")
+                    self._poisons.append(path)
+                except OSError:
+                    break
+            self.stats["scale_downs"] += 1
+        self.size = desired
+        self.stats["peak_workers"] = max(self.stats["peak_workers"],
+                                         desired)
+        self._last_action = now
+
+    def _run(self):
+        while not self._stop_evt.wait(self.interval_s):
+            try:
+                self._tick(time.monotonic())
+            except OSError:
+                pass                             # shared-FS hiccup: retry
+
+    def start(self):
+        if self._thread is not None:
+            return self
+        if self.mq_dir is None:
+            self.mq_dir = getattr(self.pool, "mq_dir", None)
+        if self.mq_dir is None:
+            raise ValueError(
+                "FleetAutoscaler.start: pool has no mq_dir bound")
+        self.size = int(self.pool.num_workers)
+        self.stats["peak_workers"] = max(self.stats["peak_workers"],
+                                         self.size)
+        self._stop_evt.clear()
+        self._thread = threading.Thread(target=self._run, daemon=True)
+        self._thread.start()
+        return self
+
+    def stop(self):
+        """Halt the control loop. The pool keeps its current size;
+        un-claimed poison tickets remain and will retire idle workers."""
+        if self._thread is None:
+            return
+        self._stop_evt.set()
+        self._thread.join(timeout=5.0)
+        self._thread = None
 
     def __enter__(self):
         return self.start()
@@ -543,21 +1006,37 @@ class QueueBackend(PureCallbackBridge):
       under a bumped delivery suffix (``stats["lease_requeues"]``) without
       touching the retry budget — dead workers are detected by liveness;
     * failures and ``chunk_timeout_s`` stragglers (clocked from the first
-      claim of the current attempt; queue wait before that never counts)
-      are re-queued as fresh attempts through the shared
-      ``run_chunks_retry``, same semantics as the batch backends.
+      claim of the current attempt; queue wait before that never counts —
+      which also means a lower-priority run starved by a contended fleet
+      is never mis-read as straggling) are re-queued as fresh attempts
+      through the shared ``run_chunks_retry``, same semantics as the
+      batch backends.
+
+    Multi-tenancy: the backend registers its ``run_id`` (auto-generated
+    unless given) and claim ``priority`` in the broker's ``runs/``
+    registry, namespaces every task it enqueues, and only ever re-queues,
+    times out, or garbage-collects its own names — any number of
+    concurrent runs (each with its own ``QueueBackend``) can share one
+    broker directory and one worker fleet, with idle workers stealing
+    work from whichever run is loaded, highest priority first.
 
     Results are accepted from ANY delivery or attempt ever issued for a
     chunk (at-least-once; all deliveries carry identical genomes). On job
     completion everything but the winning result files is deleted, and
     completed jobs beyond ``keep_jobs`` are swept entirely — the broker
     directory stays bounded over arbitrarily long runs, stale leases of
-    killed workers included.
+    killed workers included, and the run-aware sweep never collects
+    another run's live files.
 
     The workers are NOT owned by the backend by default: pass a
     ``worker_pool`` (:class:`LocalWorkerPool` or :class:`MQWorkerFleet`,
     started against this backend's ``mq_dir`` and stopped on ``close()``),
-    or launch a fleet externally against the same directory.
+    or launch a fleet externally against the same directory — e.g. one
+    shared pool serving several backends, which ``close()`` then leaves
+    running (per-run STOP: the run deregisters; the fleet-wide STOP
+    sentinel is only raised by the fleet's owner). ``autoscaler`` (a
+    :class:`FleetAutoscaler` around the pool) is started with the backend
+    and stopped on ``close()`` before the pool.
     """
 
     name = "mq"
@@ -566,6 +1045,8 @@ class QueueBackend(PureCallbackBridge):
                  fn_spec: Optional[str] = None,
                  num_objectives: int = 1, num_workers: int = 4,
                  mq_dir: Optional[str] = None,
+                 run_id: Optional[str] = None,
+                 priority: int = 0,
                  lease_s: float = 15.0,
                  chunk_timeout_s: Optional[float] = 300.0,
                  max_retries: int = 2,
@@ -574,7 +1055,8 @@ class QueueBackend(PureCallbackBridge):
                  chunk_sizing: str = "cost",
                  min_chunk_cost_s: float = 0.0,
                  keep_jobs: Optional[int] = 4,
-                 worker_pool=None):
+                 worker_pool=None,
+                 autoscaler: Optional[FleetAutoscaler] = None):
         if fitness_fn is None and not fn_spec:
             raise ValueError("need fitness_fn (pickled) or fn_spec "
                              "(module:attr import path)")
@@ -588,6 +1070,10 @@ class QueueBackend(PureCallbackBridge):
         self._owns_dir = mq_dir is None
         self.mq_dir = mq_dir or tempfile.mkdtemp(prefix="chambga-mq-")
         make_broker_dirs(self.mq_dir)
+        self.run_id = sanitize_run_id(
+            run_id if run_id is not None
+            else f"{os.getpid():x}-{os.urandom(3).hex()}")
+        self.priority = int(priority)
         self.lease_s = float(lease_s)
         self.chunk_timeout_s = chunk_timeout_s
         self.max_retries = max_retries
@@ -606,40 +1092,34 @@ class QueueBackend(PureCallbackBridge):
         self._done_jobs: List[int] = []
         self._active_jobs: set = set()
         self._job_winners: Dict[int, set] = {}
-        # a reused directory may hold a previous run's sentinels
-        for stale in (STOP_NAME, RESOLVE_FAIL_NAME):
+        # a reused directory may hold a previous invocation's sentinels;
+        # the fleet-wide STOP is FLEET state: only an invocation that
+        # owns workers (its own pool, or the whole temp dir) may clear
+        # it — an externally-attaching run must not resurrect a fleet
+        # its operator just shut down
+        if self._owns_dir or worker_pool is not None:
             try:
-                os.remove(os.path.join(self.mq_dir, stale))
+                os.remove(os.path.join(self.mq_dir, STOP_NAME))
             except OSError:
                 pass
-        self._write_payload()
+        try:
+            os.remove(resolve_fail_path(self.mq_dir, self.run_id))
+        except OSError:
+            pass
+        register_run(self.mq_dir, self.run_id, priority=self.priority,
+                     num_objectives=num_objectives, fn_spec=fn_spec,
+                     fitness_fn=fitness_fn)
         self.worker_pool = worker_pool
         if worker_pool is not None:
             if getattr(worker_pool, "mq_dir", None) is None:
                 worker_pool.mq_dir = self.mq_dir
             worker_pool.start()
-
-    def _write_payload(self):
-        import pickle
-        if not self.fn_spec:
-            try:
-                blob = pickle.dumps(self.fitness_fn)
-            except Exception:
-                # unpicklable callables still work with in-process thread
-                # pools carrying an fn override; a payload-resolving
-                # worker will surface a RESOLVE_FAIL instead of hanging
-                blob = None
-            if blob is not None:
-                tmp = os.path.join(self.mq_dir, "fn.pkl.tmp")
-                with open(tmp, "wb") as f:
-                    f.write(blob)
-                os.replace(tmp, os.path.join(self.mq_dir, "fn.pkl"))
-        # payload.json LAST, atomically: externally launched workers poll
-        # for its existence before resolving — they must never see it
-        # before fn.pkl, or torn mid-write
-        _atomic_text(os.path.join(self.mq_dir, _PAYLOAD),
-                     json.dumps({"num_objectives": self.num_objectives,
-                                 "fn_spec": self.fn_spec}))
+        self.autoscaler = autoscaler
+        if autoscaler is not None:
+            if autoscaler.mq_dir is None:
+                autoscaler.mq_dir = getattr(autoscaler.pool, "mq_dir",
+                                            None) or self.mq_dir
+            autoscaler.start()
 
     # -- queue paths ----------------------------------------------------
     @property
@@ -694,7 +1174,7 @@ class QueueBackend(PureCallbackBridge):
         tracks = [_ChunkTrack() for _ in chunks]
 
         def enqueue(i, chunk, attempt, delivery) -> str:
-            name = task_name(job, i, attempt, delivery)
+            name = task_name(self.run_id, job, i, attempt, delivery)
             _atomic_savez(os.path.join(self.tasks_dir, name),
                           genomes=np.asarray(chunk, np.float32))
             return name
@@ -770,7 +1250,8 @@ class QueueBackend(PureCallbackBridge):
                     # atomic rename means a worker that is merely slow
                     # either keeps the file (rename fails, we retry next
                     # sweep) or has already released it
-                    new = task_name(job, i, tr.attempt, tr.delivery + 1)
+                    new = task_name(self.run_id, job, i, tr.attempt,
+                                    tr.delivery + 1)
                     try:
                         os.rename(claimed,
                                   os.path.join(self.tasks_dir, new))
@@ -785,7 +1266,7 @@ class QueueBackend(PureCallbackBridge):
                     with self._lock:
                         self.stats["lease_requeues"] += 1
 
-        resolve_fail = os.path.join(self.mq_dir, RESOLVE_FAIL_NAME)
+        resolve_fail = resolve_fail_path(self.mq_dir, self.run_id)
 
         def wait(i, token, timeout_s):
             tr = tracks[i]
@@ -797,10 +1278,10 @@ class QueueBackend(PureCallbackBridge):
                     raise ChunkFailure(
                         f"chunk {i} worker failed:\n{tr.failed_msg}")
                 if os.path.exists(resolve_fail):
-                    # a worker could not resolve the fitness (bad import
-                    # spec / unpicklable callable): the condition is
-                    # global and permanent, so fail fast instead of
-                    # waiting on tasks a dead fleet will never claim
+                    # a worker could not resolve THIS run's fitness (bad
+                    # import spec / unpicklable callable): the condition
+                    # is permanent for the run, so fail fast instead of
+                    # waiting on tasks the fleet will never serve
                     with open(resolve_fail) as f:
                         raise ChunkFailure(
                             "a worker failed to resolve the fitness "
@@ -834,15 +1315,14 @@ class QueueBackend(PureCallbackBridge):
         return out
 
     # -- broker-directory garbage collection ---------------------------
-    _JOB_RE = re.compile(r"j(\d{6})_")
-
     def _finish_job(self, job: int, tracks: List[_ChunkTrack]) -> None:
         """Completed-job epilogue, win or lose: record the job's winning
         result files, evict whole jobs beyond ``keep_jobs``, then sweep.
-        The sweep is global over non-active jobs — so a duplicate result
-        from an at-least-once race that lands AFTER its own job finished
-        is still collected on the next job's epilogue, ``keep_jobs=None``
-        included (that setting retains winners forever, not garbage)."""
+        The sweep is global over THIS RUN's non-active jobs — so a
+        duplicate result from an at-least-once race that lands AFTER its
+        own job finished is still collected on the next job's epilogue,
+        ``keep_jobs=None`` included (that setting retains winners forever,
+        not garbage)."""
         winners = set()
         for tr in tracks:
             if tr.done_name:
@@ -864,15 +1344,22 @@ class QueueBackend(PureCallbackBridge):
         """Remove every queue file of a non-active job that is not a
         retained winning result: stale tasks from superseded deliveries,
         claimed files + leases left by killed workers, and duplicate or
-        late results from at-least-once races. Files that don't match the
-        task naming scheme are foreign content and never touched."""
+        late results from at-least-once races. The sweep is RUN-AWARE:
+        only names in this backend's own ``run_id`` namespace are
+        eligible — another run's live queue in a shared broker directory
+        is invisible to it. Files that don't parse as task names are
+        foreign content and never touched."""
+        prefix = f"r{self.run_id}_"
+        job_re = re.compile(r"j(\d{6})_")
         for d in (self.tasks_dir, self.claimed_dir, self.results_dir):
             try:
                 entries = os.listdir(d)
             except OSError:
                 continue
             for name in entries:
-                m = self._JOB_RE.match(name)
+                if not name.startswith(prefix):
+                    continue
+                m = job_re.match(name[len(prefix):])
                 if m is None:
                     continue
                 j = int(m.group(1))
@@ -885,21 +1372,41 @@ class QueueBackend(PureCallbackBridge):
 
     def close(self, remove_dir: Optional[bool] = None):
         """Drain in-flight evaluations (a pure_callback may still be
-        polling the queue), raise STOP for the persistent workers, stop an
-        owned pool/fleet, and optionally delete the broker directory
-        (default: only when the backend created a temp dir itself)."""
+        polling the queue), then tear down RUN-SCOPED state: stop the
+        autoscaler, deregister this run from the ``runs/`` registry, and
+        (unless ``keep_jobs=None``) sweep the run's whole namespace —
+        retained winner results included — so a long-lived shared broker
+        directory stays bounded across any number of finished runs.
+        The fleet-wide STOP sentinel is raised only when this backend owns
+        the workers (its own ``worker_pool``, which it stops) or the whole
+        directory — closing one run of a SHARED fleet never kills the
+        workers other runs still use. ``remove_dir`` deletes the broker
+        directory (default: only when the backend created a temp dir
+        itself)."""
         with self._cond:
             if self._closed:
                 return
             self._closed = True
             while self._inflight:
                 self._cond.wait()
-        try:
-            _atomic_text(os.path.join(self.mq_dir, STOP_NAME), "stop\n")
-        except OSError:
-            pass
+        if self.autoscaler is not None:
+            self.autoscaler.stop()
+        deregister_run(self.mq_dir, self.run_id)
+        if self.keep_jobs is not None:
+            # a finishing run leaves nothing behind in a shared broker
+            # directory: the retained keep_jobs winners existed for this
+            # manager alone, and no surviving run's sweep may touch a
+            # foreign namespace (keep_jobs=None keeps winners forever by
+            # contract — the explicit opt-out of GC)
+            self._gc_sweep(set(), {})
         if self.worker_pool is not None:
-            self.worker_pool.stop()
+            self.worker_pool.stop()              # raises fleet-wide STOP
+        elif self._owns_dir:
+            try:
+                _atomic_text(os.path.join(self.mq_dir, STOP_NAME),
+                             "stop\n")
+            except OSError:
+                pass
         if remove_dir is None:
             remove_dir = self._owns_dir
         if remove_dir:
@@ -915,7 +1422,9 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
         prog="repro.runtime.mq",
         description="Persistent message-queue worker: claim -> evaluate "
-                    "-> report until the broker raises STOP.")
+                    "-> report until the broker raises STOP. Multi-tenant:"
+                    " serves every registered run, highest priority "
+                    "first.")
     ap.add_argument("--worker", action="store_true", required=True,
                     help="run the persistent worker loop")
     ap.add_argument("--mq-dir", required=True,

@@ -1,0 +1,186 @@
+"""Unified DispatchBackend conformance suite.
+
+Every decoupled backend — HostPool, the batch-scheduled spool behind the
+SLURM and Kubernetes mock schedulers, and the persistent-worker message
+queue — must behave identically behind the ``DispatchBackend`` protocol:
+eager and jitted evaluation matching inline fitness, composition with the
+broker's padded cost-balanced dispatch, pickled-fitness delivery,
+drain-before-close, and timeout -> re-queue -> retry-succeeds. This
+module holds that contract ONCE, parametrized over all four backends;
+``test_batchq.py`` and ``test_mq.py`` import :func:`run_conformance` /
+:func:`make_backend` for their backend-specific variants.
+
+Collected by tier-1 via ``pyproject.toml``'s ``python_files`` and named
+explicitly (first) by the ``scripts/ci.sh`` fast lane, so a contract
+regression fails before the backend-specific suites even start.
+"""
+import functools
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.broker import Broker, DispatchBackend, HostPoolBackend
+from repro.fitness import sphere
+from repro.fitness import hostsim
+from repro.runtime.batchq import (KubernetesScheduler, LocalMockScheduler,
+                                  MockKubectl, SlurmArrayBackend)
+from repro.runtime.mq import LocalWorkerPool, QueueBackend
+
+SPEC = "repro.fitness.hostsim:sphere"
+
+#: the four decoupled execution substrates behind the ONE protocol
+BACKEND_KINDS = ("hostpool", "slurm-mock", "k8s-mock", "mq")
+
+
+def run_conformance(backend, n=29):
+    """The shared acceptance block: eager + jitted evaluation match the
+    inline fitness, and the backend composes with the broker's padded
+    cost-balanced dispatch under jit (N % W != 0 exercises the sentinel
+    pads)."""
+    genomes = jax.random.uniform(jax.random.PRNGKey(0), (n, 5))
+    direct = np.asarray(sphere(genomes))
+    assert isinstance(backend, DispatchBackend)
+    # eager and jitted evaluation match inline fitness
+    np.testing.assert_allclose(np.asarray(backend(genomes)), direct,
+                               rtol=1e-6)
+    np.testing.assert_allclose(
+        np.asarray(jax.jit(backend.__call__)(genomes)), direct, rtol=1e-6)
+    # composes with the broker's padded balanced dispatch under jit
+    broker = Broker(cost_fn=lambda g: jnp.sum(jnp.abs(g), -1) + 0.1,
+                    num_workers=4, backend=backend)
+    fit, stats = jax.jit(broker.evaluate)(genomes)
+    np.testing.assert_allclose(np.asarray(fit), direct, rtol=1e-6)
+    assert float(stats["balanced"]) == 1.0
+    assert int(stats["padded"]) == (-(-n // 4) * 4) - n
+
+
+def make_backend(kind, tmp_path, *, fitness_fn=None, fn_spec=None,
+                 pool_fn=None, hang_substrings=(), chunk_timeout_s=60,
+                 max_retries=2, num_workers=3):
+    """One decoupled backend per ``kind``, same knobs everywhere.
+
+    ``fitness_fn``/``fn_spec`` select the payload path (pickle vs import
+    spec; defaults to the numpy sphere spec). ``pool_fn`` overrides
+    resolution inside the mq thread pool for unpicklable closures.
+    ``hang_substrings`` injects lost nodes/pods into the mock schedulers
+    (ignored by hostpool/mq — inject through the fitness there)."""
+    if fitness_fn is None and fn_spec is None:
+        fn_spec = SPEC
+    if kind == "hostpool":
+        fn = fitness_fn if fitness_fn is not None else hostsim.sphere
+        return HostPoolBackend(fn, num_workers=num_workers,
+                               chunk_timeout_s=chunk_timeout_s,
+                               max_retries=max_retries)
+    if kind in ("slurm-mock", "k8s-mock"):
+        scheduler = (
+            LocalMockScheduler(mode="thread",
+                               hang_substrings=hang_substrings)
+            if kind == "slurm-mock" else
+            KubernetesScheduler(runner=MockKubectl(
+                mode="thread", hang_substrings=hang_substrings)))
+        return SlurmArrayBackend(fitness_fn, fn_spec=fn_spec,
+                                 num_workers=num_workers,
+                                 scheduler=scheduler,
+                                 spool_dir=str(tmp_path / "spool"),
+                                 chunk_timeout_s=chunk_timeout_s,
+                                 max_retries=max_retries,
+                                 poll_interval_s=0.005)
+    if kind == "mq":
+        pool = LocalWorkerPool(num_workers=num_workers, mode="thread",
+                               lease_s=30.0, poll_s=0.005, fn=pool_fn)
+        return QueueBackend(fitness_fn, fn_spec=fn_spec,
+                            num_workers=num_workers, worker_pool=pool,
+                            mq_dir=str(tmp_path / "mq"),
+                            chunk_timeout_s=chunk_timeout_s,
+                            max_retries=max_retries,
+                            poll_interval_s=0.005)
+    raise ValueError(kind)
+
+
+@pytest.mark.parametrize("kind", BACKEND_KINDS)
+class TestBackendContract:
+    def test_conformance_and_padded_broker_compose(self, kind, tmp_path):
+        with make_backend(kind, tmp_path) as backend:
+            run_conformance(backend)
+
+    def test_pickled_fitness(self, kind, tmp_path):
+        """No import spec: workers load the callable from the pickle
+        payload (hostpool calls it directly — same contract surface)."""
+        with make_backend(kind, tmp_path,
+                          fitness_fn=hostsim.rastrigin) as backend:
+            g = np.random.default_rng(1).uniform(-1, 1, (11, 4)).astype(
+                np.float32)
+            np.testing.assert_allclose(backend._host_eval(g),
+                                       hostsim.rastrigin(g), rtol=1e-5)
+
+    def test_drain_before_close(self, kind, tmp_path):
+        """close() while an evaluation is in flight must drain it — the
+        pipelined epoch loop can still have a pure_callback polling when
+        the caller tears the backend down — and later use must raise."""
+        slow = functools.partial(hostsim.delay_sphere, base_s=0.03)
+        g = np.random.default_rng(7).uniform(-1, 1, (12, 3)).astype(
+            np.float32)
+        g[:, 0] = -1.0                           # no hot rows: base_s only
+        with make_backend(kind, tmp_path, fitness_fn=slow,
+                          pool_fn=slow) as backend:
+            box = {}
+            t = threading.Thread(
+                target=lambda: box.update(out=backend._host_eval(g)),
+                daemon=True)
+            t.start()
+            time.sleep(0.05)                     # eval is in flight
+            backend.close()                      # must drain, not strand
+            t.join(timeout=30)
+            assert not t.is_alive()
+            np.testing.assert_allclose(box["out"], hostsim.sphere(g),
+                                       rtol=1e-6)
+            with pytest.raises(RuntimeError, match="after close"):
+                backend._host_eval(g)
+
+    def test_timeout_then_retry_succeeds(self, kind, tmp_path):
+        """The acceptance case everywhere: one chunk straggles past the
+        per-chunk timeout, the re-queued attempt delivers. Mock
+        schedulers lose the node/pod (accepted, never started); hostpool
+        and mq get a stuck-but-alive worker via a hang-once fitness (the
+        mq worker keeps heartbeating, so this is a TIMEOUT, not a
+        lease re-queue)."""
+        release = threading.Event()
+        state = {"hung": False}
+        lock = threading.Lock()
+
+        def hang_once(genomes):
+            g = np.asarray(genomes, np.float32)
+            hot = bool(np.any(g[:, 0] > 0))
+            with lock:
+                first = hot and not state["hung"]
+                if first:
+                    state["hung"] = True
+            if first:
+                release.wait(timeout=30)
+            return hostsim.sphere(g)
+
+        g = np.random.default_rng(4).uniform(-1, 1, (24, 3)).astype(
+            np.float32)
+        g[:, 0] = -1.0
+        if kind in ("slurm-mock", "k8s-mock"):
+            kw = dict(hang_substrings=("chunk_0001_try0",))
+        else:
+            g[0, 0] = 1.0                        # chunk 0 carries the hot row
+            kw = dict(fitness_fn=hang_once, pool_fn=hang_once)
+        with make_backend(kind, tmp_path, chunk_timeout_s=0.5,
+                          **kw) as backend:
+            try:
+                out = backend._host_eval(g)
+                np.testing.assert_allclose(out, hostsim.sphere(g),
+                                           rtol=1e-6)
+                # a loaded CI box may time out healthy chunks too: >= not ==
+                assert backend.stats["retries"] >= 1
+                if "timeouts" in backend.stats:
+                    assert backend.stats["timeouts"] >= 1
+            finally:
+                release.set()                    # free the hung worker so
+                                                 # close() doesn't wait on it

@@ -26,28 +26,11 @@ from repro.runtime.batchq import (KubernetesScheduler, LocalMockScheduler,
 
 SPEC = "repro.fitness.hostsim:sphere"
 
-
-# ---------------------------------------------------------------------------
-# shared DispatchBackend conformance (the paper's pluggable simulation
-# container: every decoupled backend must behave identically)
-# ---------------------------------------------------------------------------
-
-def _conformance(backend, n=29):
-    genomes = jax.random.uniform(jax.random.PRNGKey(0), (n, 5))
-    direct = np.asarray(sphere(genomes))
-    assert isinstance(backend, DispatchBackend)
-    # eager and jitted evaluation match inline fitness
-    np.testing.assert_allclose(np.asarray(backend(genomes)), direct,
-                               rtol=1e-6)
-    np.testing.assert_allclose(
-        np.asarray(jax.jit(backend.__call__)(genomes)), direct, rtol=1e-6)
-    # composes with the broker's padded balanced dispatch under jit
-    broker = Broker(cost_fn=lambda g: jnp.sum(jnp.abs(g), -1) + 0.1,
-                    num_workers=4, backend=backend)
-    fit, stats = jax.jit(broker.evaluate)(genomes)
-    np.testing.assert_allclose(np.asarray(fit), direct, rtol=1e-6)
-    assert float(stats["balanced"]) == 1.0
-    assert int(stats["padded"]) == (-(-n // 4) * 4) - n
+# the shared DispatchBackend contract (eager/jit parity, padded-broker
+# compose, pickled fitness, drain-before-close, timeout->retry) lives in
+# backend_conformance.py, parametrized over ALL decoupled backends; this
+# module reuses its acceptance block for backend-specific variants
+from backend_conformance import run_conformance as _conformance  # noqa: E402
 
 
 class TestConformance:

@@ -16,12 +16,14 @@ from repro.core.hostbridge import cost_sized_chunk_sizes
 from repro.fitness import sphere
 from repro.fitness import hostsim
 from repro.runtime.batchq import LocalMockScheduler
-from repro.runtime.mq import (CLAIMED_DIR, LEASE_SUFFIX, RESULTS_DIR,
-                              STOP_NAME, TASKS_DIR, LocalWorkerPool,
+from repro.runtime.mq import (CLAIMED_DIR, LEASE_SUFFIX, POISON_SUFFIX,
+                              RESULTS_DIR, STOP_NAME, TASKS_DIR,
+                              FleetAutoscaler, LocalWorkerPool,
                               MQWorkerFleet, QueueBackend, claim_next,
+                              make_broker_dirs, parse_task_name,
                               task_name, worker_loop)
 
-from test_batchq import _conformance
+from backend_conformance import run_conformance as _conformance
 
 SPEC = "repro.fitness.hostsim:sphere"
 
@@ -209,7 +211,7 @@ class TestLeases:
         mq = str(tmp_path)
         for d in (TASKS_DIR, CLAIMED_DIR, RESULTS_DIR):
             os.makedirs(os.path.join(mq, d))
-        names = [task_name(0, i, 0, 0) for i in range(8)]
+        names = [task_name("a", 0, i, 0, 0) for i in range(8)]
         for n in names:
             with open(os.path.join(mq, TASKS_DIR, n), "wb") as f:
                 f.write(b"x")
@@ -288,6 +290,7 @@ class TestBrokerGC:
         — completed jobs reduce to their winning results and old jobs are
         swept beyond keep_jobs."""
         with QueueBackend(fn_spec=SPEC, num_workers=2, keep_jobs=3,
+                          run_id="gc-run",
                           worker_pool=_thread_pool(2),
                           mq_dir=str(tmp_path), **FAST) as backend:
             g = np.ones((10, 3), np.float32)
@@ -300,10 +303,12 @@ class TestBrokerGC:
             results = [os.path.basename(p) for p in
                        glob.glob(str(tmp_path / RESULTS_DIR / "*"))]
             # winning results of the newest keep_jobs jobs only: 2 chunks
-            # per job, jobs 7..9
+            # per job, jobs 7..9 — all in this run's namespace
             assert len(results) == 6
-            assert {r[:8] for r in results} == {"j000007_", "j000008_",
-                                                "j000009_"}
+            parsed = [parse_task_name(r[:-len(".result.npz")] + ".npz")
+                      for r in results]
+            assert {p[0] for p in parsed} == {"gc-run"}
+            assert {p[1] for p in parsed} == {7, 8, 9}
 
     def test_orphan_claims_and_leases_reaped(self, tmp_path):
         """Claimed files + lease files left by killed workers are swept
@@ -314,7 +319,7 @@ class TestBrokerGC:
                           worker_pool=_thread_pool(2), mq_dir=mq,
                           **FAST) as backend:
             # a worker killed mid-task in job 0 left its claim + lease
-            orphan = task_name(0, 99, 0, 0)
+            orphan = task_name(backend.run_id, 0, 99, 0, 0)
             for path in (os.path.join(mq, CLAIMED_DIR, orphan),
                          os.path.join(mq, CLAIMED_DIR,
                                       orphan + LEASE_SUFFIX)):
@@ -403,13 +408,110 @@ def test_worker_loop_exits_on_stop_and_max_tasks(tmp_path):
         os.makedirs(os.path.join(mq, d))
     from repro.runtime.batchq import _atomic_savez
     for i in range(3):
-        _atomic_savez(os.path.join(mq, TASKS_DIR, task_name(0, i, 0, 0)),
+        _atomic_savez(os.path.join(mq, TASKS_DIR, task_name("a", 0, i, 0, 0)),
                       genomes=np.ones((2, 2), np.float32))
     done = worker_loop(mq, fn=hostsim.sphere, max_tasks=2, poll_s=0.005)
     assert done == 2
     with open(os.path.join(mq, STOP_NAME), "w") as f:
         f.write("stop")
     assert worker_loop(mq, fn=hostsim.sphere, poll_s=0.005) == 0
+
+
+# ---------------------------------------------------------------------------
+# elastic fleet autoscaling (queue-depth scale-up, poison-ticket
+# scale-down at chunk boundaries)
+# ---------------------------------------------------------------------------
+
+class TestAutoscaler:
+    def test_poison_ticket_honored_at_chunk_boundary(self, tmp_path):
+        """A worker claims a poison STOP ticket only when no real task is
+        ready — queued work always drains first — and exits cleanly,
+        removing the ticket."""
+        mq = str(tmp_path)
+        make_broker_dirs(mq)
+        from repro.runtime.batchq import _atomic_savez
+        for i in range(2):
+            _atomic_savez(os.path.join(mq, TASKS_DIR,
+                                       task_name("a", 0, i, 0, 0)),
+                          genomes=np.ones((2, 2), np.float32))
+        with open(os.path.join(mq, TASKS_DIR, "zzzstop-0"
+                               + POISON_SUFFIX), "w") as f:
+            f.write("stop")
+        done = worker_loop(mq, fn=hostsim.sphere, poll_s=0.005)
+        assert done == 2                         # both chunks before exit
+        assert os.listdir(os.path.join(mq, TASKS_DIR)) == []
+        assert os.listdir(os.path.join(mq, CLAIMED_DIR)) == []
+        results = os.listdir(os.path.join(mq, RESULTS_DIR))
+        assert len(results) == 2
+
+    def test_autoscaler_replaces_crashed_workers(self, tmp_path):
+        """The controller reconciles its intended size with the pool's
+        live count: a worker that CRASHED (not poison-retired) leaves
+        size overstating the fleet, and the next tick must re-grow
+        toward the backlog instead of starving on ghosts."""
+        mq = str(tmp_path)
+        make_broker_dirs(mq)
+        from repro.runtime.batchq import _atomic_savez
+        for i in range(2):                       # backlog of 2 ready tasks
+            _atomic_savez(os.path.join(mq, TASKS_DIR,
+                                       task_name("a", 0, i, 0, 0)),
+                          genomes=np.ones((2, 2), np.float32))
+
+        class GhostPool:
+            """3 intended workers, 1 actually alive."""
+            num_workers = 3
+            mq_dir = mq
+            grown = []
+
+            def alive_workers(self):
+                return 1
+
+            def grow(self, n):
+                self.grown.append(n)
+
+        pool = GhostPool()
+        scaler = FleetAutoscaler(pool, min_workers=1, max_workers=4,
+                                 cooldown_s=0.0)
+        scaler.mq_dir = mq
+        scaler.size = 3                          # stale intended size
+        scaler._tick(time.monotonic())
+        # reconciled 3 -> 1 alive, then grew toward the 2-task backlog
+        assert pool.grown == [1]
+        assert scaler.size == 2
+
+    def test_autoscaler_grows_on_depth_and_shrinks_on_drain(self,
+                                                            tmp_path):
+        """Acceptance: a deep queue on a 1-worker floor makes the
+        controller grow the fleet (incremental pool submit); once the
+        queue drains it shrinks back to min_workers via poison tickets
+        that idle workers consume."""
+        def slow(genomes):
+            time.sleep(0.12)
+            return hostsim.sphere(np.asarray(genomes))
+
+        pool = LocalWorkerPool(num_workers=1, mode="thread", fn=slow,
+                               lease_s=30.0, poll_s=0.005)
+        scaler = FleetAutoscaler(pool, min_workers=1, max_workers=4,
+                                 interval_s=0.02, cooldown_s=0.02)
+        with QueueBackend(slow, num_workers=8, worker_pool=pool,
+                          autoscaler=scaler, mq_dir=str(tmp_path),
+                          **FAST) as backend:
+            g = np.random.default_rng(11).uniform(
+                -1, 1, (16, 3)).astype(np.float32)
+            out = backend._host_eval(g)          # 8 chunks, 1 worker floor
+            np.testing.assert_allclose(out, hostsim.sphere(g), rtol=1e-6)
+            assert scaler.stats["scale_ups"] >= 1
+            assert scaler.stats["peak_workers"] >= 2
+            assert pool.num_workers >= 2
+            # drain: the controller shrinks to the floor and idle workers
+            # retire on the poison tickets (>= timing tolerance: poll)
+            deadline = time.monotonic() + 15
+            while ((scaler.size > 1 or pool.alive_workers() > 1)
+                   and time.monotonic() < deadline):
+                time.sleep(0.02)
+            assert scaler.size == 1
+            assert scaler.stats["scale_downs"] >= 1
+            assert pool.alive_workers() <= 1
 
 
 # ---------------------------------------------------------------------------
@@ -434,8 +536,11 @@ def test_ga_run_mq_mock_e2e_bit_identical_to_inline(tmp_path):
     assert np.array_equal(np.asarray(pop_inline.genomes),
                           np.asarray(pop_mq.genomes))
     # broker-directory GC held under the full engine loop
-    results = glob.glob(str(tmp_path / "mq" / RESULTS_DIR / "*"))
-    assert len({os.path.basename(p)[:8] for p in results}) <= 2
+    results = [os.path.basename(p) for p in
+               glob.glob(str(tmp_path / "mq" / RESULTS_DIR / "*"))]
+    jobs = {parse_task_name(r[:-len(".result.npz")] + ".npz")[1]
+            for r in results}
+    assert len(jobs) <= 2
     assert glob.glob(str(tmp_path / "mq" / TASKS_DIR / "*")) == []
 
 

@@ -1,0 +1,187 @@
+"""Queue-invariant property/chaos tests for the message queue (run via
+the hypothesis stub when the real package is absent): task-name parse
+round-trips, single-winner claims under thread races, monotone delivery
+bumps that never burn the retry budget, and first-result-wins under late
+duplicates from superseded deliveries."""
+import glob
+import os
+import tempfile
+import threading
+import time
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.fitness import hostsim
+from repro.runtime.batchq import _atomic_savez
+from repro.runtime.mq import (CLAIMED_DIR, LEASE_SUFFIX, RESULTS_DIR,
+                              TASKS_DIR, LocalWorkerPool, QueueBackend,
+                              claim_next, make_broker_dirs,
+                              mq_result_path, parse_task_name,
+                              sanitize_run_id, task_name)
+
+SPEC = "repro.fitness.hostsim:sphere"
+
+
+# ---------------------------------------------------------------------------
+# task_name <-> parse_task_name round-trip
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=60, deadline=None)
+@given(job=st.integers(0, 2_000_000), chunk=st.integers(0, 50_000),
+       attempt=st.integers(0, 40), delivery=st.integers(0, 40),
+       run=st.sampled_from(["a", "0", "run-a", "meta-ga-01", "x7-sweep"]))
+def test_task_name_parse_roundtrip(job, chunk, attempt, delivery, run):
+    """Any job/chunk/attempt/delivery — including values wider than the
+    zero-padded field widths — survives the round trip, and near-miss
+    names never parse."""
+    name = task_name(run, job, chunk, attempt, delivery)
+    assert parse_task_name(name) == (run, job, chunk, attempt, delivery)
+    assert parse_task_name(name + ".tmp") is None
+    assert parse_task_name(name[:-len(".npz")] + ".stop") is None
+    assert parse_task_name("job_000001.npz") is None
+
+
+def test_sanitize_run_id():
+    assert sanitize_run_id("Meta GA/7") == "meta-ga-7"
+    assert sanitize_run_id("run-a") == "run-a"
+    with pytest.raises(ValueError):
+        sanitize_run_id("///")
+
+
+# ---------------------------------------------------------------------------
+# claim exclusivity: N claimers racing on ONE task through a barrier
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=6, deadline=None)
+@given(claimers=st.integers(2, 8))
+def test_one_task_many_claimers_exactly_one_winner(claimers):
+    """The atomic rename hands a single ready task to exactly one of N
+    simultaneously released claimers; every loser sees None."""
+    with tempfile.TemporaryDirectory() as mq:
+        make_broker_dirs(mq)
+        name = task_name("a", 0, 0, 0, 0)
+        with open(os.path.join(mq, TASKS_DIR, name), "wb") as f:
+            f.write(b"x")
+        barrier = threading.Barrier(claimers)
+        wins, lock = [], threading.Lock()
+
+        def grab():
+            barrier.wait()
+            got = claim_next(mq)
+            if got is not None:
+                with lock:
+                    wins.append(got)
+
+        threads = [threading.Thread(target=grab) for _ in range(claimers)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        assert wins == [name]
+        assert os.listdir(os.path.join(mq, TASKS_DIR)) == []
+        assert os.listdir(os.path.join(mq, CLAIMED_DIR)) == [name]
+
+
+# ---------------------------------------------------------------------------
+# chaos: repeated worker deaths bump the delivery suffix monotonically
+# WITHOUT consuming the run_chunks_retry attempt budget
+# ---------------------------------------------------------------------------
+
+def test_stale_lease_requeue_bumps_delivery_monotonically(tmp_path):
+    """Workers that claim chunk 0's d0 and d1 deliveries die without
+    reporting; each death re-queues under the NEXT delivery suffix (d0 ->
+    d1 -> d2) and the surviving worker completes d2 — zero retries, zero
+    timeouts: liveness re-queues are free of the attempt budget."""
+    pool = LocalWorkerPool(num_workers=3, mode="thread", lease_s=0.4,
+                           poll_s=0.005,
+                           hang_substrings=("c0000_t0_d0", "c0000_t0_d1"))
+    with QueueBackend(fn_spec=SPEC, num_workers=2, run_id="chaos",
+                      worker_pool=pool, lease_s=0.4, keep_jobs=4,
+                      chunk_timeout_s=60, poll_interval_s=0.005,
+                      mq_dir=str(tmp_path)) as backend:
+        g = np.ones((8, 3), np.float32)
+        out = backend._host_eval(g)
+        np.testing.assert_allclose(out, hostsim.sphere(g), rtol=1e-6)
+        assert backend.stats["lease_requeues"] >= 2
+        assert backend.stats["retries"] == 0
+        assert backend.stats["timeouts"] == 0
+        # the chaos chunk's winning delivery reflects the monotone bumps
+        (win,) = glob.glob(str(tmp_path / RESULTS_DIR
+                               / "rchaos_j000000_c0000_*.result.npz"))
+        parsed = parse_task_name(
+            os.path.basename(win)[:-len(".result.npz")] + ".npz")
+        assert parsed[3] == 0                    # attempt untouched
+        assert parsed[4] >= 2                    # delivery bumped 0->1->2
+
+
+# ---------------------------------------------------------------------------
+# at-least-once: first result wins; a late duplicate from a superseded
+# delivery is ignored (and swept)
+# ---------------------------------------------------------------------------
+
+def test_first_result_wins_over_late_superseded_duplicate(tmp_path):
+    """Scripted workers, no pool: delivery d0 of chunk 0 is claimed and
+    stalls; the manager re-queues as d1; a healthy worker reports d1
+    (accepted — first to land); the stalled ghost then reports a
+    CONFLICTING d0 result, which must be ignored and garbage-collected
+    with the job."""
+    mq = str(tmp_path)
+    backend = QueueBackend(fn_spec=SPEC, num_workers=2, run_id="w",
+                           lease_s=0.3, keep_jobs=4, chunk_timeout_s=60,
+                           poll_interval_s=0.005, mq_dir=mq)
+    g = np.arange(8, dtype=np.float32).reshape(4, 2)     # 2 chunks of 2
+    box = {}
+    t = threading.Thread(
+        target=lambda: box.update(out=backend._host_eval(g)), daemon=True)
+    t.start()
+    tasks = os.path.join(mq, TASKS_DIR)
+    claimed = os.path.join(mq, CLAIMED_DIR)
+    d0 = task_name("w", 0, 0, 0, 0)
+    c1 = task_name("w", 0, 1, 0, 0)
+    d1 = task_name("w", 0, 0, 0, 1)
+
+    def wait_for(path, timeout=10.0):
+        deadline = time.monotonic() + timeout
+        while not os.path.exists(path):
+            assert time.monotonic() < deadline, f"never appeared: {path}"
+            time.sleep(0.005)
+
+    wait_for(os.path.join(tasks, d0))
+    # scripted worker 1 claims d0, writes its lease once, and stalls
+    os.rename(os.path.join(tasks, d0), os.path.join(claimed, d0))
+    with open(os.path.join(claimed, d0) + LEASE_SUFFIX, "w") as f:
+        f.write("ghost")
+    # the manager detects the stale lease and re-queues as delivery d1
+    wait_for(os.path.join(tasks, d1))
+    # scripted worker 2 claims d1 and reports the CORRECT result
+    os.rename(os.path.join(tasks, d1), os.path.join(claimed, d1))
+    good = hostsim.sphere(g[:2])
+    _atomic_savez(mq_result_path(mq, d1), fitness=good,
+                  duration=np.float64(0.01))
+    os.remove(os.path.join(claimed, d1))
+    time.sleep(0.5)          # ample manager sweeps to ACCEPT d1 first
+    # the ghost wakes up and reports a conflicting late duplicate for the
+    # superseded d0 delivery — at-least-once allows this to happen
+    _atomic_savez(mq_result_path(mq, d0),
+                  fitness=np.full_like(good, 777.0),
+                  duration=np.float64(9.9))
+    time.sleep(0.1)
+    # serve chunk 1 normally so the job can finish
+    os.rename(os.path.join(tasks, c1), os.path.join(claimed, c1))
+    _atomic_savez(mq_result_path(mq, c1), fitness=hostsim.sphere(g[2:]),
+                  duration=np.float64(0.01))
+    os.remove(os.path.join(claimed, c1))
+    t.join(timeout=30)
+    assert not t.is_alive()
+    # the FIRST result to land (d1) won; the 777 duplicate never leaked
+    np.testing.assert_allclose(box["out"][:2], good, rtol=1e-6)
+    np.testing.assert_allclose(box["out"], hostsim.sphere(g), rtol=1e-6)
+    # ...and the job epilogue swept the duplicate, keeping one winner
+    results = sorted(os.path.basename(p) for p in
+                     glob.glob(str(tmp_path / RESULTS_DIR / "*")))
+    assert not os.path.exists(mq_result_path(mq, d0))
+    chunk0 = [r for r in results if "_c0000_" in r]
+    assert chunk0 == [os.path.basename(mq_result_path(mq, d1))]
+    backend.close()
