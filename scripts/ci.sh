@@ -1,8 +1,19 @@
 #!/usr/bin/env bash
 # CI entrypoint. Usage:
 #   scripts/ci.sh            # full tier-1 lane (everything, incl. slow)
-#   scripts/ci.sh fast       # fast lane: skips @pytest.mark.slow tests
+#   scripts/ci.sh fast       # lint, then skip-@pytest.mark.slow tests
 #   scripts/ci.sh durations  # fast lane + the 15 slowest tests listed
+#   scripts/ci.sh lint       # protocol linter + ruff, no test suites
+#
+# The lint lane runs the protocol linter (`python -m repro.analysis src`
+# — atomic-write discipline, worker import purity, trace purity, lock
+# hygiene; see src/repro/analysis/) and, when installed, ruff with the
+# conservative rule set pinned in pyproject.toml. The fast lane runs
+# lint FIRST: a queue-protocol regression fails in seconds, before any
+# test suite starts. ruff is pinned in requirements-dev.txt but absent
+# from the hermetic runtime container, so its step degrades to a notice
+# rather than a failure when the index is unreachable; the custom pass
+# has no dependencies and always runs.
 #
 # The fast lane names tests/backend_conformance.py FIRST: the unified
 # DispatchBackend contract suite (eager/jit parity, padded-broker
@@ -43,13 +54,26 @@ python -m pip install -q -r requirements-dev.txt 2>/dev/null \
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
+run_lint() {
+    python -m repro.analysis src
+    if python -c "import ruff" 2>/dev/null; then
+        python -m ruff check src tests scripts
+    elif command -v ruff >/dev/null 2>&1; then
+        ruff check src tests scripts
+    else
+        echo "ci.sh: ruff unavailable, ran protocol linter only"
+    fi
+}
+
 LANE="${1:-full}"
 case "$LANE" in
-    fast)      exec python -m pytest -x -q -m "not slow" \
+    lint)      run_lint ;;
+    fast)      run_lint
+               exec python -m pytest -x -q -m "not slow" \
                     tests/backend_conformance.py tests ;;
     durations) exec python -m pytest -q -m "not slow" --durations=15 \
                     tests/backend_conformance.py tests ;;
     full)      exec python -m pytest -x -q ;;
-    *)         echo "unknown lane: $LANE (want: fast|durations|full)" >&2
+    *)         echo "unknown lane: $LANE (want: fast|durations|full|lint)" >&2
                exit 2 ;;
 esac

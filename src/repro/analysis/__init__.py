@@ -1,0 +1,44 @@
+"""Protocol linter: AST-based invariant checks for the queue tier.
+
+The broker/queue subsystem (``runtime/mq.py``, ``runtime/batchq.py``,
+``core/hostbridge.py``) is held together by invariants no type checker
+sees, and a queue-protocol regression is exactly the class of bug that
+ships green and corrupts state under a polling external fleet. This
+package enforces them statically — pure stdlib ``ast``, no third-party
+dependency, wired into CI as ``scripts/ci.sh lint`` and into tier-1 as a
+zero-findings test:
+
+* ``atomic-write`` (:mod:`.atomic`) — every file write in the protocol
+  modules must go through ``runtime/fsatomic.py`` (tmp sibling +
+  rename); raw write-mode ``open`` / ``json.dump`` / ``pickle.dump`` /
+  ``np.save*`` are findings.
+* ``worker-purity`` (:mod:`.imports`) — the module-scope import closure
+  of the worker entrypoints (``repro.runtime.mq --worker``,
+  ``repro.runtime.batchq --worker``) must stay numpy-only: jax or other
+  heavy deps reachable at import time are findings (the invariant the
+  PEP 562 lazy ``__init__`` exports exist to protect).
+* ``trace-purity`` (:mod:`.trace`) — functions reachable from jitted
+  call sites must not touch ``time.*`` / ``random.*`` / file IO /
+  ``subprocess`` except through ``jax.pure_callback`` / ``io_callback``.
+* ``concurrency`` (:mod:`.concurrency`) — ``.acquire()`` outside
+  ``with``, blocking calls while holding a lock, and bare ``except:``
+  inside retry/claim loops.
+
+Findings print as ``file:line rule-id message``. Deliberate exceptions
+carry an inline escape hatch ON the flagged line (or the line above)::
+
+    # lint: allow[atomic-write] lease is mtime-only liveness
+
+The reason text is REQUIRED — an allow without one does not suppress.
+
+CLI: ``python -m repro.analysis src/`` exits 0 iff no findings. Point it
+at the directory CONTAINING the top-level package (``src/``), so module
+names resolve as ``repro.runtime.mq``; checker configs match module
+names by dotted suffix, so partial roots still work.
+"""
+from repro.analysis.core import (Finding, SourceFile, load_universe,
+                                 run_analysis)
+from repro.analysis.imports import ImportGraph, build_import_graph
+
+__all__ = ["Finding", "SourceFile", "ImportGraph", "build_import_graph",
+           "load_universe", "run_analysis"]

@@ -1,0 +1,28 @@
+"""CLI: ``python -m repro.analysis [paths...]``.
+
+Runs every protocol checker over the given files/directories (default
+``src``) and prints findings as ``file:line rule-id message``, one per
+line. Exit status 0 iff nothing was found — CI's lint lane and the
+tier-1 zero-findings test both key off this.
+"""
+from __future__ import annotations
+
+import sys
+
+from repro.analysis.core import run_analysis
+
+
+def main(argv=None) -> int:
+    argv = list(sys.argv[1:] if argv is None else argv)
+    paths = argv or ["src"]
+    findings = run_analysis(paths)
+    for finding in findings:
+        print(finding)
+    if findings:
+        print(f"{len(findings)} finding(s)", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

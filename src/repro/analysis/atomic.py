@@ -1,0 +1,90 @@
+"""atomic-write: protocol modules publish files only via fsatomic.
+
+Every file the queue protocol's pollers look for must appear atomically
+(tmp sibling + rename, see ``runtime/fsatomic.py``). Inside the protocol
+modules this checker flags any raw write primitive — write-mode
+``open``/``os.fdopen``, ``json.dump``, ``pickle.dump``, ``np.save`` /
+``np.savez*`` — as a finding; the fix is to route the write through an
+``fsatomic`` helper, or to justify it inline with
+``# lint: allow[atomic-write] <reason>`` (e.g. the mtime-only lease
+heartbeat in ``mq.py``, whose pollers never read the body).
+
+The rule deliberately flags EVERY raw write in these modules rather than
+trying to decide which target paths are polled: in a message-broker
+protocol essentially every published path is somebody's poll target, and
+a path-based whitelist is exactly the kind of guess that rots.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.core import (Finding, build_aliases, canonical_call,
+                                 module_matches)
+
+RULE = "atomic-write"
+
+#: modules bound by the discipline, matched by dotted suffix.
+#: fsatomic itself is included — its single raw ``open`` carries the
+#: allow comment, so a second one sneaking in still gets flagged.
+PROTOCOL_MODULES = (
+    "repro.runtime.mq",
+    "repro.runtime.batchq",
+    "repro.core.hostbridge",
+    "repro.runtime.fsatomic",
+)
+
+#: canonical call paths that publish bytes to a caller-named file
+_WRITER_CALLS = {
+    "json.dump": "json.dump",
+    "pickle.dump": "pickle.dump",
+    "numpy.save": "np.save",
+    "numpy.savez": "np.savez",
+    "numpy.savez_compressed": "np.savez_compressed",
+}
+
+_WRITE_MODE_CHARS = set("wax+")
+
+
+def _write_mode(call: ast.Call, mode_pos: int) -> str:
+    """The string-literal file mode of an ``open``-style call if it is a
+    write mode, else ``""``. ``mode_pos`` is the positional index of the
+    mode argument (1 for ``open``, same for ``os.fdopen``)."""
+    mode_node = None
+    if len(call.args) > mode_pos:
+        mode_node = call.args[mode_pos]
+    for kw in call.keywords:
+        if kw.arg == "mode":
+            mode_node = kw.value
+    if isinstance(mode_node, ast.Constant) and isinstance(mode_node.value, str):
+        if _WRITE_MODE_CHARS & set(mode_node.value):
+            return mode_node.value
+    return ""
+
+
+def check_atomic_writes(universe):
+    findings = []
+    for sf in universe:
+        if not module_matches(sf.module, PROTOCOL_MODULES):
+            continue
+        aliases = build_aliases(sf.tree)
+        for node in ast.walk(sf.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            target = canonical_call(node, aliases)
+            if target in ("open", "os.fdopen"):
+                mode = _write_mode(node, 1)
+                if mode:
+                    findings.append(Finding(
+                        sf.path, node.lineno, RULE,
+                        f"raw open(..., {mode!r}) in protocol module "
+                        f"{sf.module}; publish via repro.runtime.fsatomic "
+                        f"(tmp sibling + rename) so pollers never see a "
+                        f"torn file"))
+            elif target in _WRITER_CALLS:
+                findings.append(Finding(
+                    sf.path, node.lineno, RULE,
+                    f"raw {_WRITER_CALLS[target]}(...) in protocol module "
+                    f"{sf.module}; publish via repro.runtime.fsatomic "
+                    f"(tmp sibling + rename) so pollers never see a "
+                    f"torn file"))
+    return findings

@@ -1,0 +1,123 @@
+"""concurrency: lock discipline and exception hygiene in the runtime.
+
+Three shapes of latent deadlock/livelock this repo's queue tier is
+structurally prone to:
+
+* ``lock-acquire`` — a bare ``.acquire()`` call. Outside ``with`` the
+  release path is hand-rolled and one early return away from a
+  deadlock; use ``with lock:`` (or justify with an allow).
+* ``lock-blocking-call`` — a blocking call (``time.sleep``,
+  ``subprocess.*``, thread/process ``.join``, ``.wait``) while holding
+  a lock (inside a ``with <something lock-ish>:`` body). Workers and
+  the autoscaler poll under contention; sleeping while holding the
+  claim lock stalls the whole fleet. ``cond.wait()`` on the condition
+  that IS the with-context is exempt — Condition.wait releases the
+  lock while blocked (the shutdown pattern used across the runtime).
+* ``bare-except`` — ``except:`` inside a ``for``/``while`` body. The
+  retry/claim loops are exactly where a bare except eats
+  ``KeyboardInterrupt``/``SystemExit`` and turns a dead worker into a
+  spinning one; catch ``Exception`` (or narrower).
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.core import Finding, build_aliases, canonical_call
+
+RULE_ACQUIRE = "lock-acquire"
+RULE_BLOCKING = "lock-blocking-call"
+RULE_BARE_EXCEPT = "bare-except"
+
+_LOCKISH_TOKENS = ("lock", "cond", "mutex", "sem")
+
+_BLOCKING_CANONICAL = frozenset({
+    "time.sleep",
+    "subprocess.run", "subprocess.call", "subprocess.check_call",
+    "subprocess.check_output", "subprocess.Popen",
+})
+
+_BLOCKING_METHODS = ("join", "wait", "wait_for")
+
+
+def _src(sf, node) -> str:
+    return ast.get_source_segment(sf.text, node) or ""
+
+
+def _lockish_items(sf, node: ast.With):
+    """With-items whose context expression reads lock-ish."""
+    items = []
+    for item in node.items:
+        src = _src(sf, item.context_expr).lower()
+        if any(tok in src for tok in _LOCKISH_TOKENS):
+            items.append(item)
+    return items
+
+
+def _check_lock_body(sf, aliases, with_node, lock_items, findings) -> None:
+    lock_srcs = {_src(sf, item.context_expr) for item in lock_items}
+    for stmt in with_node.body:
+        for node in ast.walk(stmt):
+            if not isinstance(node, ast.Call):
+                continue
+            target = canonical_call(node, aliases)
+            if target in _BLOCKING_CANONICAL:
+                findings.append(Finding(
+                    sf.path, node.lineno, RULE_BLOCKING,
+                    f"{target}(...) while holding "
+                    f"{sorted(lock_srcs)[0]!r}; blocking under a lock "
+                    f"stalls every other claimant — release first"))
+            elif (isinstance(node.func, ast.Attribute)
+                    and node.func.attr in _BLOCKING_METHODS):
+                receiver = node.func.value
+                # str-literal .join is string concat, not thread join
+                if isinstance(receiver, ast.Constant):
+                    continue
+                # cond.wait()/wait_for() on the held condition is the
+                # sanctioned pattern: Condition.wait releases the lock
+                if (node.func.attr in ("wait", "wait_for")
+                        and _src(sf, receiver) in lock_srcs):
+                    continue
+                findings.append(Finding(
+                    sf.path, node.lineno, RULE_BLOCKING,
+                    f".{node.func.attr}(...) while holding "
+                    f"{sorted(lock_srcs)[0]!r}; blocking under a lock "
+                    f"stalls every other claimant — release first"))
+
+
+def check_concurrency(universe):
+    findings: list = []
+    for sf in universe:
+        aliases = build_aliases(sf.tree)
+        loop_depth = 0
+
+        def visit(node):
+            nonlocal loop_depth
+            if (isinstance(node, ast.Call)
+                    and isinstance(node.func, ast.Attribute)
+                    and node.func.attr == "acquire"):
+                findings.append(Finding(
+                    sf.path, node.lineno, RULE_ACQUIRE,
+                    f"bare {_src(sf, node.func)}() — acquire locks via "
+                    f"'with' so every exit path releases"))
+            if isinstance(node, ast.With):
+                lock_items = _lockish_items(sf, node)
+                if lock_items:
+                    _check_lock_body(sf, aliases, node, lock_items,
+                                     findings)
+            if isinstance(node, ast.ExceptHandler) and node.type is None:
+                if loop_depth > 0:
+                    findings.append(Finding(
+                        sf.path, node.lineno, RULE_BARE_EXCEPT,
+                        "bare 'except:' in a loop swallows "
+                        "KeyboardInterrupt/SystemExit — a dead worker "
+                        "keeps spinning; catch Exception instead"))
+            entered_loop = isinstance(node, (ast.For, ast.While))
+            if entered_loop:
+                loop_depth += 1
+            for child in ast.iter_child_nodes(node):
+                visit(child)
+            if entered_loop:
+                loop_depth -= 1
+
+        visit(sf.tree)
+    return findings

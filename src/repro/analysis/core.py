@@ -1,0 +1,221 @@
+"""Shared plumbing for the protocol linter: findings, suppression, runner.
+
+A checker is a callable ``checker(universe) -> iterable[Finding]`` where
+``universe`` is the full list of :class:`SourceFile` objects under
+analysis (checkers that need cross-module context — the import graph,
+the jit call graph — see everything; per-file checkers just iterate).
+The runner applies ``# lint: allow[rule] <reason>`` suppression AFTER
+the checkers run, so checkers stay oblivious to the escape hatch.
+"""
+from __future__ import annotations
+
+import ast
+import os
+import re
+from dataclasses import dataclass, field
+
+#: inline escape hatch: ``# lint: allow[rule-id,other-rule] reason text``.
+#: The reason is mandatory — a bare allow with no justification does not
+#: suppress, which keeps every deliberate exception self-documenting.
+_ALLOW_RE = re.compile(
+    r"#\s*lint:\s*allow\[([A-Za-z0-9_,\- ]+)\]\s*(\S.*)?$")
+
+
+@dataclass(frozen=True)
+class Finding:
+    """One invariant violation, printable as ``file:line rule-id message``."""
+    path: str
+    line: int
+    rule: str
+    message: str
+
+    def __str__(self) -> str:
+        return f"{self.path}:{self.line} {self.rule} {self.message}"
+
+
+@dataclass
+class SourceFile:
+    """A parsed module: source text, AST, and its dotted module name."""
+    path: str
+    module: str
+    text: str
+    tree: ast.Module
+    lines: list = field(default_factory=list)
+
+    def __post_init__(self) -> None:
+        if not self.lines:
+            self.lines = self.text.splitlines()
+
+    def allowed_rules(self, line: int) -> set:
+        """Rules suppressed at ``line`` (1-based): an allow comment with
+        a non-empty reason trailing the flagged line itself, or anywhere
+        in the contiguous comment-only block immediately above it (so a
+        reason can span several comment lines)."""
+        candidates = []
+        if 1 <= line <= len(self.lines):
+            candidates.append(self.lines[line - 1])
+        lineno = line - 1
+        while 1 <= lineno <= len(self.lines) and \
+                self.lines[lineno - 1].lstrip().startswith("#"):
+            candidates.append(self.lines[lineno - 1])
+            lineno -= 1
+        rules: set = set()
+        for text in candidates:
+            m = _ALLOW_RE.search(text)
+            if m and m.group(2):
+                rules.update(r.strip() for r in m.group(1).split(","))
+        rules.discard("")
+        return rules
+
+
+def module_name(py_path: str, root: str) -> str:
+    """Dotted module name of ``py_path`` relative to search root ``root``.
+
+    The CLI is pointed at the directory CONTAINING the top package
+    (``python -m repro.analysis src/``), so ``src/repro/runtime/mq.py``
+    resolves to ``repro.runtime.mq`` — matching how the worker
+    entrypoints are spawned (``python -m repro.runtime.mq``). ``repro``
+    itself is a namespace package (no ``__init__.py``); nothing here
+    assumes one exists.
+    """
+    rel = os.path.relpath(os.path.abspath(py_path), os.path.abspath(root))
+    parts = rel.split(os.sep)
+    if parts[-1] == "__init__.py":
+        parts = parts[:-1]
+    else:
+        parts[-1] = parts[-1][:-len(".py")]
+    return ".".join(p for p in parts if p not in ("", os.curdir))
+
+
+def load_source(py_path: str, root: str) -> SourceFile:
+    with open(py_path, encoding="utf-8") as f:
+        text = f.read()
+    try:
+        tree = ast.parse(text, filename=py_path)
+        error = None
+    except SyntaxError as exc:
+        # surface as a finding rather than a linter crash; checkers see
+        # an empty module
+        tree = ast.Module(body=[], type_ignores=[])
+        error = Finding(py_path, exc.lineno or 1, "parse-error",
+                        f"cannot parse: {exc.msg}")
+    sf = SourceFile(path=py_path, module=module_name(py_path, root),
+                    text=text, tree=tree)
+    sf.parse_error = error
+    return sf
+
+
+def load_universe(paths) -> list:
+    """Load every ``*.py`` under ``paths`` (files or directories).
+
+    For a directory argument, module names are rooted at that directory;
+    for a bare file argument, at its parent directory.
+    """
+    universe: list = []
+    seen: set = set()
+    for top in paths:
+        top = os.path.abspath(top)
+        if os.path.isfile(top):
+            found = [(top, os.path.dirname(top))]
+        else:
+            found = []
+            for dirpath, dirnames, filenames in os.walk(top):
+                dirnames[:] = sorted(
+                    d for d in dirnames
+                    if not d.startswith(".") and d != "__pycache__")
+                found.extend((os.path.join(dirpath, name), top)
+                             for name in sorted(filenames)
+                             if name.endswith(".py"))
+        for py_path, root in found:
+            if py_path not in seen:
+                seen.add(py_path)
+                universe.append(load_source(py_path, root))
+    return universe
+
+
+def module_matches(module: str, suffixes) -> bool:
+    """True if ``module`` equals or dot-boundary-ends-with any suffix.
+
+    Suffix matching (``runtime.mq`` matches ``repro.runtime.mq``) keeps
+    checker configs valid whichever directory the CLI was rooted at.
+    """
+    for suffix in suffixes:
+        if module == suffix or module.endswith("." + suffix):
+            return True
+    return False
+
+
+def attr_chain(node) -> str:
+    """Dotted source text of a Name/Attribute chain (``np.savez`` ->
+    ``"np.savez"``); empty string for anything else (calls, subscripts)."""
+    parts: list = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return ""
+
+
+def build_aliases(tree: ast.Module) -> dict:
+    """Map locally bound names to the canonical dotted path they denote,
+    from the module's import statements: ``import numpy as np`` ->
+    ``{"np": "numpy"}``, ``from json import dump as jd`` ->
+    ``{"jd": "json.dump"}``. Relative ``from . import x`` is skipped —
+    the atomic/trace denylists only name absolute stdlib/numpy paths.
+    """
+    aliases: dict = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                if a.asname:
+                    aliases[a.asname] = a.name
+                else:
+                    aliases[a.name.split(".")[0]] = a.name.split(".")[0]
+        elif isinstance(node, ast.ImportFrom) and node.level == 0 and node.module:
+            for a in node.names:
+                if a.name != "*":
+                    aliases[a.asname or a.name] = f"{node.module}.{a.name}"
+    return aliases
+
+
+def canonical_call(node: ast.Call, aliases: dict) -> str:
+    """Canonical dotted path of a call target, with the leading segment
+    resolved through import aliases (``np.savez(...)`` -> ``numpy.savez``).
+    Returns ``""`` when the target is not a plain Name/Attribute chain."""
+    chain = attr_chain(node.func)
+    if not chain:
+        return ""
+    head, _, rest = chain.partition(".")
+    head = aliases.get(head, head)
+    return f"{head}.{rest}" if rest else head
+
+
+def default_checkers() -> list:
+    # local imports: the checker modules import this one
+    from repro.analysis.atomic import check_atomic_writes
+    from repro.analysis.concurrency import check_concurrency
+    from repro.analysis.imports import check_worker_purity
+    from repro.analysis.trace import check_trace_purity
+    return [check_atomic_writes, check_worker_purity,
+            check_trace_purity, check_concurrency]
+
+
+def run_analysis(paths, checkers=None) -> list:
+    """Run ``checkers`` over ``paths``; return unsuppressed findings
+    sorted by (path, line, rule)."""
+    universe = load_universe(paths)
+    if checkers is None:
+        checkers = default_checkers()
+    by_path = {sf.path: sf for sf in universe}
+    findings: list = [sf.parse_error for sf in universe
+                      if getattr(sf, "parse_error", None) is not None]
+    for checker in checkers:
+        for finding in checker(universe):
+            sf = by_path.get(finding.path)
+            if sf is not None and finding.rule in sf.allowed_rules(finding.line):
+                continue
+            findings.append(finding)
+    findings.sort(key=lambda f: (f.path, f.line, f.rule))
+    return findings

@@ -1,0 +1,217 @@
+"""worker-purity: the worker import closure must stay numpy-only.
+
+Persistent queue workers (``python -m repro.runtime.mq --worker``,
+``python -m repro.runtime.batchq --worker``) owe their ~0.8 s cold start
+to importing nothing heavier than numpy; jax alone multiplies that.
+The ``runtime/__init__.py`` / ``core/__init__.py`` PEP 562 lazy exports
+exist purely to protect this, and nothing else stops a future
+module-scope ``import jax`` from sneaking into the closure.
+
+This checker builds the MODULE-SCOPE import graph over the analyzed
+tree and walks it from the worker entrypoints; any heavy dependency
+importable at module scope from that closure is a finding, reported at
+the offending import with the chain that reaches it.
+
+Module-scope means: top-level statements plus module-level ``if`` /
+``try`` / ``with`` / loop / class bodies — anything Python executes at
+import time. Imports inside function bodies and under
+``if TYPE_CHECKING:`` are excluded (they do not run at import).
+``importlib.import_module("string.literal")`` at module scope counts.
+Importing ``a.b.c`` also executes the ``a`` and ``a.b`` package
+``__init__`` modules, and importing any module executes its own parent
+packages — the graph carries those implicit edges, which is exactly how
+an eager re-export in an ``__init__.py`` would get caught.
+"""
+from __future__ import annotations
+
+import ast
+import os
+from dataclasses import dataclass, field
+
+from repro.analysis.core import Finding, module_matches
+
+RULE = "worker-purity"
+
+WORKER_ENTRYPOINTS = ("repro.runtime.mq", "repro.runtime.batchq")
+
+#: top-level import names that disqualify the worker startup path
+HEAVY_DEPS = frozenset(
+    {"jax", "jaxlib", "flax", "optax", "torch", "tensorflow"})
+
+
+@dataclass
+class ImportGraph:
+    """Module-scope import graph restricted to the analyzed universe.
+
+    ``internal[m]`` maps each dependency module (present in the universe)
+    to the line of the first import that pulls it in; ``external[m]`` is
+    the list of ``(dotted_name, line)`` imports that resolve outside the
+    universe (stdlib, third-party).
+    """
+    modules: set = field(default_factory=set)
+    internal: dict = field(default_factory=dict)
+    external: dict = field(default_factory=dict)
+
+    def _add_internal(self, src: str, dep: str, line: int) -> None:
+        deps = self.internal.setdefault(src, {})
+        if dep != src and dep not in deps:
+            deps[dep] = line
+
+    def closure(self, roots) -> dict:
+        """BFS from ``roots``: reachable module -> (parent, line) chain
+        pointers (roots map to ``(None, 0)``)."""
+        parents: dict = {m: (None, 0) for m in roots if m in self.modules}
+        queue = list(parents)
+        while queue:
+            mod = queue.pop(0)
+            for dep, line in sorted(self.internal.get(mod, {}).items()):
+                if dep not in parents:
+                    parents[dep] = (mod, line)
+                    queue.append(dep)
+        return parents
+
+    def chain(self, parents: dict, mod: str) -> list:
+        path = [mod]
+        while parents[mod][0] is not None:
+            mod = parents[mod][0]
+            path.append(mod)
+        return list(reversed(path))
+
+
+def _is_type_checking_test(test: ast.expr) -> bool:
+    return (isinstance(test, ast.Name) and test.id == "TYPE_CHECKING") or (
+        isinstance(test, ast.Attribute) and test.attr == "TYPE_CHECKING")
+
+
+def _module_scope_imports(tree: ast.Module):
+    """Yield (ast.Import | ast.ImportFrom | literal import_module Call)
+    nodes executed at import time."""
+    stack = list(tree.body)
+    while stack:
+        node = stack.pop(0)
+        if isinstance(node, (ast.Import, ast.ImportFrom)):
+            yield node
+        elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue  # runs at call time, not import time
+        elif isinstance(node, ast.If):
+            if not _is_type_checking_test(node.test):
+                stack.extend(node.body)
+            stack.extend(node.orelse)
+        elif isinstance(node, (ast.For, ast.While)):
+            stack.extend(node.body)
+            stack.extend(node.orelse)
+        elif isinstance(node, ast.Try):
+            stack.extend(node.body)
+            for handler in node.handlers:
+                stack.extend(handler.body)
+            stack.extend(node.orelse)
+            stack.extend(node.finalbody)
+        elif isinstance(node, (ast.With, ast.AsyncWith)):
+            stack.extend(node.body)
+        elif isinstance(node, ast.ClassDef):
+            stack.extend(node.body)  # class bodies execute at import
+        else:
+            # expression statements may hide importlib.import_module("x")
+            for sub in ast.walk(node):
+                if (isinstance(sub, ast.Call)
+                        and isinstance(sub.func, ast.Attribute)
+                        and sub.func.attr == "import_module"
+                        and sub.args
+                        and isinstance(sub.args[0], ast.Constant)
+                        and isinstance(sub.args[0].value, str)):
+                    yield sub
+
+
+def _resolve_relative(module: str, is_package: bool, level: int,
+                      target: str) -> str:
+    parts = module.split(".")
+    if not is_package:
+        parts = parts[:-1]
+    parts = parts[:len(parts) - (level - 1)] if level > 1 else parts
+    if target:
+        parts.extend(target.split("."))
+    return ".".join(parts)
+
+
+def _record(graph: ImportGraph, src: str, name: str, line: int) -> None:
+    """Record a dependency on dotted ``name``: internal edges for every
+    universe prefix (ancestor ``__init__`` modules execute too), else an
+    external import."""
+    parts = name.split(".")
+    prefixes = [".".join(parts[:i + 1]) for i in range(len(parts))]
+    hit = False
+    for prefix in prefixes:
+        if prefix in graph.modules:
+            graph._add_internal(src, prefix, line)
+            hit = True
+    if not hit:
+        graph.external.setdefault(src, []).append((name, line))
+
+
+def build_import_graph(universe) -> ImportGraph:
+    graph = ImportGraph()
+    packages: set = set()
+    for sf in universe:
+        graph.modules.add(sf.module)
+        if os.path.basename(sf.path) == "__init__.py":
+            packages.add(sf.module)
+    for sf in universe:
+        graph.internal.setdefault(sf.module, {})
+        graph.external.setdefault(sf.module, [])
+        # importing a module executes its own ancestor packages
+        parts = sf.module.split(".")
+        for i in range(1, len(parts)):
+            ancestor = ".".join(parts[:i])
+            if ancestor in graph.modules:
+                graph._add_internal(sf.module, ancestor, 1)
+        for node in _module_scope_imports(sf.tree):
+            if isinstance(node, ast.Import):
+                for a in node.names:
+                    _record(graph, sf.module, a.name, node.lineno)
+            elif isinstance(node, ast.ImportFrom):
+                if node.level:
+                    base = _resolve_relative(
+                        sf.module, sf.module in packages, node.level,
+                        node.module or "")
+                else:
+                    base = node.module or ""
+                if base:
+                    _record(graph, sf.module, base, node.lineno)
+                # ``from X import Y`` may bind submodule X.Y
+                for a in node.names:
+                    if a.name != "*" and base:
+                        candidate = f"{base}.{a.name}"
+                        if candidate in graph.modules:
+                            graph._add_internal(
+                                sf.module, candidate, node.lineno)
+            else:  # importlib.import_module("literal")
+                _record(graph, sf.module, node.args[0].value, node.lineno)
+    return graph
+
+
+def check_worker_purity(universe, entrypoints=WORKER_ENTRYPOINTS,
+                        heavy=HEAVY_DEPS):
+    graph = build_import_graph(universe)
+    by_module = {sf.module: sf for sf in universe}
+    roots = [m for m in sorted(graph.modules)
+             if module_matches(m, entrypoints)]
+    parents = graph.closure(roots)
+    findings = []
+    seen: set = set()
+    for mod in sorted(parents):
+        for name, line in graph.external.get(mod, []):
+            top = name.split(".")[0]
+            if top not in heavy:
+                continue
+            sf = by_module[mod]
+            if (sf.path, line, name) in seen:
+                continue
+            seen.add((sf.path, line, name))
+            chain = " -> ".join(graph.chain(parents, mod) + [name])
+            findings.append(Finding(
+                sf.path, line, RULE,
+                f"heavy dependency {name!r} importable at module scope "
+                f"from worker entrypoint: {chain} (workers must stay "
+                f"numpy-only; defer the import into the function that "
+                f"needs it)"))
+    return findings

@@ -1,0 +1,240 @@
+"""trace-purity: jit-reachable code routes side effects via callbacks.
+
+Anything reached from a jitted call site executes under ``jax.jit``
+tracing: side effects run once at trace time and then silently never
+again, which is how a ``time.time()`` timestamp or ``random.random()``
+tie-breaker inside a kernel becomes a constant baked into the compiled
+executable. The only sanctioned bridge to the host is
+``jax.pure_callback`` / ``io_callback`` / ``jax.debug.callback`` —
+exactly what ``core/hostbridge.py`` exists for.
+
+Roots of the traversal:
+
+* functions decorated ``@jax.jit`` or
+  ``@functools.partial(jax.jit, ...)`` (the kernels);
+* arguments of ``jax.jit(...)`` / ``jax.pmap(...)`` call sites — a bare
+  name resolves to the module function, a lambda is traversed in place,
+  and a call like ``jax.jit(make_epoch_step(...))`` traverses the
+  FACTORY including its nested defs (the closure it returns is the
+  traced code);
+* :data:`EXTRA_ROOTS` — functions jitted only transitively (called from
+  inside jitted steps) that static root detection cannot see.
+
+From each root the checker walks the call graph: callee names resolve
+through import aliases to module-level functions, and ``self.m()`` to
+methods of the enclosing class; nested defs and lambdas of a reached
+function are traversed too. The first argument of a callback-bridge
+call is deliberately NOT traversed — that function body executes on the
+host, where side effects are the point.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.core import (Finding, attr_chain, build_aliases,
+                                 canonical_call, module_matches)
+
+RULE = "trace-purity"
+
+#: (module suffix, "func" or "Class.method") jitted only transitively
+EXTRA_ROOTS = (
+    ("repro.core.broker", "Broker.evaluate"),
+    ("repro.core.broker", "CostEMA.__call__"),
+    ("repro.core.hostbridge", "PureCallbackBridge.__call__"),
+    ("repro.core.hostbridge", "PureCallbackBridge.eval_with_perm"),
+)
+
+#: canonical call paths whose first argument runs host-side, not traced
+_CALLBACK_BRIDGES = {
+    "jax.pure_callback", "jax.experimental.io_callback", "jax.io_callback",
+    "jax.debug.callback", "io_callback", "pure_callback",
+}
+
+_JIT_WRAPPERS = {"jax.jit", "jax.pmap"}
+
+#: side-effecting canonical paths banned under trace (module prefixes
+#: end with "."; bare entries match exactly)
+_DENY_PREFIXES = (
+    "time.", "random.", "numpy.random.", "subprocess.", "shutil.",
+)
+_DENY_EXACT = frozenset({
+    "open", "input",
+    "os.remove", "os.rename", "os.replace", "os.unlink", "os.makedirs",
+    "os.mkdir", "os.rmdir", "os.utime", "os.open", "os.fdopen",
+    "os.listdir", "os.scandir", "os.stat", "os.system", "os.popen",
+    "numpy.save", "numpy.savez", "numpy.savez_compressed", "numpy.load",
+    "pickle.dump", "pickle.load", "pickle.dumps", "pickle.loads",
+    "json.dump", "json.load",
+})
+
+
+def _banned(target: str) -> bool:
+    return target in _DENY_EXACT or any(
+        target.startswith(p) for p in _DENY_PREFIXES)
+
+
+class _ModuleIndex:
+    """Per-module lookup: top-level functions, class methods, aliases."""
+
+    def __init__(self, sf):
+        self.sf = sf
+        self.aliases = build_aliases(sf.tree)
+        self.functions: dict = {}
+        self.classes: dict = {}
+        for node in sf.tree.body:
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                self.functions[node.name] = node
+            elif isinstance(node, ast.ClassDef):
+                methods = {
+                    sub.name: sub for sub in node.body
+                    if isinstance(sub, (ast.FunctionDef, ast.AsyncFunctionDef))}
+                self.classes[node.name] = methods
+
+
+def _is_jit_decorator(dec: ast.expr, aliases: dict) -> bool:
+    if attr_chain(dec) and canonical_call(ast.Call(func=dec, args=[],
+                                                   keywords=[]), aliases) in _JIT_WRAPPERS:
+        return True
+    if isinstance(dec, ast.Call):
+        target = canonical_call(dec, aliases)
+        if target in _JIT_WRAPPERS:
+            return True
+        if target in ("functools.partial", "partial") and dec.args:
+            inner = dec.args[0]
+            inner_chain = attr_chain(inner)
+            if inner_chain:
+                head, _, rest = inner_chain.partition(".")
+                head = aliases.get(head, head)
+                full = f"{head}.{rest}" if rest else head
+                return full in _JIT_WRAPPERS
+    return False
+
+
+class _TraceWalker:
+    """Walk jit-reachable function bodies, resolving calls across the
+    universe, and collect banned side-effect calls."""
+
+    def __init__(self, universe):
+        self.indexes = {sf.module: _ModuleIndex(sf) for sf in universe}
+        self.visited: set = set()
+        self.findings: list = []
+
+    def resolve(self, idx: _ModuleIndex, call: ast.Call):
+        """Resolve a call target to (module_index, func_node, class_name)
+        when it lands on a function in the universe, else None."""
+        func = call.func
+        if isinstance(func, ast.Name):
+            node = idx.functions.get(func.id)
+            if node is not None:
+                return idx, node, None
+        target = canonical_call(call, idx.aliases)
+        if target:
+            mod, _, name = target.rpartition(".")
+            other = self.indexes.get(mod)
+            if other is not None:
+                node = other.functions.get(name)
+                if node is not None:
+                    return other, node, None
+        return None
+
+    def walk_function(self, idx: _ModuleIndex, node, cls: str = None) -> None:
+        key = (idx.sf.module, cls, getattr(node, "name", None),
+               node.lineno)
+        if key in self.visited:
+            return
+        self.visited.add(key)
+        body = node.body if isinstance(node.body, list) else [node.body]
+        for stmt in body:
+            self._walk_expr(idx, stmt, cls)
+
+    def _walk_expr(self, idx: _ModuleIndex, node, cls) -> None:
+        if isinstance(node, ast.Call):
+            self._handle_call(idx, node, cls)
+            return
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.Lambda)):
+            # nested defs/lambdas of a traced function are traced too
+            self.walk_function(idx, node, cls)
+            return
+        for child in ast.iter_child_nodes(node):
+            self._walk_expr(idx, child, cls)
+
+    def _handle_call(self, idx: _ModuleIndex, call: ast.Call, cls) -> None:
+        target = canonical_call(call, idx.aliases)
+        args = list(call.args)
+        if target in _CALLBACK_BRIDGES:
+            # first arg executes host-side: cut it out of the traversal
+            args = args[1:]
+        elif target and _banned(target):
+            self.findings.append(Finding(
+                idx.sf.path, call.lineno, RULE,
+                f"{target}(...) reached from a jitted call site; side "
+                f"effects under trace run once at trace time — route "
+                f"through jax.pure_callback/io_callback"))
+        else:
+            resolved = None
+            if (isinstance(call.func, ast.Attribute)
+                    and isinstance(call.func.value, ast.Name)
+                    and call.func.value.id == "self" and cls):
+                method = idx.classes.get(cls, {}).get(call.func.attr)
+                if method is not None:
+                    resolved = (idx, method, cls)
+            if resolved is None:
+                resolved = self.resolve(idx, call)
+            if resolved is not None:
+                r_idx, r_node, r_cls = resolved
+                self.walk_function(r_idx, r_node, r_cls)
+        for sub in args + [kw.value for kw in call.keywords]:
+            self._walk_expr(idx, sub, cls)
+        if isinstance(call.func, (ast.Call, ast.Lambda)):
+            self._walk_expr(idx, call.func, cls)
+        elif isinstance(call.func, ast.Attribute):
+            # the receiver expression may itself contain calls
+            self._walk_expr(idx, call.func.value, cls)
+
+
+def _iter_roots(walker: _TraceWalker):
+    """Yield (index, node, cls) roots: jit-decorated defs, args of
+    jit()/pmap() call sites, and EXTRA_ROOTS."""
+    for idx in walker.indexes.values():
+        aliases = idx.aliases
+        for node in ast.walk(idx.sf.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                if any(_is_jit_decorator(d, aliases)
+                       for d in node.decorator_list):
+                    yield idx, node, None
+            elif (isinstance(node, ast.Call)
+                    and canonical_call(node, aliases) in _JIT_WRAPPERS
+                    and node.args):
+                arg = node.args[0]
+                if isinstance(arg, ast.Lambda):
+                    yield idx, arg, None
+                elif isinstance(arg, ast.Name):
+                    fn = idx.functions.get(arg.id)
+                    if fn is not None:
+                        yield idx, fn, None
+                elif isinstance(arg, ast.Call):
+                    # jax.jit(make_step(...)): the factory's nested defs
+                    # are the traced code — traverse the factory
+                    resolved = walker.resolve(idx, arg)
+                    if resolved is not None:
+                        yield resolved
+        for suffix, qualname in EXTRA_ROOTS:
+            if not module_matches(idx.sf.module, (suffix,)):
+                continue
+            cls, _, meth = qualname.rpartition(".")
+            if cls:
+                fn = idx.classes.get(cls, {}).get(meth)
+                if fn is not None:
+                    yield idx, fn, cls
+            else:
+                fn = idx.functions.get(meth)
+                if fn is not None:
+                    yield idx, fn, None
+
+
+def check_trace_purity(universe):
+    walker = _TraceWalker(universe)
+    for idx, node, cls in _iter_roots(walker):
+        walker.walk_function(idx, node, cls)
+    return walker.findings

@@ -58,10 +58,26 @@ retry path already does; ``mq.MQWorkerFleet.grow`` relies on it to scale
 a persistent fleet up — one more ``sbatch --array`` / ``kubectl apply``
 round-trip that leaves the work items already running untouched).
 
-Import discipline: jax is imported lazily inside the backend methods so
-the worker entrypoint stays numpy-only — at 3,500-core scale the array
-tasks' interpreter startup is on the critical path, and a fitness function
-that needs jax pays for it only when it actually imports it.
+Enforced invariants (checked statically by ``python -m repro.analysis``,
+run as CI's lint lane and as a tier-1 zero-findings test):
+
+* **atomic-write** — everything this module publishes on a polled path
+  (spooled chunks, results, ``.fail`` markers, ``payload.json`` /
+  ``fn.pkl``, array manifests, k8s Job specs) goes through
+  ``repro.runtime.fsatomic`` (tmp sibling + fsync + ``os.replace``);
+  pollers treat ``*.tmp`` as invisible, so a writer crash publishes
+  nothing. A deliberate raw write must be justified inline:
+  ``# lint: allow[atomic-write] <reason>`` (trailing the line or in the
+  comment block above; the reason is mandatory).
+* **worker-purity** — ``python -m repro.runtime.batchq --worker`` is a
+  worker entrypoint: its module-scope import closure must stay
+  numpy-only. jax is imported lazily inside the backend methods — at
+  3,500-core scale the array tasks' interpreter startup is on the
+  critical path, and a fitness function that needs jax pays for it only
+  when it actually imports it.
+* **trace-purity** — the jit boundary crosses into this module only via
+  ``PureCallbackBridge``; everything below ``_host_eval`` is host-side
+  and free to do IO.
 
 Persistent-worker alternative: this backend is batch-synchronous — every
 ``evaluate`` pays scheduler submission and worker startup per chunk. The
@@ -101,6 +117,8 @@ import numpy as np
 
 from repro.core.hostbridge import (PureCallbackBridge, collect_chunk_results,
                                    plan_cost_chunks, scatter_chunk_results)
+from repro.runtime.fsatomic import (atomic_pickle, atomic_savez,
+                                    atomic_write_json, atomic_write_text)
 
 _PAYLOAD = "payload.json"
 _FN_PKL = "fn.pkl"
@@ -125,16 +143,6 @@ def result_path(chunk: str) -> str:
 
 def fail_path(chunk: str) -> str:
     return chunk[:-len(".npz")] + ".fail"
-
-
-def _atomic_savez(path: str, **arrays) -> None:
-    """Write-then-rename so a polling reader never sees a torn file."""
-    tmp = path + ".tmp"
-    with open(tmp, "wb") as f:
-        np.savez(f, **arrays)
-        f.flush()
-        os.fsync(f.fileno())
-    os.replace(tmp, path)
 
 
 def resolve_fn(job_dir: str) -> Callable:
@@ -168,20 +176,15 @@ def run_worker(chunk: str) -> int:
         t0 = time.perf_counter()
         fit = np.asarray(fn(genomes), np.float32).reshape(len(genomes), -1)
         duration = time.perf_counter() - t0
-        _atomic_savez(result_path(chunk), fitness=fit,
-                      duration=np.float64(duration))
+        atomic_savez(result_path(chunk), fitness=fit,
+                     duration=np.float64(duration))
         return 0
     except Exception:
         tb = traceback.format_exc()
         try:
-            # write-then-rename: the polling backend must never read a
-            # partial traceback (it raises ChunkFailure with this text)
-            tmp = fail_path(chunk) + ".tmp"
-            with open(tmp, "w") as f:
-                f.write(tb)
-                f.flush()
-                os.fsync(f.fileno())
-            os.replace(tmp, fail_path(chunk))
+            # the polling backend must never read a partial traceback (it
+            # raises ChunkFailure with this text)
+            atomic_write_text(fail_path(chunk), tb)
         except OSError:
             pass
         sys.stderr.write(tb)
@@ -341,11 +344,12 @@ class SlurmScheduler:
             seq = self._seq
             self._seq += 1
         manifest = os.path.join(job_dir, f"manifest_{seq:04d}.txt")
-        with open(manifest, "w") as f:
-            f.write("\n".join(chunk_paths) + "\n")
+        # atomic: array tasks on other nodes resolve their chunk from this
+        # manifest by line number — a torn read maps every task to the
+        # wrong (or a truncated) chunk path
+        atomic_write_text(manifest, "\n".join(chunk_paths) + "\n")
         script = os.path.join(job_dir, f"array_{seq:04d}.sh")
-        with open(script, "w") as f:
-            f.write(self._script(manifest, job_dir))
+        atomic_write_text(script, self._script(manifest, job_dir))
         cmd = [self.sbatch, "--parsable",
                f"--array=0-{len(chunk_paths) - 1}",
                *self.extra_sbatch_args, script]
@@ -548,13 +552,14 @@ class KubernetesScheduler:
         # RFC 1123 label: lowercase alphanumerics and '-'
         name = f"{self.job_prefix}-{self._token}-{seq:04d}".lower()
         chunk_manifest = os.path.join(job_dir, f"k8s_manifest_{seq:04d}.txt")
-        with open(chunk_manifest, "w") as f:
-            f.write("\n".join(chunk_paths) + "\n")
+        # atomic: worker pods sed this manifest by $JOB_COMPLETION_INDEX
+        # from the shared volume, racing the apply below
+        atomic_write_text(chunk_manifest, "\n".join(chunk_paths) + "\n")
         spec_path = os.path.join(job_dir, f"k8s_job_{seq:04d}.json")
-        with open(spec_path, "w") as f:
-            json.dump(self._job_manifest(name, chunk_manifest,
-                                         len(chunk_paths), job_dir),
-                      f, indent=2)
+        atomic_write_json(spec_path,
+                          self._job_manifest(name, chunk_manifest,
+                                             len(chunk_paths), job_dir),
+                          indent=2)
         out = self._run(["apply", "-f", spec_path, "-n", self.namespace])
         if out.returncode != 0:
             raise RuntimeError(
@@ -853,12 +858,14 @@ class SlurmArrayBackend(PureCallbackBridge):
             self.stats["jobs"] += 1
         job_dir = os.path.join(self.spool_dir, f"job_{seq:06d}")
         os.makedirs(job_dir)
-        with open(os.path.join(job_dir, _PAYLOAD), "w") as f:
-            json.dump({"num_objectives": self.num_objectives,
-                       "fn_spec": self.fn_spec}, f)
+        # atomic: workers (and external mq fleets via the legacy-payload
+        # fallback) poll these by name — the pickle lands before the
+        # payload that announces it
         if not self.fn_spec:
-            with open(os.path.join(job_dir, _FN_PKL), "wb") as f:
-                pickle.dump(self.fitness_fn, f)
+            atomic_pickle(os.path.join(job_dir, _FN_PKL), self.fitness_fn)
+        atomic_write_json(os.path.join(job_dir, _PAYLOAD),
+                          {"num_objectives": self.num_objectives,
+                           "fn_spec": self.fn_spec})
         return job_dir
 
     # -- host-side evaluation ------------------------------------------
@@ -898,7 +905,7 @@ class SlurmArrayBackend(PureCallbackBridge):
 
         def write_chunk(i, chunk, attempt):
             path = chunk_path(job_dir, i, attempt)
-            _atomic_savez(path, genomes=np.asarray(chunk, np.float32))
+            atomic_savez(path, genomes=np.asarray(chunk, np.float32))
             return path
 
         all_handles: List[str] = []

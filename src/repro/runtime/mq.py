@@ -85,6 +85,29 @@ Queue contract (lease / heartbeat / multi-tenant semantics)
   ``Scheduler`` protocol's incremental submit (more ``*.worker.json``
   tickets) or spawns more local workers.
 
+Enforced invariants (checked statically by ``python -m repro.analysis``,
+run as CI's lint lane and as a tier-1 zero-findings test):
+
+* **atomic-write** — every file this module publishes on a polled path
+  goes through ``repro.runtime.fsatomic`` (tmp sibling + fsync +
+  ``os.replace``), so a poller never observes a torn file. The one
+  deliberate exception is the mtime-only ``.lease`` heartbeat, marked
+  inline with the escape-hatch convention::
+
+      # lint: allow[atomic-write] <reason for this exact line>
+
+  The reason text is mandatory; the comment may sit at the end of the
+  flagged line or in the comment block directly above it.
+* **worker-purity** — this module is a worker entrypoint: nothing in its
+  module-scope import closure may import jax or other heavy deps at
+  import time (that is what keeps persistent-worker startup ~0.8 s and
+  why ``runtime/__init__`` exports lazily). Bridged jax imports live
+  inside functions.
+* **trace-purity** — code reached from jitted call sites
+  (``Broker.evaluate`` -> ``QueueBackend.eval_with_perm``) reaches the
+  host only via ``jax.pure_callback``; the host-side queue machinery
+  below the bridge is free to do IO.
+
 Persistent workers (``python -m repro.runtime.mq --worker --mq-dir D``)
 are numpy-only like the batchq array task: they loop claim -> evaluate ->
 report, resolving each run's fitness ONCE from the ``runs/`` registry
@@ -131,7 +154,9 @@ import numpy as np
 
 from repro.core.hostbridge import (PureCallbackBridge, collect_chunk_results,
                                    plan_cost_chunks, scatter_chunk_results)
-from repro.runtime.batchq import _PAYLOAD, _SRC_ROOT, _atomic_savez, resolve_fn
+from repro.runtime.batchq import _PAYLOAD, _SRC_ROOT, resolve_fn
+from repro.runtime.fsatomic import (atomic_savez, atomic_write_bytes,
+                                    atomic_write_json, atomic_write_text)
 
 TASKS_DIR = "tasks"
 CLAIMED_DIR = "claimed"
@@ -194,16 +219,6 @@ def mq_fail_path(mq_dir: str, name: str) -> str:
     return os.path.join(mq_dir, RESULTS_DIR, name[:-len(".npz")] + ".fail")
 
 
-def _atomic_text(path: str, text: str) -> None:
-    """Write-then-rename so a polling reader never sees a torn file."""
-    tmp = path + ".tmp"
-    with open(tmp, "w") as f:
-        f.write(text)
-        f.flush()
-        os.fsync(f.fileno())
-    os.replace(tmp, path)
-
-
 def make_broker_dirs(mq_dir: str) -> None:
     for sub in (TASKS_DIR, CLAIMED_DIR, RESULTS_DIR, RUNS_DIR):
         os.makedirs(os.path.join(mq_dir, sub), exist_ok=True)
@@ -243,14 +258,11 @@ def register_run(mq_dir: str, run_id: str, *, priority: int = 0,
             # will surface a per-run RESOLVE_FAIL instead of hanging
             blob = None
         if blob is not None:
-            tmp = run_pickle_path(mq_dir, run_id) + ".tmp"
-            with open(tmp, "wb") as f:
-                f.write(blob)
-            os.replace(tmp, run_pickle_path(mq_dir, run_id))
-    _atomic_text(run_registry_path(mq_dir, run_id),
-                 json.dumps({"priority": int(priority),
-                             "num_objectives": int(num_objectives),
-                             "fn_spec": fn_spec}))
+            atomic_write_bytes(run_pickle_path(mq_dir, run_id), blob)
+    atomic_write_json(run_registry_path(mq_dir, run_id),
+                      {"priority": int(priority),
+                       "num_objectives": int(num_objectives),
+                       "fn_spec": fn_spec})
 
 
 def deregister_run(mq_dir: str, run_id: str) -> None:
@@ -413,6 +425,9 @@ def process_task(mq_dir: str, name: str, fn: Callable, *,
     claimed = os.path.join(mq_dir, CLAIMED_DIR, name)
     lease = claimed + LEASE_SUFFIX
     try:
+        # lint: allow[atomic-write] lease is mtime-only liveness: pollers
+        # read getmtime/existence, never the body, and the heartbeat
+        # renews mtime in place — a rename here would race os.utime
         with open(lease, "w") as f:
             f.write(f"{os.getpid()}\n")
     except OSError:
@@ -427,13 +442,13 @@ def process_task(mq_dir: str, name: str, fn: Callable, *,
         t0 = time.perf_counter()
         fit = np.asarray(fn(genomes), np.float32).reshape(len(genomes), -1)
         duration = time.perf_counter() - t0
-        _atomic_savez(mq_result_path(mq_dir, name), fitness=fit,
+        atomic_savez(mq_result_path(mq_dir, name), fitness=fit,
                       duration=np.float64(duration))
         ok = True
     except Exception:
         tb = traceback.format_exc()
         try:
-            _atomic_text(mq_fail_path(mq_dir, name), tb)
+            atomic_write_text(mq_fail_path(mq_dir, name), tb)
         except OSError:
             pass
         sys.stderr.write(tb)
@@ -515,7 +530,7 @@ def worker_loop(mq_dir: str, *, fn: Optional[Callable] = None,
                 # serving the other tenants
                 tb = traceback.format_exc()
                 try:
-                    _atomic_text(resolve_fail_path(mq_dir, run), tb)
+                    atomic_write_text(resolve_fail_path(mq_dir, run), tb)
                 except OSError:
                     pass
                 sys.stderr.write(tb)
@@ -656,7 +671,7 @@ class LocalWorkerPool:
         if not self._started:
             return
         try:
-            _atomic_text(os.path.join(self.mq_dir, STOP_NAME), "stop\n")
+            atomic_write_text(os.path.join(self.mq_dir, STOP_NAME), "stop\n")
         except OSError:
             pass
         deadline = time.monotonic() + timeout_s
@@ -716,7 +731,7 @@ class MQWorkerFleet:
             i = self._ticket_seq
             self._ticket_seq += 1
             path = os.path.join(fleet_dir, f"worker_{i:04d}{TICKET_SUFFIX}")
-            _atomic_text(path, json.dumps({
+            atomic_write_text(path, json.dumps({
                 "mq_dir": self.mq_dir, "lease_s": self.lease_s,
                 "poll_s": self.poll_s, "idle_exit_s": self.idle_exit_s}))
             tickets.append(path)
@@ -752,7 +767,7 @@ class MQWorkerFleet:
         if not self._started:
             return
         try:
-            _atomic_text(os.path.join(self.mq_dir, STOP_NAME), "stop\n")
+            atomic_write_text(os.path.join(self.mq_dir, STOP_NAME), "stop\n")
         except OSError:
             pass
         deadline = time.monotonic() + timeout_s
@@ -906,7 +921,7 @@ class FleetAutoscaler:
                     f"{POISON_SUFFIX}")
                 self._poison_seq += 1
                 try:
-                    _atomic_text(path, "stop\n")
+                    atomic_write_text(path, "stop\n")
                     self._poisons.append(path)
                 except OSError:
                     break
@@ -1175,7 +1190,7 @@ class QueueBackend(PureCallbackBridge):
 
         def enqueue(i, chunk, attempt, delivery) -> str:
             name = task_name(self.run_id, job, i, attempt, delivery)
-            _atomic_savez(os.path.join(self.tasks_dir, name),
+            atomic_savez(os.path.join(self.tasks_dir, name),
                           genomes=np.asarray(chunk, np.float32))
             return name
 
@@ -1403,7 +1418,7 @@ class QueueBackend(PureCallbackBridge):
             self.worker_pool.stop()              # raises fleet-wide STOP
         elif self._owns_dir:
             try:
-                _atomic_text(os.path.join(self.mq_dir, STOP_NAME),
+                atomic_write_text(os.path.join(self.mq_dir, STOP_NAME),
                              "stop\n")
             except OSError:
                 pass

@@ -1,0 +1,385 @@
+"""Protocol linter (repro.analysis): per-checker fixtures — violating
+and clean — allow-comment semantics, CLI exit codes, and the tier-1
+gate: zero findings on the repo's own src/."""
+import os
+import subprocess
+import sys
+import textwrap
+
+from repro.analysis import run_analysis
+from repro.analysis.atomic import check_atomic_writes
+from repro.analysis.concurrency import check_concurrency
+from repro.analysis.imports import check_worker_purity
+from repro.analysis.trace import check_trace_purity
+
+REPO_SRC = os.path.join(os.path.dirname(__file__), os.pardir, "src")
+
+
+def make_tree(tmp_path, files):
+    """Write ``{relpath: source}`` fixtures; return the tree root str."""
+    for rel, src in files.items():
+        path = tmp_path / rel
+        path.parent.mkdir(parents=True, exist_ok=True)
+        path.write_text(textwrap.dedent(src))
+    return str(tmp_path)
+
+
+def rules(findings):
+    return [f.rule for f in findings]
+
+
+# ---------------------------------------------------------------------------
+# atomic-write
+# ---------------------------------------------------------------------------
+
+class TestAtomicWrite:
+    def test_raw_writers_in_protocol_module_flagged(self, tmp_path):
+        root = make_tree(tmp_path, {"repro/runtime/mq.py": """
+            import json
+            import os
+            import pickle
+            import numpy as np
+
+            def publish(path, obj, arr, fd):
+                with open(path, "w") as f:
+                    json.dump(obj, f)
+                pickle.dump(obj, open(path, "wb"))
+                np.savez(path, arr=arr)
+                os.fdopen(fd, mode="w").write("x")
+            """})
+        findings = run_analysis([root], [check_atomic_writes])
+        # open "w", json.dump, pickle.dump AND its nested open "wb",
+        # np.savez, os.fdopen "w" — six raw publication sites
+        assert rules(findings) == ["atomic-write"] * 6
+        assert all("fsatomic" in f.message for f in findings)
+
+    def test_aliased_writer_resolved(self, tmp_path):
+        root = make_tree(tmp_path, {"repro/runtime/batchq.py": """
+            import numpy as xp
+            from json import dump as jd
+
+            def publish(path, obj, arr):
+                xp.savez_compressed(path, arr=arr)
+                jd(obj, open(path))
+            """})
+        assert rules(run_analysis([root], [check_atomic_writes])) == \
+            ["atomic-write"] * 2
+
+    def test_reads_and_nonprotocol_modules_clean(self, tmp_path):
+        root = make_tree(tmp_path, {
+            "repro/runtime/mq.py": """
+                import json
+
+                def load(path):
+                    with open(path) as f:        # default mode: read
+                        return json.load(f)
+
+                def load_b(path):
+                    with open(path, "rb") as f:  # read mode
+                        return f.read()
+                """,
+            # same raw writes OUTSIDE the protocol modules: not flagged
+            "repro/train/ckpt.py": """
+                import json
+
+                def save(path, obj):
+                    with open(path, "w") as f:
+                        json.dump(obj, f)
+                """})
+        assert run_analysis([root], [check_atomic_writes]) == []
+
+
+# ---------------------------------------------------------------------------
+# allow-comment escape hatch
+# ---------------------------------------------------------------------------
+
+class TestAllowComment:
+    def _root(self, tmp_path, comment):
+        return make_tree(tmp_path, {"repro/runtime/mq.py": f"""
+            def lease(path):
+                {comment}
+                with open(path, "w") as f:
+                    f.write("hb")
+            """})
+
+    def test_allow_with_reason_suppresses(self, tmp_path):
+        root = self._root(tmp_path,
+                          "# lint: allow[atomic-write] mtime-only lease")
+        assert run_analysis([root], [check_atomic_writes]) == []
+
+    def test_allow_without_reason_does_not_suppress(self, tmp_path):
+        root = self._root(tmp_path, "# lint: allow[atomic-write]")
+        assert rules(run_analysis([root], [check_atomic_writes])) == \
+            ["atomic-write"]
+
+    def test_allow_for_other_rule_does_not_suppress(self, tmp_path):
+        root = self._root(tmp_path, "# lint: allow[bare-except] nope")
+        assert rules(run_analysis([root], [check_atomic_writes])) == \
+            ["atomic-write"]
+
+    def test_trailing_allow_on_flagged_line(self, tmp_path):
+        root = make_tree(tmp_path, {"repro/runtime/mq.py": """
+            def lease(path):
+                f = open(path, "w")  # lint: allow[atomic-write] heartbeat
+                f.write("hb")
+            """})
+        assert run_analysis([root], [check_atomic_writes]) == []
+
+    def test_reason_may_span_comment_block(self, tmp_path):
+        root = make_tree(tmp_path, {"repro/runtime/mq.py": """
+            def lease(path):
+                # lint: allow[atomic-write] lease is mtime-only liveness:
+                # pollers read getmtime, never the body, so a torn write
+                # is harmless and a rename would race os.utime
+                with open(path, "w") as f:
+                    f.write("hb")
+            """})
+        assert run_analysis([root], [check_atomic_writes]) == []
+
+
+# ---------------------------------------------------------------------------
+# worker-purity
+# ---------------------------------------------------------------------------
+
+class TestWorkerPurity:
+    def test_transitive_module_scope_jax_flagged_with_chain(self, tmp_path):
+        root = make_tree(tmp_path, {
+            "repro/runtime/mq.py": "from repro.core import helper\n",
+            "repro/core/__init__.py": "",
+            "repro/core/helper.py": "import jax\n"})
+        findings = run_analysis([root], [check_worker_purity])
+        assert rules(findings) == ["worker-purity"]
+        assert "repro.runtime.mq" in findings[0].message
+        assert "repro.core.helper -> jax" in findings[0].message
+        assert findings[0].path.endswith("helper.py")
+
+    def test_function_scoped_jax_clean(self, tmp_path):
+        root = make_tree(tmp_path, {"repro/runtime/batchq.py": """
+            def bridge(x):
+                import jax
+                return jax.numpy.asarray(x)
+            """})
+        assert run_analysis([root], [check_worker_purity]) == []
+
+    def test_eager_reexport_in_parent_package_flagged(self, tmp_path):
+        # importing repro.runtime.mq executes repro/runtime/__init__.py:
+        # an eager heavy re-export there poisons every worker
+        root = make_tree(tmp_path, {
+            "repro/runtime/__init__.py": "import jax\n",
+            "repro/runtime/mq.py": ""})
+        findings = run_analysis([root], [check_worker_purity])
+        assert rules(findings) == ["worker-purity"]
+        assert findings[0].path.endswith("__init__.py")
+
+    def test_heavy_import_outside_closure_clean(self, tmp_path):
+        root = make_tree(tmp_path, {
+            "repro/runtime/mq.py": "import numpy\n",
+            "repro/core/engine.py": "import jax\n"})
+        assert run_analysis([root], [check_worker_purity]) == []
+
+
+# ---------------------------------------------------------------------------
+# trace-purity
+# ---------------------------------------------------------------------------
+
+class TestTracePurity:
+    def test_transitive_side_effect_under_jit_flagged(self, tmp_path):
+        root = make_tree(tmp_path, {"repro/core/engine.py": """
+            import time
+            import jax
+
+            def helper(x):
+                return x + time.time()
+
+            @jax.jit
+            def step(x):
+                return helper(x)
+            """})
+        findings = run_analysis([root], [check_trace_purity])
+        assert rules(findings) == ["trace-purity"]
+        assert "time.time" in findings[0].message
+
+    def test_partial_jit_decorator_and_factory_roots(self, tmp_path):
+        root = make_tree(tmp_path, {"repro/kernels/k.py": """
+            import functools
+            import random
+            import subprocess
+            import jax
+
+            @functools.partial(jax.jit, static_argnames=("n",))
+            def kernel(x, n):
+                return x * random.random()
+
+            def make_step(cfg):
+                def step(x):
+                    return subprocess.run(["true"])
+                return step
+
+            step = jax.jit(make_step(None))
+            """})
+        found = rules(run_analysis([root], [check_trace_purity]))
+        assert found == ["trace-purity"] * 2
+
+    def test_callback_bridge_first_arg_is_cut(self, tmp_path):
+        root = make_tree(tmp_path, {"repro/core/engine.py": """
+            import time
+            import jax
+
+            @jax.jit
+            def step(x):
+                # the callback body runs host-side: exempt
+                return jax.pure_callback(lambda: time.time(), x)
+            """})
+        assert run_analysis([root], [check_trace_purity]) == []
+
+    def test_side_effect_in_callback_operand_still_flagged(self, tmp_path):
+        root = make_tree(tmp_path, {"repro/core/engine.py": """
+            import time
+            import jax
+
+            @jax.jit
+            def step(x):
+                # only the FIRST arg is host-side; operands are traced
+                return jax.pure_callback(lambda v: v, x * time.time())
+            """})
+        assert rules(run_analysis([root], [check_trace_purity])) == \
+            ["trace-purity"]
+
+    def test_host_side_code_unreached_from_jit_clean(self, tmp_path):
+        root = make_tree(tmp_path, {"repro/core/engine.py": """
+            import time
+            import jax
+
+            @jax.jit
+            def step(x):
+                return x + 1
+
+            def host_loop(x):
+                t0 = time.monotonic()
+                return step(x), time.monotonic() - t0
+            """})
+        assert run_analysis([root], [check_trace_purity]) == []
+
+
+# ---------------------------------------------------------------------------
+# concurrency
+# ---------------------------------------------------------------------------
+
+class TestConcurrency:
+    def test_bare_acquire_flagged(self, tmp_path):
+        root = make_tree(tmp_path, {"repro/runtime/pool.py": """
+            import threading
+            lock = threading.Lock()
+
+            def grab():
+                lock.acquire()
+            """})
+        assert rules(run_analysis([root], [check_concurrency])) == \
+            ["lock-acquire"]
+
+    def test_blocking_call_under_lock_flagged(self, tmp_path):
+        root = make_tree(tmp_path, {"repro/runtime/pool.py": """
+            import subprocess
+            import threading
+            import time
+            lock = threading.Lock()
+
+            def tick(worker):
+                with lock:
+                    time.sleep(0.1)
+                    subprocess.run(["true"])
+                    worker.join()
+            """})
+        assert rules(run_analysis([root], [check_concurrency])) == \
+            ["lock-blocking-call"] * 3
+
+    def test_condition_wait_on_held_lock_exempt(self, tmp_path):
+        root = make_tree(tmp_path, {"repro/runtime/pool.py": """
+            import threading
+            cond = threading.Condition()
+
+            def drain(done):
+                with cond:
+                    cond.wait_for(done)   # releases while blocked: fine
+                    cond.wait(1.0)
+            """})
+        assert run_analysis([root], [check_concurrency]) == []
+
+    def test_str_join_under_lock_not_a_thread_join(self, tmp_path):
+        root = make_tree(tmp_path, {"repro/runtime/pool.py": """
+            import threading
+            lock = threading.Lock()
+
+            def fmt(parts):
+                with lock:
+                    return ",".join(parts)
+            """})
+        assert run_analysis([root], [check_concurrency]) == []
+
+    def test_bare_except_only_flagged_inside_loops(self, tmp_path):
+        root = make_tree(tmp_path, {"repro/runtime/pool.py": """
+            def claim_loop():
+                while True:
+                    try:
+                        return 1
+                    except:
+                        pass
+
+            def single_shot():
+                try:
+                    return 1
+                except:       # not a retry loop: tolerated
+                    return 0
+            """})
+        findings = run_analysis([root], [check_concurrency])
+        assert rules(findings) == ["bare-except"]
+        assert findings[0].line == 6
+
+
+# ---------------------------------------------------------------------------
+# CLI + tier-1 gate
+# ---------------------------------------------------------------------------
+
+def _run_cli(root):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath(REPO_SRC) + os.pathsep + \
+        env.get("PYTHONPATH", "")
+    return subprocess.run(
+        [sys.executable, "-m", "repro.analysis", root],
+        capture_output=True, text=True, env=env)
+
+
+class TestCli:
+    def test_nonzero_exit_and_finding_format_on_violation(self, tmp_path):
+        root = make_tree(tmp_path, {"repro/runtime/mq.py": """
+            def publish(path):
+                with open(path, "w") as f:
+                    f.write("x")
+            """})
+        proc = _run_cli(root)
+        assert proc.returncode == 1
+        line = proc.stdout.strip().splitlines()[0]
+        path, lineno, rule = line.split(" ", 2)[0].rsplit(":", 1) + \
+            [line.split(" ", 2)[1]]
+        assert path.endswith("mq.py")
+        assert lineno.isdigit()
+        assert rule == "atomic-write"
+
+    def test_zero_exit_on_clean_tree(self, tmp_path):
+        root = make_tree(tmp_path, {"repro/runtime/mq.py": "x = 1\n"})
+        proc = _run_cli(root)
+        assert proc.returncode == 0
+        assert proc.stdout.strip() == ""
+
+    def test_syntax_error_is_a_finding_not_a_crash(self, tmp_path):
+        root = make_tree(tmp_path, {"repro/runtime/mq.py": "def broken(:\n"})
+        findings = run_analysis([root])
+        assert rules(findings) == ["parse-error"]
+
+
+def test_repo_src_has_zero_findings():
+    """Tier-1 gate: the protocol invariants hold on the repo itself.
+    Every deliberate exception must carry `# lint: allow[rule] reason`;
+    anything else showing up here is a real protocol regression."""
+    findings = run_analysis([REPO_SRC])
+    assert findings == [], "\n".join(str(f) for f in findings)

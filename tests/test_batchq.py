@@ -19,10 +19,10 @@ from repro.fitness import sphere
 from repro.fitness import hostsim
 from repro.runtime.batchq import (KubernetesScheduler, LocalMockScheduler,
                                   MockKubectl, SlurmArrayBackend,
-                                  SlurmScheduler, _atomic_savez,
-                                  _compress_index_set, _parse_index_set,
-                                  chunk_path, fail_path, result_path,
-                                  run_worker)
+                                  SlurmScheduler, _compress_index_set,
+                                  _parse_index_set, chunk_path, fail_path,
+                                  result_path, run_worker)
+from repro.runtime.fsatomic import atomic_savez
 
 SPEC = "repro.fitness.hostsim:sphere"
 
@@ -280,7 +280,7 @@ class TestWorkerProtocol:
         chunk = chunk_path(job, 0, 0)
         g = np.random.default_rng(0).uniform(-1, 1, (7, 3)).astype(
             np.float32)
-        _atomic_savez(chunk, genomes=g)
+        atomic_savez(chunk, genomes=g)
         assert run_worker(chunk) == 0
         with np.load(result_path(chunk)) as d:
             np.testing.assert_allclose(d["fitness"], hostsim.sphere(g),
@@ -291,7 +291,7 @@ class TestWorkerProtocol:
         job = _make_job(tmp_path, fn_spec="repro.fitness.hostsim:"
                                           "always_fail")
         chunk = chunk_path(job, 0, 0)
-        _atomic_savez(chunk, genomes=np.zeros((3, 2), np.float32))
+        atomic_savez(chunk, genomes=np.zeros((3, 2), np.float32))
         assert run_worker(chunk) == 1
         assert not os.path.exists(result_path(chunk))
         with open(fail_path(chunk)) as f:
@@ -302,7 +302,7 @@ class TestWorkerProtocol:
         chunk = chunk_path(job, 2, 1)
         g = np.random.default_rng(1).uniform(-1, 1, (5, 4)).astype(
             np.float32)
-        _atomic_savez(chunk, genomes=g)
+        atomic_savez(chunk, genomes=g)
         assert run_worker(chunk) == 0
         with np.load(result_path(chunk)) as d:
             np.testing.assert_allclose(d["fitness"], hostsim.griewank(g),

@@ -1,0 +1,145 @@
+"""fsatomic publication helpers + the stale-``*.tmp`` invisibility
+regression: a writer that crashed between tmp-write and rename leaves a
+partial sibling behind, and every queue poller — ``claim_next``, result
+collection, the worker payload reader — must treat it as nonexistent."""
+import json
+import os
+import pickle
+
+import numpy as np
+import pytest
+
+from repro.fitness import hostsim
+from repro.runtime.batchq import (LocalMockScheduler, SlurmArrayBackend,
+                                  resolve_fn)
+from repro.runtime.fsatomic import (TMP_SUFFIX, atomic_pickle,
+                                    atomic_savez, atomic_write_bytes,
+                                    atomic_write_json, atomic_write_text)
+from repro.runtime.mq import (CLAIMED_DIR, RESULTS_DIR, TASKS_DIR,
+                              LocalWorkerPool, QueueBackend, claim_next,
+                              make_broker_dirs, task_name)
+
+SPEC = "repro.fitness.hostsim:sphere"
+
+
+class TestHelpers:
+    def test_text_roundtrip(self, tmp_path):
+        p = str(tmp_path / "a.txt")
+        atomic_write_text(p, "hello\n")
+        with open(p) as f:
+            assert f.read() == "hello\n"
+
+    def test_bytes_roundtrip(self, tmp_path):
+        p = str(tmp_path / "a.bin")
+        atomic_write_bytes(p, b"\x00\x01binary")
+        with open(p, "rb") as f:
+            assert f.read() == b"\x00\x01binary"
+
+    def test_json_roundtrip_with_dump_kwargs(self, tmp_path):
+        p = str(tmp_path / "a.json")
+        atomic_write_json(p, {"k": [1, 2]}, indent=2)
+        with open(p) as f:
+            text = f.read()
+        assert json.loads(text) == {"k": [1, 2]}
+        assert "\n" in text  # indent kwarg reached json.dump
+
+    def test_pickle_roundtrip(self, tmp_path):
+        p = str(tmp_path / "a.pkl")
+        atomic_pickle(p, {"x": (1, "two")})
+        with open(p, "rb") as f:
+            assert pickle.load(f) == {"x": (1, "two")}
+
+    def test_savez_roundtrip(self, tmp_path):
+        p = str(tmp_path / "a.npz")
+        fit = np.arange(5.0)
+        atomic_savez(p, fitness=fit, duration=np.float64(0.25))
+        with np.load(p) as d:
+            np.testing.assert_array_equal(d["fitness"], fit)
+            assert float(d["duration"]) == 0.25
+
+    def test_no_tmp_sibling_left_behind(self, tmp_path):
+        atomic_write_text(str(tmp_path / "a.txt"), "x")
+        assert os.listdir(tmp_path) == ["a.txt"]
+
+    def test_failed_write_cleans_tmp_and_publishes_nothing(self, tmp_path):
+        p = str(tmp_path / "a.json")
+        with pytest.raises(TypeError):
+            atomic_write_json(p, {"bad": object()})
+        # neither the target nor a partial tmp survives the crash
+        assert os.listdir(tmp_path) == []
+
+    def test_overwrite_replaces_existing_target(self, tmp_path):
+        p = str(tmp_path / "a.txt")
+        atomic_write_text(p, "old")
+        atomic_write_text(p, "new")
+        with open(p) as f:
+            assert f.read() == "new"
+
+
+def _plant_stale_tmp(dirname, basename):
+    """A partial file as a crashed writer leaves it: tmp sibling with
+    truncated garbage, never renamed."""
+    path = os.path.join(dirname, basename + TMP_SUFFIX)
+    with open(path, "wb") as f:
+        f.write(b"\x93NUMPY-truncated-garbage")
+    return path
+
+
+class TestStaleTmpInvisible:
+    def test_claim_next_ignores_stale_task_tmp(self, tmp_path):
+        mq = str(tmp_path)
+        make_broker_dirs(mq)
+        tasks = os.path.join(mq, TASKS_DIR)
+        name = task_name("run-a", 0, 0, 0, 0)
+        # a DIFFERENT chunk's writer crashed mid-write: its torn tmp
+        # sibling stays orphaned in tasks/ forever (until GC)
+        stale = _plant_stale_tmp(tasks, task_name("run-a", 0, 1, 0, 0))
+        # only the torn sibling exists: nothing is claimable
+        assert claim_next(mq) is None
+        # the real task published by rename IS claimable; the orphan
+        # neither shadows it nor gets swept up by the claim
+        atomic_savez(os.path.join(tasks, name),
+                     genomes=np.ones((4, 3), np.float32))
+        assert claim_next(mq) == name
+        assert os.path.exists(stale)
+        assert claim_next(mq) is None
+
+    def test_queue_backend_evaluates_through_stale_tmps(self, tmp_path):
+        """End-to-end: stale tmps in tasks/, claimed/ and results/ are
+        invisible to the whole claim -> evaluate -> collect cycle."""
+        mq = str(tmp_path)
+        pool = LocalWorkerPool(num_workers=2, mode="thread", lease_s=5.0,
+                               poll_s=0.005)
+        with QueueBackend(fn_spec=SPEC, num_workers=2, worker_pool=pool,
+                          mq_dir=mq, poll_interval_s=0.005,
+                          chunk_timeout_s=60) as backend:
+            for sub, base in ((TASKS_DIR, task_name("zz", 0, 0, 0, 0)),
+                              (CLAIMED_DIR, task_name("zz", 0, 1, 0, 0)),
+                              (RESULTS_DIR, "rzz_j000000_c0000_t0_d0"
+                                            ".result.npz")):
+                _plant_stale_tmp(os.path.join(mq, sub), base)
+            g = np.linspace(-1, 1, 24, dtype=np.float32).reshape(8, 3)
+            np.testing.assert_allclose(backend._host_eval(g),
+                                       hostsim.sphere(g), rtol=1e-6)
+
+    def test_resolve_fn_ignores_stale_payload_tmp(self, tmp_path):
+        job_dir = str(tmp_path)
+        atomic_write_json(os.path.join(job_dir, "payload.json"),
+                          {"fn_spec": SPEC})
+        _plant_stale_tmp(job_dir, "payload.json")
+        fn = resolve_fn(job_dir)
+        g = np.ones((2, 3), np.float32)
+        np.testing.assert_allclose(fn(g), hostsim.sphere(g))
+
+    def test_batchq_spool_collection_through_stale_tmps(self, tmp_path):
+        """The spool's result collection polls exact published names; a
+        crashed writer's tmp droppings in the spool don't wedge it."""
+        spool = str(tmp_path)
+        _plant_stale_tmp(spool, "chunk_0000_t0.result.npz")
+        with SlurmArrayBackend(fn_spec=SPEC, num_workers=3,
+                               scheduler=LocalMockScheduler(mode="thread"),
+                               spool_dir=spool, chunk_timeout_s=60,
+                               poll_interval_s=0.005) as backend:
+            g = np.linspace(0, 1, 30, dtype=np.float32).reshape(10, 3)
+            np.testing.assert_allclose(backend._host_eval(g),
+                                       hostsim.sphere(g), rtol=1e-6)

@@ -1,0 +1,151 @@
+"""Import-graph builder (repro.analysis.imports) on a synthetic package
+tree: cycles, conditional imports, importlib strings, relative imports,
+ancestor-package edges — the false-negative shapes that would quietly
+blind the worker-purity checker."""
+import textwrap
+
+from repro.analysis.core import load_universe
+from repro.analysis.imports import build_import_graph, check_worker_purity
+
+
+def build(tmp_path, files):
+    for rel, src in files.items():
+        path = tmp_path / rel
+        path.parent.mkdir(parents=True, exist_ok=True)
+        path.write_text(textwrap.dedent(src))
+    return build_import_graph(load_universe([str(tmp_path)]))
+
+
+def deps(graph, module):
+    return set(graph.internal[module])
+
+
+def externals(graph, module):
+    return {name for name, _ in graph.external[module]}
+
+
+class TestGraphShapes:
+    def test_cycle_terminates_and_reaches_both(self, tmp_path):
+        g = build(tmp_path, {
+            "pkg/__init__.py": "",
+            "pkg/a.py": "import pkg.b\n",
+            "pkg/b.py": "import pkg.a\n"})
+        closure = g.closure(["pkg.a"])
+        assert set(closure) == {"pkg.a", "pkg.b", "pkg"}
+
+    def test_conditional_imports_run_at_import_time(self, tmp_path):
+        g = build(tmp_path, {"pkg/mod.py": """
+            import sys
+            try:
+                import fastjson
+            except ImportError:
+                import json
+            if sys.platform == "linux":
+                import resource
+            else:
+                import winreg
+
+            class Config:
+                import types   # class bodies execute at import
+            """})
+        assert externals(g, "pkg.mod") >= {
+            "sys", "fastjson", "json", "resource", "winreg", "types"}
+
+    def test_function_and_type_checking_imports_excluded(self, tmp_path):
+        g = build(tmp_path, {"pkg/mod.py": """
+            import typing
+            from typing import TYPE_CHECKING
+            if TYPE_CHECKING:
+                import jax
+            if typing.TYPE_CHECKING:
+                import torch
+
+            def bridge():
+                import tensorflow
+                return tensorflow
+            """})
+        ext = externals(g, "pkg.mod")
+        assert "jax" not in ext
+        assert "torch" not in ext
+        assert "tensorflow" not in ext
+
+    def test_importlib_literal_string_is_an_edge(self, tmp_path):
+        g = build(tmp_path, {
+            "pkg/__init__.py": "",
+            "pkg/dyn.py": "import jax\n",
+            "pkg/mod.py": """
+                import importlib
+                backend = importlib.import_module("pkg.dyn")
+
+                def late():
+                    return importlib.import_module("pkg.other")
+                """})
+        assert "pkg.dyn" in deps(g, "pkg.mod")
+        # the function-scoped import_module does NOT run at import time
+        assert "pkg.other" not in deps(g, "pkg.mod")
+
+    def test_from_import_binds_submodule(self, tmp_path):
+        g = build(tmp_path, {
+            "pkg/__init__.py": "",
+            "pkg/util.py": "",
+            "pkg/mod.py": "from pkg import util\n"})
+        assert "pkg.util" in deps(g, "pkg.mod")
+
+    def test_relative_imports_resolve(self, tmp_path):
+        g = build(tmp_path, {
+            "pkg/__init__.py": "",
+            "pkg/util.py": "",
+            "pkg/sub/__init__.py": "",
+            "pkg/sub/mod.py": "",
+            "pkg/sub/mod2.py": """
+                from . import mod
+                from ..util import helper
+                """})
+        d = deps(g, "pkg.sub.mod2")
+        assert "pkg.sub.mod" in d
+        assert "pkg.util" in d
+
+    def test_importing_a_module_executes_ancestor_packages(self, tmp_path):
+        g = build(tmp_path, {
+            "pkg/__init__.py": "import jax\n",
+            "pkg/sub/__init__.py": "",
+            "pkg/sub/mod.py": ""})
+        closure = g.closure(["pkg.sub.mod"])
+        assert {"pkg", "pkg.sub"} <= set(closure)
+
+    def test_importing_dotted_name_pulls_intermediate_inits(self, tmp_path):
+        g = build(tmp_path, {
+            "pkg/__init__.py": "",
+            "pkg/a/__init__.py": "import jax\n",
+            "pkg/a/b.py": "",
+            "main.py": "import pkg.a.b\n"})
+        assert {"pkg", "pkg.a", "pkg.a.b"} <= deps(g, "main")
+
+
+class TestWorkerPurityOnSyntheticTree:
+    def test_flags_heavy_dep_through_cycle_and_init(self, tmp_path):
+        files = {
+            "pkg/runtime/__init__.py": "",
+            "pkg/runtime/mq.py": "from pkg.runtime import batchq\n",
+            "pkg/runtime/batchq.py": "import pkg.runtime.mq\nimport jax\n"}
+        for rel, src in files.items():
+            path = tmp_path / rel
+            path.parent.mkdir(parents=True, exist_ok=True)
+            path.write_text(src)
+        findings = check_worker_purity(
+            load_universe([str(tmp_path)]),
+            entrypoints=("pkg.runtime.mq",))
+        assert [f.rule for f in findings] == ["worker-purity"]
+        assert findings[0].path.endswith("batchq.py")
+        assert findings[0].line == 2
+
+    def test_clean_tree_has_no_findings(self, tmp_path):
+        files = {
+            "pkg/runtime/__init__.py": "",
+            "pkg/runtime/mq.py": "import numpy\nimport os\n"}
+        for rel, src in files.items():
+            path = tmp_path / rel
+            path.parent.mkdir(parents=True, exist_ok=True)
+            path.write_text(src)
+        assert check_worker_purity(load_universe([str(tmp_path)]),
+                                   entrypoints=("pkg.runtime.mq",)) == []

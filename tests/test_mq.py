@@ -406,9 +406,9 @@ def test_worker_loop_exits_on_stop_and_max_tasks(tmp_path):
     mq = str(tmp_path)
     for d in (TASKS_DIR, CLAIMED_DIR, RESULTS_DIR):
         os.makedirs(os.path.join(mq, d))
-    from repro.runtime.batchq import _atomic_savez
+    from repro.runtime.fsatomic import atomic_savez
     for i in range(3):
-        _atomic_savez(os.path.join(mq, TASKS_DIR, task_name("a", 0, i, 0, 0)),
+        atomic_savez(os.path.join(mq, TASKS_DIR, task_name("a", 0, i, 0, 0)),
                       genomes=np.ones((2, 2), np.float32))
     done = worker_loop(mq, fn=hostsim.sphere, max_tasks=2, poll_s=0.005)
     assert done == 2
@@ -429,9 +429,9 @@ class TestAutoscaler:
         removing the ticket."""
         mq = str(tmp_path)
         make_broker_dirs(mq)
-        from repro.runtime.batchq import _atomic_savez
+        from repro.runtime.fsatomic import atomic_savez
         for i in range(2):
-            _atomic_savez(os.path.join(mq, TASKS_DIR,
+            atomic_savez(os.path.join(mq, TASKS_DIR,
                                        task_name("a", 0, i, 0, 0)),
                           genomes=np.ones((2, 2), np.float32))
         with open(os.path.join(mq, TASKS_DIR, "zzzstop-0"
@@ -451,9 +451,9 @@ class TestAutoscaler:
         toward the backlog instead of starving on ghosts."""
         mq = str(tmp_path)
         make_broker_dirs(mq)
-        from repro.runtime.batchq import _atomic_savez
+        from repro.runtime.fsatomic import atomic_savez
         for i in range(2):                       # backlog of 2 ready tasks
-            _atomic_savez(os.path.join(mq, TASKS_DIR,
+            atomic_savez(os.path.join(mq, TASKS_DIR,
                                        task_name("a", 0, i, 0, 0)),
                           genomes=np.ones((2, 2), np.float32))
 

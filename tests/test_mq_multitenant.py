@@ -10,7 +10,7 @@ import numpy as np
 import pytest
 
 from repro.fitness import hostsim
-from repro.runtime.batchq import _atomic_savez
+from repro.runtime.fsatomic import atomic_savez
 from repro.runtime.mq import (CLAIMED_DIR, LEASE_SUFFIX, RESULTS_DIR,
                               STOP_NAME, TASKS_DIR, LocalWorkerPool,
                               QueueBackend, claim_next, make_broker_dirs,
@@ -159,7 +159,7 @@ def test_run_aware_gc_never_sweeps_other_runs_files(tmp_path):
     # the victim run's live mid-eval state, as a shared directory would
     # hold it: a queued task, a claimed task + lease, a landed result
     vtask = task_name("victim", 3, 0, 0, 0)
-    _atomic_savez(os.path.join(mq, TASKS_DIR, vtask),
+    atomic_savez(os.path.join(mq, TASKS_DIR, vtask),
                   genomes=np.ones((2, 2), np.float32))
     vclaim = task_name("victim", 3, 1, 0, 0)
     for path in (os.path.join(mq, CLAIMED_DIR, vclaim),
@@ -167,7 +167,7 @@ def test_run_aware_gc_never_sweeps_other_runs_files(tmp_path):
         with open(path, "w") as f:
             f.write("live")
     vres = task_name("victim", 2, 0, 0, 0)
-    _atomic_savez(mq_result_path(mq, vres),
+    atomic_savez(mq_result_path(mq, vres),
                   fitness=np.zeros((2, 1), np.float32),
                   duration=np.float64(0.1))
     # run "a" churns through jobs with keep_jobs=0 (maximal GC pressure),
@@ -297,7 +297,7 @@ def test_reused_run_id_invalidates_worker_fitness_cache(tmp_path):
     g = np.full((2, 3), 1.5, np.float32)
 
     def enqueue(chunk_idx):
-        _atomic_savez(os.path.join(mq, TASKS_DIR,
+        atomic_savez(os.path.join(mq, TASKS_DIR,
                                    task_name("a", 0, chunk_idx, 0, 0)),
                       genomes=g)
 
@@ -336,7 +336,7 @@ def test_reused_run_id_invalidates_worker_fitness_cache(tmp_path):
     t2 = threading.Thread(target=lambda: box.update(
         done2=worker_loop(mq, poll_s=0.005, max_tasks=1)), daemon=True)
     t2.start()
-    _atomic_savez(os.path.join(mq, TASKS_DIR, task_name("bad", 0, 0, 0, 0)),
+    atomic_savez(os.path.join(mq, TASKS_DIR, task_name("bad", 0, 0, 0, 0)),
                   genomes=g)
     deadline = time.monotonic() + 15
     while not os.path.exists(resolve_fail_path(mq, "bad")):
@@ -344,7 +344,7 @@ def test_reused_run_id_invalidates_worker_fitness_cache(tmp_path):
         time.sleep(0.01)
     deregister_run(mq, "bad")                    # also clears the marker
     register_run(mq, "bad", priority=0, fn_spec=SPEC)
-    _atomic_savez(os.path.join(mq, TASKS_DIR, task_name("bad", 0, 1, 0, 0)),
+    atomic_savez(os.path.join(mq, TASKS_DIR, task_name("bad", 0, 1, 0, 0)),
                   genomes=g)
     out2 = wait_result(task_name("bad", 0, 1, 0, 0))
     np.testing.assert_allclose(out2, hostsim.sphere(g), rtol=1e-6)

@@ -14,7 +14,7 @@ import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.fitness import hostsim
-from repro.runtime.batchq import _atomic_savez
+from repro.runtime.fsatomic import atomic_savez
 from repro.runtime.mq import (CLAIMED_DIR, LEASE_SUFFIX, RESULTS_DIR,
                               TASKS_DIR, LocalWorkerPool, QueueBackend,
                               claim_next, make_broker_dirs,
@@ -158,19 +158,19 @@ def test_first_result_wins_over_late_superseded_duplicate(tmp_path):
     # scripted worker 2 claims d1 and reports the CORRECT result
     os.rename(os.path.join(tasks, d1), os.path.join(claimed, d1))
     good = hostsim.sphere(g[:2])
-    _atomic_savez(mq_result_path(mq, d1), fitness=good,
+    atomic_savez(mq_result_path(mq, d1), fitness=good,
                   duration=np.float64(0.01))
     os.remove(os.path.join(claimed, d1))
     time.sleep(0.5)          # ample manager sweeps to ACCEPT d1 first
     # the ghost wakes up and reports a conflicting late duplicate for the
     # superseded d0 delivery — at-least-once allows this to happen
-    _atomic_savez(mq_result_path(mq, d0),
+    atomic_savez(mq_result_path(mq, d0),
                   fitness=np.full_like(good, 777.0),
                   duration=np.float64(9.9))
     time.sleep(0.1)
     # serve chunk 1 normally so the job can finish
     os.rename(os.path.join(tasks, c1), os.path.join(claimed, c1))
-    _atomic_savez(mq_result_path(mq, c1), fitness=hostsim.sphere(g[2:]),
+    atomic_savez(mq_result_path(mq, c1), fitness=hostsim.sphere(g[2:]),
                   duration=np.float64(0.01))
     os.remove(os.path.join(claimed, c1))
     t.join(timeout=30)
