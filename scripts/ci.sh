@@ -1,9 +1,24 @@
 #!/usr/bin/env bash
 # CI entrypoint. Usage:
-#   scripts/ci.sh            # full tier-1 lane (everything, incl. slow)
-#   scripts/ci.sh fast       # lint, then skip-@pytest.mark.slow tests
-#   scripts/ci.sh durations  # fast lane + the 15 slowest tests listed
-#   scripts/ci.sh lint       # protocol linter + ruff, no test suites
+#   scripts/ci.sh                 # full tier-1 lane (everything, incl. slow)
+#   scripts/ci.sh fast            # lint + verify-protocol, then skip-slow tests
+#   scripts/ci.sh durations       # fast-lane tests + the 15 slowest listed
+#   scripts/ci.sh lint            # protocol linter + ruff, no test suites
+#   scripts/ci.sh verify-protocol # broker-contract model check, no tests
+#
+# The verify-protocol lane model-checks the broker queue contract
+# (src/repro/analysis/proto/): a bounded, deterministic (BFS order,
+# fixed spec) exhaustive sweep over every interleaving of 2 workers x
+# 2 tasks with a delivery re-queue and a crash injection, checking the
+# contract invariants in every reached state and printing the states
+# explored. A violation prints the minimal counterexample schedule and
+# exits 1; a sweep truncated by the wall-time cap exits 3 — never
+# silently passing. It runs in the fast lane right after lint, before
+# any test suite: a protocol regression fails in seconds. The
+# `--exhaustive` sweep (unbounded) is NOT run here — the slow-marked
+# test in tests/test_proto_model.py covers the full CI-bound sweep and
+# tests/test_proto_replay.py replays model counterexample schedules
+# against the real mq.py in tier-1 (covered by the durations lane).
 #
 # The lint lane runs the protocol linter (`python -m repro.analysis src`
 # — atomic-write discipline, worker import purity, trace purity, lock
@@ -65,15 +80,23 @@ run_lint() {
     fi
 }
 
+run_verify_protocol() {
+    python -m repro.analysis --protocol \
+        --workers 2 --tasks 2 --wall-time 120
+}
+
 LANE="${1:-full}"
 case "$LANE" in
     lint)      run_lint ;;
+    verify-protocol) run_verify_protocol ;;
     fast)      run_lint
+               run_verify_protocol
                exec python -m pytest -x -q -m "not slow" \
                     tests/backend_conformance.py tests ;;
     durations) exec python -m pytest -q -m "not slow" --durations=15 \
                     tests/backend_conformance.py tests ;;
     full)      exec python -m pytest -x -q ;;
-    *)         echo "unknown lane: $LANE (want: fast|durations|full|lint)" >&2
+    *)         echo "unknown lane: $LANE" >&2
+               echo "want: fast|durations|full|lint|verify-protocol" >&2
                exit 2 ;;
 esac

@@ -23,6 +23,16 @@ zero-findings test:
 * ``concurrency`` (:mod:`.concurrency`) — ``.acquire()`` outside
   ``with``, blocking calls while holding a lock, and bare ``except:``
   inside retry/claim loops.
+* ``tmp-invisible`` (:mod:`.tmpvis`) — directory listings over broker
+  dirs must filter ``*.tmp`` crash droppings (suffix guard, regex
+  match, or ``parse_task_name``) before acting on entries, and lease
+  files are metadata-only (mtime polled, body never read).
+
+Beyond the linter, :mod:`.proto` holds the protocol MODEL CHECKER — an
+explicit-state explorer of the broker queue contract
+(``python -m repro.analysis --protocol``) whose counterexample
+schedules replay against the real ``runtime/mq.py`` in tier-1
+(``tests/test_proto_replay.py``).
 
 Findings print as ``file:line rule-id message``. Deliberate exceptions
 carry an inline escape hatch ON the flagged line (or the line above)::
@@ -36,9 +46,10 @@ at the directory CONTAINING the top-level package (``src/``), so module
 names resolve as ``repro.runtime.mq``; checker configs match module
 names by dotted suffix, so partial roots still work.
 """
-from repro.analysis.core import (Finding, SourceFile, load_universe,
-                                 run_analysis)
+from repro.analysis.core import (Allow, Finding, SourceFile, list_allows,
+                                 load_universe, run_analysis)
 from repro.analysis.imports import ImportGraph, build_import_graph
 
-__all__ = ["Finding", "SourceFile", "ImportGraph", "build_import_graph",
-           "load_universe", "run_analysis"]
+__all__ = ["Allow", "Finding", "SourceFile", "ImportGraph",
+           "build_import_graph", "list_allows", "load_universe",
+           "run_analysis"]

@@ -1,27 +1,141 @@
-"""CLI: ``python -m repro.analysis [paths...]``.
+"""CLI: ``python -m repro.analysis [paths...] [--protocol|--list-allows]``.
 
-Runs every protocol checker over the given files/directories (default
-``src``) and prints findings as ``file:line rule-id message``, one per
-line. Exit status 0 iff nothing was found — CI's lint lane and the
-tier-1 zero-findings test both key off this.
+Three modes, one entrypoint:
+
+* default (lint): run every protocol checker over the given
+  files/directories (default ``src``) and print findings as
+  ``file:line rule-id message``, one per line. Exit 0 iff nothing was
+  found — CI's lint lane and the tier-1 zero-findings test key off
+  this.
+* ``--list-allows``: print the suppression inventory — every
+  ``# lint: allow[rule] reason`` under the paths as
+  ``file:line rule reason`` — so CI output keeps the exception list
+  auditable. Allows whose line no longer triggers their rule are
+  flagged ``STALE`` with a warning on stderr; stale allows are
+  advisory (exit stays 0), dead code should lose its excuse.
+* ``--protocol``: run the broker-contract model checker
+  (:mod:`repro.analysis.proto`) — a bounded exhaustive sweep over all
+  interleavings of ``--workers`` x ``--tasks`` with crash injection,
+  printing states explored and, on a violation, the minimal
+  counterexample schedule. Exit 0 = clean sweep, 1 = invariant
+  violation, 3 = clean but a bound truncated the sweep (never
+  conflated with a real pass).
 """
 from __future__ import annotations
 
+import argparse
 import sys
 
-from repro.analysis.core import run_analysis
+from repro.analysis.core import list_allows, run_analysis
+
+EXIT_CLEAN = 0
+EXIT_VIOLATION = 1
+EXIT_BOUNDED = 3
 
 
-def main(argv=None) -> int:
-    argv = list(sys.argv[1:] if argv is None else argv)
-    paths = argv or ["src"]
+def _lint(paths) -> int:
     findings = run_analysis(paths)
     for finding in findings:
         print(finding)
     if findings:
         print(f"{len(findings)} finding(s)", file=sys.stderr)
-        return 1
-    return 0
+        return EXIT_VIOLATION
+    return EXIT_CLEAN
+
+
+def _allows(paths) -> int:
+    allows = list_allows(paths)
+    stale = 0
+    for allow in allows:
+        print(allow)
+        if allow.stale:
+            stale += 1
+            print(f"warning: stale allow at {allow.path}:{allow.line} "
+                  f"[{allow.rule}] — the line no longer triggers the "
+                  f"rule", file=sys.stderr)
+    print(f"{len(allows)} allow(s), {stale} stale", file=sys.stderr)
+    return EXIT_CLEAN
+
+
+def _protocol(args) -> int:
+    # local import: the model checker is independent of the linter and
+    # plain lint runs should not pay for loading it
+    from repro.analysis.proto.explorer import explore, format_report
+    from repro.analysis.proto.spec import SpecConfig
+
+    cfg = SpecConfig(workers=args.workers, chunks=args.tasks,
+                     max_delivery_bumps=args.bumps,
+                     max_retries=args.retries, max_crashes=args.crashes,
+                     variant=args.variant)
+    if args.exhaustive:
+        depth, max_states, wall = 10_000, 50_000_000, None
+    else:
+        depth, max_states, wall = args.depth, args.max_states, args.wall_time
+    result = explore(cfg, max_depth=depth, max_states=max_states,
+                     wall_time_s=wall, order=args.order)
+    if args.json:
+        print(result.to_json())
+    else:
+        print(format_report(cfg, result))
+    if not result.ok:
+        return EXIT_VIOLATION
+    if not result.complete:
+        return EXIT_BOUNDED
+    return EXIT_CLEAN
+
+
+def build_parser() -> argparse.ArgumentParser:
+    from repro.analysis.proto.spec import VARIANTS
+
+    p = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="protocol linter + broker-contract model checker")
+    p.add_argument("paths", nargs="*", default=["src"],
+                   help="files/dirs to lint (default: src)")
+    mode = p.add_mutually_exclusive_group()
+    mode.add_argument("--list-allows", action="store_true",
+                      help="print every # lint: allow[...] suppression "
+                           "as file:line rule reason; stale allows are "
+                           "flagged as warnings")
+    mode.add_argument("--protocol", action="store_true",
+                      help="model-check the broker queue contract "
+                           "instead of linting")
+    g = p.add_argument_group("protocol sweep bounds")
+    g.add_argument("--workers", type=int, default=2, metavar="W")
+    g.add_argument("--tasks", type=int, default=2, metavar="M",
+                   help="chunks in flight (the model's task count)")
+    g.add_argument("--depth", type=int, default=80, metavar="N",
+                   help="max schedule length explored (default 80)")
+    g.add_argument("--bumps", type=int, default=1,
+                   help="max delivery re-queues per chunk (default 1)")
+    g.add_argument("--retries", type=int, default=0,
+                   help="worker-failure retry budget (default 0)")
+    g.add_argument("--crashes", type=int, default=1,
+                   help="crash injections per sweep (default 1)")
+    g.add_argument("--max-states", type=int, default=500_000)
+    g.add_argument("--wall-time", type=float, default=None, metavar="S",
+                   help="abort the sweep after S seconds (exit 3)")
+    g.add_argument("--variant", default="good", choices=VARIANTS,
+                   help="protocol variant: 'good' is the real contract; "
+                        "the others are seeded-bad mutants that must "
+                        "produce counterexamples")
+    g.add_argument("--order", default="bfs", choices=("bfs", "dfs"),
+                   help="bfs = minimal counterexamples (default)")
+    g.add_argument("--exhaustive", action="store_true",
+                   help="lift depth/state/wall bounds for a full sweep "
+                        "(slow; not for the CI fast lane)")
+    g.add_argument("--json", action="store_true",
+                   help="print the sweep result as JSON")
+    return p
+
+
+def main(argv=None) -> int:
+    args = build_parser().parse_args(argv)
+    if args.protocol:
+        return _protocol(args)
+    if args.list_allows:
+        return _allows(args.paths)
+    return _lint(args.paths)
 
 
 if __name__ == "__main__":

@@ -10,11 +10,13 @@ the checkers run, so checkers stay oblivious to the escape hatch.
 from __future__ import annotations
 
 import ast
+import io
 import os
 import re
+import tokenize
 from dataclasses import dataclass, field
 
-#: inline escape hatch: ``# lint: allow[rule-id,other-rule] reason text``.
+#: inline escape hatch, a comment ``lint: allow[rule-id,other] reason``.
 #: The reason is mandatory — a bare allow with no justification does not
 #: suppress, which keeps every deliberate exception self-documenting.
 _ALLOW_RE = re.compile(
@@ -46,26 +48,59 @@ class SourceFile:
         if not self.lines:
             self.lines = self.text.splitlines()
 
-    def allowed_rules(self, line: int) -> set:
-        """Rules suppressed at ``line`` (1-based): an allow comment with
-        a non-empty reason trailing the flagged line itself, or anywhere
-        in the contiguous comment-only block immediately above it (so a
-        reason can span several comment lines)."""
-        candidates = []
+    def comment_map(self) -> dict:
+        """``{lineno: comment_text}`` for every REAL ``#`` comment token
+        (tokenize-backed, so ``# lint: allow`` examples inside docstrings
+        are not comments). Falls back to raw lines if the file does not
+        tokenize (a parse-error finding already covers that case)."""
+        if not hasattr(self, "_comment_map"):
+            try:
+                self._comment_map = {
+                    tok.start[0]: tok.string
+                    for tok in tokenize.generate_tokens(
+                        io.StringIO(self.text).readline)
+                    if tok.type == tokenize.COMMENT}
+            except (tokenize.TokenError, IndentationError, SyntaxError):
+                self._comment_map = dict(enumerate(self.lines, 1))
+        return self._comment_map
+
+    def allow_comments_at(self, line: int):
+        """Yield ``(comment_lineno, rule, reason)`` for every allow
+        comment that applies at ``line`` (1-based): one with a non-empty
+        reason trailing the flagged line itself, or anywhere in the
+        contiguous comment-only block immediately above it (so a reason
+        can span several comment lines)."""
+        comments = self.comment_map()
+        linenos = []
         if 1 <= line <= len(self.lines):
-            candidates.append(self.lines[line - 1])
+            linenos.append(line)
         lineno = line - 1
         while 1 <= lineno <= len(self.lines) and \
                 self.lines[lineno - 1].lstrip().startswith("#"):
-            candidates.append(self.lines[lineno - 1])
+            linenos.append(lineno)
             lineno -= 1
-        rules: set = set()
-        for text in candidates:
-            m = _ALLOW_RE.search(text)
+        for ln in linenos:
+            m = _ALLOW_RE.search(comments.get(ln, ""))
             if m and m.group(2):
-                rules.update(r.strip() for r in m.group(1).split(","))
-        rules.discard("")
-        return rules
+                for rule in m.group(1).split(","):
+                    rule = rule.strip()
+                    if rule:
+                        yield ln, rule, m.group(2).strip()
+
+    def allowed_rules(self, line: int) -> set:
+        """Rules suppressed at ``line`` — see :meth:`allow_comments_at`."""
+        return {rule for _, rule, _ in self.allow_comments_at(line)}
+
+    def all_allow_comments(self):
+        """Yield ``(lineno, rule, reason)`` for every reasoned allow
+        comment anywhere in the file — the suppression inventory."""
+        for ln in sorted(self.comment_map()):
+            m = _ALLOW_RE.search(self.comment_map()[ln])
+            if m and m.group(2):
+                for rule in m.group(1).split(","):
+                    rule = rule.strip()
+                    if rule:
+                        yield ln, rule, m.group(2).strip()
 
 
 def module_name(py_path: str, root: str) -> str:
@@ -198,8 +233,9 @@ def default_checkers() -> list:
     from repro.analysis.concurrency import check_concurrency
     from repro.analysis.imports import check_worker_purity
     from repro.analysis.trace import check_trace_purity
+    from repro.analysis.tmpvis import check_tmp_invisible
     return [check_atomic_writes, check_worker_purity,
-            check_trace_purity, check_concurrency]
+            check_trace_purity, check_concurrency, check_tmp_invisible]
 
 
 def run_analysis(paths, checkers=None) -> list:
@@ -219,3 +255,49 @@ def run_analysis(paths, checkers=None) -> list:
             findings.append(finding)
     findings.sort(key=lambda f: (f.path, f.line, f.rule))
     return findings
+
+
+@dataclass(frozen=True)
+class Allow:
+    """One ``# lint: allow[rule] reason`` suppression site. ``stale``
+    means no checker currently produces a finding this comment
+    suppresses — the exception outlived the code it excused."""
+    path: str
+    line: int
+    rule: str
+    reason: str
+    stale: bool
+
+    def __str__(self) -> str:
+        flag = "STALE " if self.stale else ""
+        return f"{self.path}:{self.line} {self.rule} {flag}{self.reason}"
+
+
+def list_allows(paths, checkers=None) -> list:
+    """Inventory every allow comment under ``paths``, sorted by
+    (path, line, rule), with staleness computed against the RAW
+    (unsuppressed) findings of ``checkers``: an allow is live iff some
+    raw finding of its rule resolves to that exact comment line."""
+    universe = load_universe(paths)
+    if checkers is None:
+        checkers = default_checkers()
+    raw: list = []
+    for checker in checkers:
+        raw.extend(checker(universe))
+    by_path = {sf.path: sf for sf in universe}
+    used: set = set()
+    for finding in raw:
+        sf = by_path.get(finding.path)
+        if sf is None:
+            continue
+        for lineno, rule, _ in sf.allow_comments_at(finding.line):
+            if rule == finding.rule:
+                used.add((finding.path, lineno, rule))
+    allows: list = []
+    for sf in universe:
+        for lineno, rule, reason in sf.all_allow_comments():
+            allows.append(Allow(
+                sf.path, lineno, rule, reason,
+                stale=(sf.path, lineno, rule) not in used))
+    allows.sort(key=lambda a: (a.path, a.line, a.rule))
+    return allows

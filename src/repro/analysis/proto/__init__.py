@@ -1,0 +1,17 @@
+"""Explicit-state model checker for the broker queue protocol.
+
+Layers:
+
+* :mod:`.fsmodel` — abstract shared filesystem with real rename/replace
+  semantics, torn-tmp droppings, freshness-abstracted lease clocks.
+* :mod:`.spec` — the ``runtime/mq.py`` queue contract as executable
+  actor state machines, plus deliberately broken variants.
+* :mod:`.explorer` — bounded BFS/DFS over all interleavings with
+  state-hash dedup, crash injection, per-state invariant checks, and
+  minimal counterexample reconstruction.
+* :mod:`.replay` / :mod:`.schedules` — step-barrier harness driving the
+  REAL ``mq.py`` through model-derived adversarial schedules.
+
+Entry point: ``python -m repro.analysis --protocol`` (see
+``repro.analysis.__main__``) and the ``verify-protocol`` CI lane.
+"""

@@ -1,0 +1,171 @@
+"""Bounded explicit-state explorer for the broker protocol spec.
+
+Enumerates every interleaving of the actor state machines in
+:mod:`.spec` over the abstract filesystem of :mod:`.fsmodel`, checking
+the contract invariants in every reached state. Breadth-first by
+default so the first violation found has a MINIMAL schedule (fewest
+steps from the initial state); ``order="dfs"`` trades minimality for a
+smaller frontier on deep exhaustive sweeps.
+
+State identity is the full actor+filesystem snapshot (:meth:`State.key`,
+trace clock excluded), so converging interleavings merge and the search
+space stays finite. Bounds — depth, state count, wall time — make the
+sweep deterministic and CI-sized; a sweep that HITS a bound reports
+``complete=False`` so "no violation found" is never silently conflated
+with "no violation exists under the bound".
+"""
+from __future__ import annotations
+
+import json
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from typing import List, Optional
+
+from repro.analysis.proto import spec as S
+
+
+@dataclass
+class ExploreResult:
+    """Outcome of one bounded sweep. ``ok`` means no invariant broke in
+    any state visited; ``complete`` means no bound truncated the sweep
+    (every reachable state under the spec's own bounds was visited)."""
+    ok: bool
+    complete: bool
+    states: int
+    transitions: int
+    max_depth_seen: int
+    violation: Optional[str] = None
+    schedule: List[str] = field(default_factory=list)
+    bounded_leaves: int = 0
+    elapsed_s: float = 0.0
+    stop_reason: str = ""
+
+    def to_json(self) -> str:
+        return json.dumps({
+            "ok": self.ok, "complete": self.complete,
+            "states": self.states, "transitions": self.transitions,
+            "max_depth_seen": self.max_depth_seen,
+            "violation": self.violation, "schedule": self.schedule,
+            "bounded_leaves": self.bounded_leaves,
+            "elapsed_s": round(self.elapsed_s, 3),
+            "stop_reason": self.stop_reason,
+        }, indent=2)
+
+
+def explore(cfg: S.SpecConfig, *, max_depth: int = 80,
+            max_states: int = 500_000, wall_time_s: Optional[float] = None,
+            order: str = "bfs") -> ExploreResult:
+    """Sweep the reachable state space of ``cfg``'s protocol variant.
+
+    Returns on the FIRST invariant violation with the (BFS-minimal)
+    counterexample schedule reconstructed from parent pointers.
+    """
+    t0 = time.monotonic()
+    init = S.initial_state(cfg)
+    # parent pointers keyed by state identity: key -> (parent_key, label)
+    parents = {init.key(): None}
+    frontier = deque([(init, 0)])
+    pop = frontier.popleft if order == "bfs" else frontier.pop
+    states = 1
+    transitions = 0
+    max_depth_seen = 0
+    bounded_leaves = 0
+    complete = True
+    stop_reason = "exhausted"
+
+    def _fail(state: S.State, msg: str) -> ExploreResult:
+        return ExploreResult(
+            ok=False, complete=False, states=states,
+            transitions=transitions, max_depth_seen=max_depth_seen,
+            violation=msg, schedule=_schedule_of(parents, state.key()),
+            bounded_leaves=bounded_leaves,
+            elapsed_s=time.monotonic() - t0, stop_reason="violation")
+
+    while frontier:
+        state, depth = pop()
+        max_depth_seen = max(max_depth_seen, depth)
+
+        msg = S.check_invariants(state, cfg)
+        if msg is not None:
+            return _fail(state, msg)
+
+        steps, pruned = S.successors(state, cfg)
+        if not steps:
+            if pruned:
+                # a liveness transition was suppressed purely by an
+                # exploration bound: not a real deadlock, just a leaf
+                bounded_leaves += 1
+            else:
+                msg = S.check_quiescence(state, cfg)
+                if msg is not None:
+                    return _fail(state, msg)
+            continue
+
+        if depth >= max_depth:
+            bounded_leaves += 1
+            complete = False
+            stop_reason = "max_depth"
+            continue
+
+        for label, nxt in steps:
+            transitions += 1
+            key = nxt.key()
+            if key in parents:
+                continue
+            parents[key] = (state.key(), label)
+            states += 1
+            frontier.append((nxt, depth + 1))
+            if states >= max_states:
+                return ExploreResult(
+                    ok=True, complete=False, states=states,
+                    transitions=transitions,
+                    max_depth_seen=max_depth_seen,
+                    bounded_leaves=bounded_leaves,
+                    elapsed_s=time.monotonic() - t0,
+                    stop_reason="max_states")
+        if wall_time_s is not None and time.monotonic() - t0 > wall_time_s:
+            return ExploreResult(
+                ok=True, complete=False, states=states,
+                transitions=transitions, max_depth_seen=max_depth_seen,
+                bounded_leaves=bounded_leaves,
+                elapsed_s=time.monotonic() - t0, stop_reason="wall_time")
+
+    return ExploreResult(
+        ok=True, complete=complete, states=states, transitions=transitions,
+        max_depth_seen=max_depth_seen, bounded_leaves=bounded_leaves,
+        elapsed_s=time.monotonic() - t0, stop_reason=stop_reason)
+
+
+def _schedule_of(parents: dict, key) -> List[str]:
+    """Walk parent pointers back to the initial state; under BFS this
+    path is a minimal-length counterexample."""
+    labels: List[str] = []
+    while parents[key] is not None:
+        key, label = parents[key]
+        labels.append(label)
+    labels.reverse()
+    return labels
+
+
+def format_report(cfg: S.SpecConfig, result: ExploreResult) -> str:
+    """Human-readable sweep report (the CLI prints this verbatim)."""
+    lines = [
+        f"protocol sweep: variant={cfg.variant} workers={cfg.workers} "
+        f"chunks={cfg.chunks} bumps={cfg.max_delivery_bumps} "
+        f"retries={cfg.max_retries} crashes={cfg.max_crashes}",
+        f"  states={result.states} transitions={result.transitions} "
+        f"depth={result.max_depth_seen} "
+        f"bounded_leaves={result.bounded_leaves} "
+        f"elapsed={result.elapsed_s:.2f}s "
+        f"complete={result.complete} ({result.stop_reason})",
+    ]
+    if result.ok:
+        lines.append("  OK: all invariants hold in every reached state")
+    else:
+        lines.append(f"  VIOLATION: {result.violation}")
+        lines.append(f"  minimal counterexample "
+                     f"({len(result.schedule)} steps):")
+        for i, label in enumerate(result.schedule):
+            lines.append(f"    {i:3d}. {label}")
+    return "\n".join(lines)

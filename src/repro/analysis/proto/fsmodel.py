@@ -1,0 +1,159 @@
+"""Abstract shared-filesystem model for the broker queue protocol.
+
+The file-backed broker (``runtime/mq.py``) coordinates manager and
+workers entirely through a shared directory: atomic ``os.rename`` claims,
+tmp-sibling + ``os.replace`` publication (``runtime/fsatomic.py``),
+mtime-heartbeat leases. This module models exactly that substrate with
+REAL semantics, small enough to enumerate exhaustively:
+
+* **Atomic replace** — :meth:`Fs.publish` is the model of
+  ``fsatomic._publish``: the completed write makes the full content
+  appear under the target name in one step. The crash-at-mid-write
+  variant (:meth:`Fs.torn`) leaves only the ``<path>.tmp`` sibling with
+  torn content — visible to ``listdir`` pollers, exactly like a writer
+  that died between ``open(tmp)`` and ``os.replace``. (The real helper
+  unlinks its tmp on a raised exception; a *crash* gets no except
+  block, so the dropping stays until GC.)
+* **Atomic rename** — :meth:`Fs.rename` moves content or raises
+  :class:`FsError` when the source is gone, the exact two outcomes of
+  ``os.rename`` under a claim race: exactly one winner, losers see
+  ``OSError``.
+* **Visible stale tmps** — nothing hides ``*.tmp`` entries;
+  :meth:`Fs.listdir` returns them, so a spec whose claim/collect steps
+  forget the suffix filter reads torn files (and the explorer's
+  invariants catch it).
+* **mtime clock, abstracted to freshness** — real pollers compare
+  ``time.time() - getmtime(lease)`` against ``lease_s``. The model
+  collapses that continuous clock to the two observations the protocol
+  can actually make: a lease is ``FRESH`` (heartbeat within the window)
+  or ``STALE`` (window elapsed). ``utime`` (the heartbeat) makes it
+  fresh; the *environment* may non-deterministically expire any fresh
+  lease (modelling an arbitrary scheduling delay). This
+  over-approximates every real timing: any real schedule of wall-clock
+  delays maps to some sequence of env-expire steps, including the
+  nasty ones — a lease expiring between two heartbeats, or a worker
+  that is merely slow being declared dead. A monotone step counter
+  (:attr:`Fs.clock`) is kept for trace labelling only and is excluded
+  from the dedup hash, otherwise semantically identical states would
+  never merge.
+
+Paths are plain ``dir/name`` strings (``tasks/r<run>_...npz``); content
+is any hashable value. The structure is copy-on-write friendly: states
+cheaply :meth:`clone` and hash via :meth:`freeze`.
+"""
+from __future__ import annotations
+
+from typing import Dict, Iterable, List, Optional, Tuple
+
+#: suffix of an in-flight tmp sibling, mirroring fsatomic.TMP_SUFFIX
+TMP_SUFFIX = ".tmp"
+#: lease freshness values — the two observations the protocol can make
+FRESH = "fresh"
+STALE = "stale"
+#: content of a torn (crashed mid-write) tmp dropping
+TORN = ("torn",)
+
+
+class FsError(Exception):
+    """Model of ``OSError`` from an atomic op whose precondition raced
+    away (rename source already claimed, remove target already gone)."""
+
+
+class Fs:
+    """Mutable filesystem snapshot: ``path -> content`` plus a trace
+    clock. Mutating ops bump :attr:`clock`; hashing ignores it."""
+
+    __slots__ = ("files", "clock")
+
+    def __init__(self, files: Optional[Dict[str, object]] = None,
+                 clock: int = 0):
+        self.files: Dict[str, object] = dict(files or {})
+        self.clock = clock
+
+    # -- snapshotting ---------------------------------------------------
+    def clone(self) -> "Fs":
+        return Fs(self.files, self.clock)
+
+    def freeze(self) -> frozenset:
+        """Canonical hashable identity (clock excluded — see module doc)."""
+        return frozenset(self.files.items())
+
+    # -- primitives, each the model of one real syscall cluster ---------
+    def exists(self, path: str) -> bool:
+        return path in self.files
+
+    def read(self, path: str):
+        if path not in self.files:
+            raise FsError(f"read: no such file {path}")
+        return self.files[path]
+
+    def listdir(self, dirname: str) -> List[str]:
+        """Sorted entries of ``dirname`` — tmp droppings INCLUDED, like
+        the real ``os.listdir``; filtering them is the spec's job."""
+        prefix = dirname.rstrip("/") + "/"
+        return sorted(p[len(prefix):] for p in self.files
+                      if p.startswith(prefix))
+
+    def publish(self, path: str, content) -> None:
+        """Completed atomic write (fsatomic: tmp + fsync + os.replace):
+        the full content appears in one step, replacing any previous."""
+        self.files[path] = content
+        self.clock += 1
+
+    def torn(self, path: str) -> None:
+        """Crash mid-atomic-write: only the tmp sibling lands, torn."""
+        self.files[path + TMP_SUFFIX] = TORN
+        self.clock += 1
+
+    def write_raw(self, path: str, content) -> None:
+        """Non-atomic write (the lease file's plain ``open(.., "w")``).
+        In the model it lands whole — lease bodies are metadata-only and
+        never read, which is exactly why the real write is allowed."""
+        self.files[path] = content
+        self.clock += 1
+
+    def rename(self, src: str, dst: str) -> None:
+        """Atomic ``os.rename``: exactly one caller wins a given source;
+        losers get :class:`FsError` (the model of ``OSError``)."""
+        if src not in self.files:
+            raise FsError(f"rename: no such file {src}")
+        self.files[dst] = self.files.pop(src)
+        self.clock += 1
+
+    def remove(self, path: str) -> None:
+        if path not in self.files:
+            raise FsError(f"remove: no such file {path}")
+        del self.files[path]
+        self.clock += 1
+
+    def remove_quiet(self, path: str) -> None:
+        """``os.remove`` wrapped in ``except OSError: pass`` — the
+        protocol's standard idempotent cleanup."""
+        self.files.pop(path, None)
+        self.clock += 1
+
+    def utime(self, path: str) -> None:
+        """Heartbeat: renew a lease's mtime (freshness). Raises when the
+        lease vanished — the real heartbeat thread exits on that."""
+        if path not in self.files:
+            raise FsError(f"utime: no such file {path}")
+        self.files[path] = FRESH
+        self.clock += 1
+
+
+def task_file(run: str, job: int, chunk: int, attempt: int,
+              delivery: int) -> str:
+    """Model twin of ``mq.task_name`` — same format, same sort order."""
+    return f"r{run}_j{job:06d}_c{chunk:04d}_t{attempt}_d{delivery}.npz"
+
+
+def result_file(name: str) -> str:
+    return name[:-len(".npz")] + ".result.npz"
+
+
+def fail_file(name: str) -> str:
+    return name[:-len(".npz")] + ".fail"
+
+
+def lease_file(name: str) -> str:
+    return name + ".lease"

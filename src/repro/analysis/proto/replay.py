@@ -1,0 +1,281 @@
+"""Step-barrier replay: drive the REAL ``mq.py`` through model schedules.
+
+The model checker (:mod:`.explorer`) reasons about an abstraction; this
+harness closes the loop by executing its adversarial schedules against
+the real broker code, thread-by-thread, so the spec and the
+implementation cannot drift apart — and so the future socket broker can
+be checked against the identical corpus.
+
+Mechanics
+---------
+A :class:`StepGate` rendezvous point holds the manager thread at every
+``pump()`` sweep (via ``QueueBackend(step_hook=...)``) while the
+replayer executes schedule steps one at a time:
+
+* ``["manager", "pump"]`` — release the manager for exactly one pump
+  sweep (collect results / surface fails / re-queue stale leases),
+  then re-capture it at the next sweep.
+* ``["w<i>", "<action>", <name>]`` — run ONE worker protocol step
+  inline, using the real helpers the production worker loop is built
+  from: ``claim`` (:func:`mq.claim_next`), ``lease``
+  (:func:`mq.write_lease`), ``publish`` / ``publish_conflict``
+  (:func:`mq.publish_result`), ``publish_fail``
+  (:func:`mq.publish_fail`), ``release`` (:func:`mq.release_claim`),
+  ``tombstone`` (:func:`mq.clean_if_run_closed`). Steps are inline
+  (not separate threads) because each is a single protocol action —
+  the INTERLEAVING is the thing under test, and the schedule IS the
+  interleaving.
+* ``["env", "expire", <name>]`` — backdate the lease mtime past any
+  ``lease_s`` (the model's FRESH->STALE transition, made deterministic
+  with ``os.utime`` instead of waiting out a timer).
+* ``["env", "torn", <name>]`` — drop a torn ``*.tmp`` sibling next to
+  the result path (a publisher killed mid-atomic-write).
+* ``["env", "janitor"]`` — one :func:`mq.janitor_sweep` pass with
+  ``max_age_s=0`` (everything aged).
+
+After the schedule is exhausted the gate opens (free-run) and the
+manager finishes normally; assertions then check fitness values, stats
+counters, and the final directory state.
+
+Worker ``claim`` steps claim a SPECIFIC expected name and assert they
+got it — a schedule replays exactly or fails loudly, it cannot silently
+drift into a different interleaving.
+"""
+from __future__ import annotations
+
+import os
+import threading
+import time
+from typing import Callable, List, Optional
+
+import numpy as np
+
+
+class StepGate:
+    """Rendezvous gate between the replayer and the manager thread.
+
+    The manager calls :meth:`step` at every pump sweep and blocks until
+    granted one token (or the gate opens). The replayer calls
+    :meth:`grant` to let exactly one sweep through — it returns only
+    after the manager has consumed the token and come back to the gate
+    (or finished), so every grant is one whole sweep, never half."""
+
+    def __init__(self):
+        self._cond = threading.Condition()
+        self._tokens = 0
+        self._open = False
+        self._finished = False
+        self._waiting = 0
+        self._sweeps = 0
+
+    def step(self, actor: str, label: str) -> None:
+        with self._cond:
+            if self._open:
+                return
+            self._waiting += 1
+            self._cond.notify_all()
+            while self._tokens == 0 and not self._open:
+                self._cond.wait()
+            if not self._open:
+                self._tokens -= 1
+            self._waiting -= 1
+            self._sweeps += 1
+            self._cond.notify_all()
+
+    def finish(self) -> None:
+        """Signal that the manager thread returned (its _host_eval is
+        done) and will never park again — call from the thread wrapper's
+        ``finally``. Lets a final-sweep :meth:`grant` return instead of
+        waiting forever for a recapture that cannot happen."""
+        with self._cond:
+            self._finished = True
+            self._cond.notify_all()
+
+    def wait_captured(self, timeout: float = 30.0) -> None:
+        """Block until the manager is parked at the gate (or finished /
+        free-running) — the window where replay steps are atomic with
+        respect to the manager's sweeps."""
+        with self._cond:
+            deadline = time.monotonic() + timeout
+            while not (self._waiting or self._open or self._finished):
+                left = deadline - time.monotonic()
+                if left <= 0:
+                    raise TimeoutError("manager never reached the gate")
+                self._cond.wait(left)
+
+    def grant(self, timeout: float = 30.0) -> None:
+        """Release the manager for exactly one pump sweep; returns once
+        the manager is parked at the NEXT sweep (or finished), so a
+        grant is always one whole sweep, never half."""
+        self.wait_captured(timeout)
+        with self._cond:
+            if self._open or (self._finished and not self._waiting):
+                return
+            target = self._sweeps + 1
+            self._tokens += 1
+            self._cond.notify_all()
+            deadline = time.monotonic() + timeout
+            while not (self._open or self._finished
+                       or (self._sweeps >= target and self._waiting)):
+                left = deadline - time.monotonic()
+                if left <= 0:
+                    raise TimeoutError("manager never completed the sweep")
+                self._cond.wait(left)
+
+    def open(self) -> None:
+        """Free-run: stop gating, release everyone, let future sweeps
+        pass straight through."""
+        with self._cond:
+            self._open = True
+            self._cond.notify_all()
+
+
+class Replayer:
+    """Execute one adversarial schedule against a real broker directory.
+
+    ``fn`` is the fitness the inline worker steps evaluate with. Worker
+    state (claimed name per worker id) is tracked so ``eval``/``publish``
+    steps know their task, mirroring the model's per-worker program
+    counter."""
+
+    def __init__(self, mq_dir: str, fn: Callable, *, lease_s: float):
+        self.mq_dir = mq_dir
+        self.fn = fn
+        self.lease_s = lease_s
+        self.held: dict = {}          # worker id -> claimed task name
+        self.evaled: dict = {}        # worker id -> (fit, duration)
+
+    # -- step executors ------------------------------------------------
+    def worker_step(self, wid: str, action: str,
+                    name: Optional[str] = None) -> None:
+        from repro.runtime import mq
+        if action == "claim":
+            got = mq.claim_next(self.mq_dir)
+            assert got is not None, f"{wid}.claim: nothing claimable"
+            if name is not None:
+                assert got == name, (
+                    f"{wid}.claim drifted: expected {name}, got {got}")
+            self.held[wid] = got
+            return
+        task = self.held.get(wid)
+        assert task is not None, f"{wid}.{action}: holds no claim"
+        if action == "lease":
+            mq.write_lease(self.mq_dir, task)
+        elif action == "eval":
+            claimed = os.path.join(self.mq_dir, mq.CLAIMED_DIR, task)
+            genomes = np.load(claimed)["genomes"]
+            fit = np.asarray(self.fn(genomes),
+                             np.float32).reshape(len(genomes), -1)
+            self.evaled[wid] = fit
+        elif action == "publish":
+            mq.publish_result(self.mq_dir, task, self.evaled[wid], 0.01)
+        elif action == "publish_conflict":
+            # a conflicting value from a superseded delivery — the
+            # first-result-wins assertion detects if it is ever accepted
+            fit = self.evaled[wid]
+            mq.publish_result(self.mq_dir, task,
+                              np.full_like(fit, 1e9), 0.01)
+        elif action == "publish_fail":
+            mq.publish_fail(self.mq_dir, task, "injected failure\n")
+        elif action == "release":
+            mq.release_claim(self.mq_dir, task)
+        elif action == "tombstone":
+            mq.clean_if_run_closed(self.mq_dir, task)
+            del self.held[wid]
+        elif action == "crash":
+            # kill -9: drop all worker-local state, touch no files
+            self.held.pop(wid, None)
+            self.evaled.pop(wid, None)
+        else:
+            raise ValueError(f"unknown worker action {action!r}")
+
+    def env_step(self, action: str, name: Optional[str] = None) -> None:
+        from repro.runtime import mq
+        if action == "expire":
+            lease = os.path.join(self.mq_dir, mq.CLAIMED_DIR,
+                                 name + mq.LEASE_SUFFIX)
+            past = time.time() - 10 * 3600 - self.lease_s
+            os.utime(lease, (past, past))
+        elif action == "torn":
+            from repro.runtime.fsatomic import TMP_SUFFIX
+            path = mq.mq_result_path(self.mq_dir, name) + TMP_SUFFIX
+            # deliberately torn: this WRITES the crashed-mid-write
+            # dropping the janitor invariant is about
+            with open(path, "w") as f:
+                f.write("torn")
+        elif action == "janitor":
+            mq.janitor_sweep(self.mq_dir, max_age_s=0.0)
+        else:
+            raise ValueError(f"unknown env action {action!r}")
+
+    def run(self, gate: StepGate, schedule: List[list]) -> None:
+        """Execute ``schedule`` step by step. The manager must already
+        be running (and will park at its first pump)."""
+        for step in schedule:
+            actor, action = step[0], step[1]
+            arg = step[2] if len(step) > 2 else None
+            if actor == "manager":
+                assert action == "pump", f"unknown manager step {action!r}"
+                gate.grant()
+            elif actor == "env":
+                gate.wait_captured()   # manager parked: step is atomic
+                self.env_step(action, arg)
+            elif actor.startswith("w"):
+                gate.wait_captured()
+                self.worker_step(actor, action, arg)
+            else:
+                raise ValueError(f"unknown actor {actor!r}")
+
+
+def to_replay_steps(model_schedule: List[str]) -> List[list]:
+    """Translate an explorer counterexample schedule (labels like
+    ``"w0.claim ra_j000000_c0000_t0_d0.npz"``) into replay steps.
+
+    Manager micro-steps (``m.accept``/``m.fail``/``m.requeue``) each map
+    to one pump sweep — the real pump performs every enabled micro-step
+    of a sweep at once, which only ever does MORE work per grant, never
+    reorders it. Model-only steps (enqueue/finish/close: covered by the
+    backend's own lifecycle; age: implicit in seen_wall) are dropped.
+
+    One granularity repair: the model may publish X and then re-queue X
+    with no manager step in between (sub-sweep TOCTOU — the real pump
+    CAN do that, but only by racing a publish into the window between
+    its result scan and its lease scan, which the sweep-level step hook
+    cannot schedule). A whole granted sweep would accept the result
+    instead of re-queueing. The translation grants the re-queue sweep
+    FIRST and lands the publish after it: no other actor observed the
+    result in between, so the continuation is the same."""
+    steps: List[list] = []
+    last_mgr = 0                      # steps[last_mgr:] = since last grant
+    for label in model_schedule:
+        head, _, arg = label.partition(" ")
+        actor, _, action = head.partition(".")
+        if actor == "m":
+            if action in ("accept", "fail", "requeue", "timeout"):
+                if action == "requeue":
+                    # label is "m.requeue c<k> <name>": match on the name
+                    requeued = arg.split()[-1]
+                    pending = [s for s in steps[last_mgr:]
+                               if s[1] == "publish" and s[2] == requeued]
+                    for s in pending:
+                        steps.remove(s)
+                    steps.append(["manager", "pump"])
+                    steps.extend(pending)
+                else:
+                    steps.append(["manager", "pump"])
+                last_mgr = len(steps)
+            continue
+        if actor == "env":
+            if action == "expire":
+                steps.append(["env", "expire", arg])
+            continue
+        if action in ("claim", "lease", "eval", "publish", "publish_fail",
+                      "release", "tombstone", "crash"):
+            steps.append([actor, action, arg or None])
+        elif action == "crash_torn":
+            steps.append([actor, "crash", arg or None])
+            steps.append(["env", "torn", arg])
+        # heartbeat / claim_copy / etc. have no real-code counterpart
+        # worth replaying (heartbeat is a background thread in the real
+        # worker; bad-variant steps do not exist in the real protocol)
+    return steps

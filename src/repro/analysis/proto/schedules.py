@@ -1,0 +1,129 @@
+"""Adversarial schedule corpus, derived from the model checker.
+
+Each schedule is a worst-case interleaving the explorer surfaced (or a
+minimal hand-reduction of one of its counterexample traces against the
+pre-fix protocol), expressed as replay steps for :mod:`.replay`. They
+run as deterministic tier-1 regression tests against the real ``mq.py``
+(``tests/test_proto_replay.py``); the planned socket broker must pass
+the identical corpus before swapping transports.
+
+All schedules assume run id ``"a"``, job 0, and a 2-worker backend
+evaluating 2 chunks (the model's default configuration).
+"""
+from __future__ import annotations
+
+from typing import List
+
+from repro.runtime.mq import task_name
+
+
+def tname(chunk: int, attempt: int = 0, delivery: int = 0) -> str:
+    return task_name("a", 0, chunk, attempt, delivery)
+
+
+def stale_lease_requeue_conflicting_late_publish() -> List[list]:
+    """first-result-wins: a slow worker's lease expires, the chunk is
+    re-queued and answered by delivery 1; the original worker then lands
+    a CONFLICTING result for superseded delivery 0. The accepted value
+    must be delivery 1's (the first the manager ever saw) and the
+    conflict must be garbage-collected with the job.
+
+    Model trace: good-spec interleaving reaching ``m.accept`` with two
+    live deliveries of one chunk — the at-least-once race the contract's
+    "first result from any delivery it ever issued" clause is about."""
+    c0d0, c0d1, c1d0 = tname(0), tname(0, 0, 1), tname(1)
+    return [
+        ["w0", "claim", c0d0], ["w0", "lease", c0d0], ["w0", "eval", c0d0],
+        ["env", "expire", c0d0],
+        ["manager", "pump"],              # stale lease -> re-queue as d1
+        ["w1", "claim", c0d1], ["w1", "lease", c0d1], ["w1", "eval", c0d1],
+        ["w1", "publish", c0d1], ["w1", "release", c0d1],
+        ["manager", "pump"],              # accept c0 from delivery 1
+        ["w0", "publish_conflict", c0d0],  # late superseded conflict
+        ["w0", "release", c0d0],
+        ["w1", "claim", c1d0], ["w1", "lease", c1d0], ["w1", "eval", c1d0],
+        ["w1", "publish", c1d0], ["w1", "release", c1d0],
+    ]
+
+
+def crash_after_publish_orphan_claim() -> List[list]:
+    """no-lost-task + GC: a worker publishes its result and is killed
+    before releasing the claim. The manager must accept the published
+    result (the chunk is NOT lost) and the job epilogue GC must reap the
+    orphan claim + lease of the dead worker.
+
+    Model trace: good-spec ``w.publish`` -> ``w.crash`` interleaving —
+    the crash window between report and release."""
+    c0d0, c1d0 = tname(0), tname(1)
+    return [
+        ["w0", "claim", c0d0], ["w0", "lease", c0d0], ["w0", "eval", c0d0],
+        ["w0", "publish", c0d0],
+        ["w0", "crash"],                  # killed before release
+        ["manager", "pump"],              # accept c0; orphan claim stays
+        ["w1", "claim", c1d0], ["w1", "lease", c1d0], ["w1", "eval", c1d0],
+        ["w1", "publish", c1d0], ["w1", "release", c1d0],
+    ]
+
+
+def torn_publish_invisible_then_reaped() -> List[list]:
+    """atomicity + janitor: a worker is killed MID-atomic-write, leaving
+    only the torn ``*.tmp`` sibling of its result. The manager's poller
+    must never read it (it polls the exact result path; the tmp is a
+    different name), the stale lease re-queues the chunk to a live
+    worker, and the janitor reaps the aged dropping.
+
+    Model trace: good-spec ``w.crash_torn`` interleaving — the
+    crash-at-mid-write injection of :meth:`fsmodel.Fs.torn`."""
+    c0d0, c0d1, c1d0 = tname(0), tname(0, 0, 1), tname(1)
+    return [
+        ["w0", "claim", c0d0], ["w0", "lease", c0d0], ["w0", "eval", c0d0],
+        ["env", "torn", c0d0],            # killed mid-publish: tmp only
+        ["w0", "crash"],
+        ["env", "expire", c0d0],
+        ["manager", "pump"],              # tmp invisible -> re-queue d1
+        ["w1", "claim", c0d1], ["w1", "lease", c0d1], ["w1", "eval", c0d1],
+        ["w1", "publish", c0d1], ["w1", "release", c0d1],
+        ["w1", "claim", c1d0], ["w1", "lease", c1d0], ["w1", "eval", c1d0],
+        ["w1", "publish", c1d0], ["w1", "release", c1d0],
+        ["env", "janitor"],               # reap the aged torn dropping
+    ]
+
+
+def late_publish_after_close_prefix() -> List[list]:
+    """Gated prefix of the late-publish-after-close leak (the model
+    checker's headline counterexample, found in the ``no_tombstone``
+    variant): a slow worker's chunk is re-queued and answered by
+    delivery 1; the manager finishes and closes while the original
+    worker still holds its superseded claim. The POST-close suffix
+    (publish -> release -> tombstone) runs after ``close()`` — see
+    :func:`late_publish_after_close_suffix`."""
+    c0d0, c0d1, c1d0 = tname(0), tname(0, 0, 1), tname(1)
+    return [
+        ["w0", "claim", c0d0], ["w0", "lease", c0d0], ["w0", "eval", c0d0],
+        ["env", "expire", c0d0],
+        ["manager", "pump"],              # re-queue c0 as d1
+        ["w1", "claim", c0d1], ["w1", "lease", c0d1], ["w1", "eval", c0d1],
+        ["w1", "publish", c0d1], ["w1", "release", c0d1],
+        ["w1", "claim", c1d0], ["w1", "lease", c1d0], ["w1", "eval", c1d0],
+        ["w1", "publish", c1d0], ["w1", "release", c1d0],
+    ]
+
+
+def late_publish_after_close_suffix() -> List[list]:
+    """The leak itself, executed AFTER ``close()`` swept the namespace:
+    without :func:`mq.clean_if_run_closed` the published result of the
+    superseded delivery stays forever in the shared broker directory."""
+    c0d0 = tname(0)
+    return [
+        ["w0", "publish", c0d0],
+        ["w0", "release", c0d0],
+        ["w0", "tombstone", c0d0],
+    ]
+
+
+CORPUS = {
+    "stale-lease-conflict": stale_lease_requeue_conflicting_late_publish,
+    "crash-after-publish": crash_after_publish_orphan_claim,
+    "torn-publish": torn_publish_invisible_then_reaped,
+    "late-publish-after-close": late_publish_after_close_prefix,
+}

@@ -1,0 +1,588 @@
+"""The broker queue contract as executable actor state machines.
+
+This is ``runtime/mq.py``'s docstring contract transcribed into small-
+step operational semantics over the abstract filesystem of
+:mod:`.fsmodel`. Every step names the real function it models, so the
+spec and the implementation can be diffed side by side:
+
+======================  =====================================================
+model step              real code modelled
+======================  =====================================================
+``w*.claim``            ``mq.claim_next`` (atomic rename tasks/ -> claimed/)
+``w*.lease``            ``mq.write_lease`` (plain write; mtime-only metadata)
+``w*.heartbeat``        ``mq._Heartbeat._run`` (``os.utime`` renewal)
+``w*.eval``             ``mq.process_task`` body (``np.load`` + fitness call)
+``w*.publish``          ``mq.publish_result`` (fsatomic tmp + ``os.replace``)
+``w*.publish_fail``     ``mq.publish_fail``
+``w*.release``          ``mq.release_claim`` (claim + lease removal, quiet)
+``w*.tombstone``        ``mq.clean_if_run_closed`` (late-publish self-clean)
+``w*.crash[_torn]``     kill -9 at a step boundary / mid-atomic-write
+``m.enqueue``           ``QueueBackend._host_eval_inner`` enqueue loop
+``m.accept``            pump: first existing result of any issued name wins
+``m.fail``              pump fail-marker check + ``run_chunks_retry`` retry
+``m.requeue``           pump stale-lease re-queue (delivery bump, no budget)
+``m.timeout``           ``wait`` chunk timeout -> fresh attempt via retry
+``m.finish``            ``QueueBackend._finish_job`` (winner-keeping GC)
+``m.close_dereg``       ``close()``: ``deregister_run``
+``m.close_sweep``       ``close()``: run-namespace ``_gc_sweep(set(), {})``
+``env.expire``          wall-clock passing ``lease_s`` without a heartbeat
+``env.age``             wall-clock passing ``lease_s`` after first claim
+                        sighting with no lease ever written (``seen_wall``)
+======================  =====================================================
+
+Modelling decisions (all documented bounds, not hidden approximations):
+
+* One modelled run plus an inert *foreign* run: the foreign run's
+  planted task/claim/lease/result/registry files must survive every
+  reachable state (the run-aware GC isolation invariant). Cross-run
+  claim *scheduling* (priority, work stealing) is covered by the
+  multi-tenant tests, not this model — modelled workers claim only the
+  modelled run's tasks so the system stays closed.
+* The manager does not crash: its death abandons the whole run and the
+  next manager's global sweep (PR 4) owns that story. Workers crash at
+  any step boundary, and mid-``publish`` leaving a torn ``*.tmp``.
+* Exploration bounds — ``max_delivery_bumps``, ``max_retries``,
+  ``max_crashes`` — prune transitions, and a state whose ONLY missing
+  transitions were pruned is flagged ``bounded`` so the quiescence
+  invariant never misfires on an artifact of the bound.
+
+``variant`` selects deliberately broken protocols used to prove the
+checker can fail (a model checker that cannot find a seeded bug is
+untrustworthy — see ``tests/test_proto_model.py``):
+
+* ``copy_claim`` — claim by copy-then-delete instead of atomic rename:
+  two workers can both hold one task (claim-exclusivity violation).
+* ``release_before_publish`` — release the claim before publishing: a
+  crash in the window loses the task (no-lost-task violation).
+* ``requeue_no_bump`` — stale-lease re-queue reuses the same delivery
+  name: the original worker and a new claimant can hold the same name
+  (exclusivity), and delivery stops tracking re-queues (accounting).
+* ``requeue_burns_retry`` — lease re-queues consume the retry budget:
+  violates "liveness never burns the attempt budget" accounting.
+* ``torn_publish`` — results written non-atomically (open-then-fill):
+  the manager can accept a torn read (well-formed-accept violation).
+* ``no_tombstone`` — workers never self-clean after a run closes: a
+  late publish from a superseded delivery leaks a result file past the
+  close sweep (quiescence leak — the counterexample that motivated
+  ``mq.clean_if_run_closed``).
+"""
+from __future__ import annotations
+
+import re
+from collections import namedtuple
+from dataclasses import dataclass
+from typing import List, Optional, Tuple
+
+from repro.analysis.proto.fsmodel import (FRESH, STALE, TORN, Fs,
+                                          fail_file, lease_file,
+                                          result_file, task_file)
+
+VARIANTS = ("good", "copy_claim", "release_before_publish",
+            "requeue_no_bump", "requeue_burns_retry", "torn_publish",
+            "no_tombstone")
+
+#: worker program counters (small-step positions inside worker_loop /
+#: process_task); "dead" is a crashed worker
+W_IDLE = "idle"
+W_COPIED = "copied"              # copy_claim variant midpoint
+W_CLAIMED = "claimed"
+W_LEASED = "leased"
+W_EVALED = "evaled"
+W_TORN_OPEN = "torn_open"        # torn_publish variant midpoint
+W_EVAL_MISSING = "eval_missing"
+W_PUBLISHED = "published"
+W_RELEASED_UNPUB = "released_unpub"   # release_before_publish midpoint
+W_RELEASED = "released"
+W_DEAD = "dead"
+
+#: manager phases (QueueBackend._host_eval_inner lifecycle)
+M_ENQUEUE = "enqueue"
+M_RUN = "run"
+M_FINISHED = "finished"
+M_DEREG = "dereg"
+M_CLOSED = "closed"
+
+Worker = namedtuple("Worker", "pc task")
+#: per-chunk delivery state, the model of mq._ChunkTrack
+Track = namedtuple(
+    "Track", "attempt delivery issued done done_name fails timeouts req_att")
+
+_NAME_RE = re.compile(r"r([a-z0-9-]+)_j(\d+)_c(\d+)_t(\d+)_d(\d+)\.npz")
+
+
+def parse_name(name: str):
+    m = _NAME_RE.fullmatch(name)
+    if m is None:
+        return None
+    return (m.group(1),) + tuple(int(x) for x in m.groups()[1:])
+
+
+@dataclass(frozen=True)
+class SpecConfig:
+    """Exploration bounds + protocol variant. The defaults are the CI
+    lane's bound: 2 workers x 2 chunks, one delivery bump, one crash,
+    no retry budget (timeouts off)."""
+    workers: int = 2
+    chunks: int = 2
+    max_delivery_bumps: int = 1
+    max_retries: int = 0
+    max_crashes: int = 1
+    variant: str = "good"
+    run: str = "a"
+    foreign: bool = True
+
+    def __post_init__(self):
+        if self.variant not in VARIANTS:
+            raise ValueError(
+                f"unknown variant {self.variant!r}; want one of {VARIANTS}")
+
+
+#: files of the inert foreign run, planted at init and asserted present
+#: in every reached state (GC must never touch another run's namespace)
+FOREIGN_PLANT = {
+    "tasks/rother_j000000_c0000_t0_d0.npz": ("task", "other"),
+    "claimed/rother_j000000_c0001_t0_d0.npz": ("task", "other"),
+    "claimed/rother_j000000_c0001_t0_d0.npz.lease": FRESH,
+    "results/rother_j000000_c0002_t0_d0.result.npz": ("res", "other"),
+    "runs/other.json": ("reg", "other"),
+}
+
+
+class State:
+    """One global model state: filesystem + every actor's position."""
+
+    __slots__ = ("fs", "workers", "tracks", "phase", "enq_next", "failed",
+                 "aged", "crashes")
+
+    def __init__(self, fs: Fs, workers: Tuple[Worker, ...],
+                 tracks: Tuple[Track, ...], phase: str, enq_next: int,
+                 failed: bool, aged: frozenset, crashes: int):
+        self.fs = fs
+        self.workers = workers
+        self.tracks = tracks
+        self.phase = phase
+        self.enq_next = enq_next
+        self.failed = failed
+        self.aged = aged
+        self.crashes = crashes
+
+    def clone(self) -> "State":
+        return State(self.fs.clone(), self.workers, self.tracks,
+                     self.phase, self.enq_next, self.failed, self.aged,
+                     self.crashes)
+
+    def key(self):
+        return (self.fs.freeze(), self.workers, self.tracks, self.phase,
+                self.enq_next, self.failed, self.aged, self.crashes)
+
+    # -- small helpers --------------------------------------------------
+    def with_worker(self, i: int, w: Worker) -> "State":
+        ws = list(self.workers)
+        ws[i] = w
+        self.workers = tuple(ws)
+        return self
+
+    def with_track(self, k: int, tr: Track) -> "State":
+        ts = list(self.tracks)
+        ts[k] = tr
+        self.tracks = tuple(ts)
+        return self
+
+
+def initial_state(cfg: SpecConfig) -> State:
+    files = dict(FOREIGN_PLANT) if cfg.foreign else {}
+    files[f"runs/{cfg.run}.json"] = ("reg", cfg.run)
+    fs = Fs(files)
+    workers = tuple(Worker(W_IDLE, None) for _ in range(cfg.workers))
+    tracks = tuple(Track(0, 0, (), None, None, 0, 0, 0)
+                   for _ in range(cfg.chunks))
+    return State(fs, workers, tracks, M_ENQUEUE, 0, False, frozenset(), 0)
+
+
+def _claimable(state: State, cfg: SpecConfig) -> Optional[str]:
+    """Model of claim_next's selection: sorted tasks/ entries, ``.npz``
+    only (tmp droppings invisible by suffix), oldest first. Restricted
+    to the modelled run to keep the system closed."""
+    for name in state.fs.listdir("tasks"):
+        if not name.endswith(".npz"):
+            continue
+        if not name.startswith(f"r{cfg.run}_"):
+            continue
+        return name
+    return None
+
+
+def _result_content(name: str, worker: int):
+    run, job, chunk, attempt, delivery = parse_name(name)
+    return ("res", chunk, attempt, delivery, worker)
+
+
+def successors(state: State, cfg: SpecConfig):
+    """Enabled transitions of ``state`` as ``[(label, next_state)]`` in
+    deterministic order, plus a flag telling whether any transition was
+    suppressed purely by an exploration bound (so quiescence checks can
+    ignore artificial leaves)."""
+    steps: List[Tuple[str, State]] = []
+    pruned = False
+    fs = state.fs
+
+    # -- workers --------------------------------------------------------
+    for i, w in enumerate(state.workers):
+        if w.pc == W_DEAD:
+            continue
+        claimed = f"claimed/{w.task}" if w.task else None
+        lease = claimed + ".lease" if claimed else None
+
+        if w.pc == W_IDLE:
+            name = _claimable(state, cfg)
+            if name is not None:
+                if cfg.variant == "copy_claim":
+                    nxt = state.clone()
+                    # BUG under test: copy leaves the task claimable
+                    nxt.fs.write_raw(f"claimed/{name}",
+                                     nxt.fs.read(f"tasks/{name}"))
+                    steps.append((f"w{i}.claim_copy {name}",
+                                  nxt.with_worker(i, Worker(W_COPIED, name))))
+                else:
+                    nxt = state.clone()
+                    nxt.fs.rename(f"tasks/{name}", f"claimed/{name}")
+                    steps.append((f"w{i}.claim {name}",
+                                  nxt.with_worker(i, Worker(W_CLAIMED, name))))
+        elif w.pc == W_COPIED:
+            nxt = state.clone()
+            nxt.fs.remove_quiet(f"tasks/{w.task}")
+            steps.append((f"w{i}.claim_del {w.task}",
+                          nxt.with_worker(i, Worker(W_CLAIMED, w.task))))
+        elif w.pc == W_CLAIMED:
+            nxt = state.clone()
+            nxt.fs.write_raw(lease, FRESH)
+            nxt.aged = state.aged - {w.task}
+            steps.append((f"w{i}.lease {w.task}",
+                          nxt.with_worker(i, Worker(W_LEASED, w.task))))
+        elif w.pc == W_LEASED:
+            nxt = state.clone()
+            if nxt.fs.exists(claimed):
+                steps.append((f"w{i}.eval {w.task}",
+                              nxt.with_worker(i, Worker(W_EVALED, w.task))))
+            else:
+                # claim re-queued from under us: np.load raises, the real
+                # worker publishes a fail marker for a superseded name
+                steps.append((f"w{i}.eval {w.task}",
+                              nxt.with_worker(i,
+                                              Worker(W_EVAL_MISSING, w.task))))
+        elif w.pc == W_EVALED:
+            if cfg.variant == "torn_publish":
+                nxt = state.clone()
+                # BUG under test: open-then-fill at the real path
+                nxt.fs.write_raw(f"results/{result_file(w.task)}", TORN)
+                steps.append((f"w{i}.publish_open {w.task}",
+                              nxt.with_worker(i, Worker(W_TORN_OPEN, w.task))))
+            elif cfg.variant == "release_before_publish":
+                nxt = state.clone()
+                nxt.fs.remove_quiet(claimed)
+                nxt.fs.remove_quiet(lease)
+                steps.append((f"w{i}.release {w.task}",
+                              nxt.with_worker(i, Worker(W_RELEASED_UNPUB,
+                                                        w.task))))
+            else:
+                nxt = state.clone()
+                nxt.fs.publish(f"results/{result_file(w.task)}",
+                               _result_content(w.task, i))
+                steps.append((f"w{i}.publish {w.task}",
+                              nxt.with_worker(i, Worker(W_PUBLISHED, w.task))))
+                if state.crashes < cfg.max_crashes:
+                    nxt = state.clone()
+                    nxt.fs.torn(f"results/{result_file(w.task)}")
+                    nxt.crashes += 1
+                    steps.append((f"w{i}.crash_torn {w.task}",
+                                  nxt.with_worker(i, Worker(W_DEAD, w.task))))
+        elif w.pc == W_TORN_OPEN:
+            nxt = state.clone()
+            nxt.fs.write_raw(f"results/{result_file(w.task)}",
+                             _result_content(w.task, i))
+            steps.append((f"w{i}.publish_fill {w.task}",
+                          nxt.with_worker(i, Worker(W_PUBLISHED, w.task))))
+        elif w.pc == W_RELEASED_UNPUB:
+            nxt = state.clone()
+            nxt.fs.publish(f"results/{result_file(w.task)}",
+                           _result_content(w.task, i))
+            steps.append((f"w{i}.publish {w.task}",
+                          nxt.with_worker(i, Worker(W_RELEASED, w.task))))
+        elif w.pc == W_EVAL_MISSING:
+            nxt = state.clone()
+            nxt.fs.publish(f"results/{fail_file(w.task)}",
+                           ("fail", w.task))
+            steps.append((f"w{i}.publish_fail {w.task}",
+                          nxt.with_worker(i, Worker(W_PUBLISHED, w.task))))
+        elif w.pc == W_PUBLISHED:
+            nxt = state.clone()
+            nxt.fs.remove_quiet(claimed)
+            nxt.fs.remove_quiet(lease)
+            steps.append((f"w{i}.release {w.task}",
+                          nxt.with_worker(i, Worker(W_RELEASED, w.task))))
+        elif w.pc == W_RELEASED:
+            nxt = state.clone()
+            if (cfg.variant != "no_tombstone"
+                    and not nxt.fs.exists(f"runs/{cfg.run}.json")):
+                # the run closed while we were evaluating: our publish is
+                # a leak nobody will sweep — self-clean (the fix modelled
+                # by mq.clean_if_run_closed)
+                nxt.fs.remove_quiet(f"results/{result_file(w.task)}")
+                nxt.fs.remove_quiet(f"results/{fail_file(w.task)}")
+            steps.append((f"w{i}.tombstone {w.task}",
+                          nxt.with_worker(i, Worker(W_IDLE, None))))
+
+        # heartbeat: renew a stale lease (utime); enabled while the
+        # worker is alive and holds its lease — incl. the race where the
+        # lease expired and the manager is ABOUT to re-queue
+        if w.pc in (W_LEASED, W_EVALED, W_TORN_OPEN, W_EVAL_MISSING):
+            if lease and fs.exists(lease) and fs.read(lease) == STALE:
+                nxt = state.clone()
+                nxt.fs.utime(lease)
+                steps.append((f"w{i}.heartbeat {w.task}", nxt))
+
+        # crash injection: kill -9 at any step boundary (bounded)
+        if w.pc != W_IDLE:
+            if state.crashes < cfg.max_crashes:
+                nxt = state.clone()
+                nxt.crashes += 1
+                steps.append((f"w{i}.crash",
+                              nxt.with_worker(i, Worker(W_DEAD, w.task))))
+
+    # -- environment (wall-clock nondeterminism) ------------------------
+    # janitor: some member of the persistent worker fleet eventually
+    # sweeps an AGED tmp dropping (mq.sweep_stale_tmps, run from the
+    # worker idle loop). Crash-mid-publish after the run's final close
+    # sweep is otherwise a permanent leak in a shared broker dir — the
+    # counterexample this model found in the pre-janitor protocol.
+    for d in ("tasks", "claimed", "results"):
+        for name in fs.listdir(d):
+            if name.endswith(".tmp"):
+                nxt = state.clone()
+                nxt.fs.remove_quiet(f"{d}/{name}")
+                steps.append((f"env.janitor {d}/{name}", nxt))
+            elif (d == "claimed" and name.endswith(".lease")
+                    and not fs.exists(f"{d}/{name[:-len('.lease')]}")
+                    and fs.read(f"{d}/{name}") == STALE):
+                # orphan lease: claim renamed/swept away and the
+                # heartbeat has stopped — always garbage (release
+                # removes lease with claim; claim_next moves only .npz)
+                nxt = state.clone()
+                nxt.fs.remove_quiet(f"{d}/{name}")
+                steps.append((f"env.janitor {d}/{name}", nxt))
+            elif d == "results" and cfg.variant != "no_tombstone":
+                # a result/fail file of a DEREGISTERED run is garbage
+                # no matter its age: the manager that could accept it is
+                # gone for good. This is the crash-proof backstop of the
+                # worker tombstone (same registry condition) — the
+                # no_tombstone variant disables both to model the
+                # pre-fix protocol.
+                run = name.split("_", 1)[0]
+                if (run.startswith("r")
+                        and not fs.exists(f"runs/{run[1:]}.json")):
+                    nxt = state.clone()
+                    nxt.fs.remove_quiet(f"{d}/{name}")
+                    steps.append((f"env.janitor {d}/{name}", nxt))
+    run_prefix = f"r{cfg.run}_"
+    for name in fs.listdir("claimed"):
+        if not name.startswith(run_prefix):
+            continue
+        if name.endswith(".npz.lease"):
+            if fs.read(f"claimed/{name}") == FRESH:
+                nxt = state.clone()
+                nxt.fs.files[f"claimed/{name}"] = STALE
+                nxt.fs.clock += 1
+                steps.append((f"env.expire {name[:-len('.lease')]}", nxt))
+        elif name.endswith(".npz"):
+            if (not fs.exists(f"claimed/{name}.lease")
+                    and name not in state.aged):
+                nxt = state.clone()
+                nxt.aged = state.aged | {name}
+                steps.append((f"env.age {name}", nxt))
+
+    # -- manager --------------------------------------------------------
+    if state.phase == M_ENQUEUE:
+        k = state.enq_next
+        name = task_file(cfg.run, 0, k, 0, 0)
+        nxt = state.clone()
+        nxt.fs.publish(f"tasks/{name}", ("task", k))
+        tr = nxt.tracks[k]
+        nxt.with_track(k, tr._replace(issued=tr.issued + (name,)))
+        nxt.enq_next = k + 1
+        if nxt.enq_next == cfg.chunks:
+            nxt.phase = M_RUN
+        steps.append((f"m.enqueue c{k}", nxt))
+    elif state.phase == M_RUN and not state.failed:
+        for k, tr in enumerate(state.tracks):
+            if tr.done is not None:
+                continue
+            # accept: first EXISTING result among every name ever issued
+            # for this chunk (any attempt/delivery — at-least-once)
+            for name in tr.issued:
+                res = f"results/{result_file(name)}"
+                if fs.exists(res):
+                    nxt = state.clone()
+                    nxt.with_track(k, tr._replace(
+                        done=nxt.fs.read(res), done_name=name))
+                    steps.append((f"m.accept c{k} {name}", nxt))
+                    break
+            if not tr.issued:
+                continue
+            latest = tr.issued[-1]
+            # fail marker of the LATEST delivery -> a fresh attempt (or
+            # job failure once the budget is gone); superseded deliveries'
+            # markers are ignored, matching pump()
+            if fs.exists(f"results/{fail_file(latest)}"):
+                nxt = state.clone()
+                tr2 = nxt.tracks[k]
+                if tr2.attempt < cfg.max_retries:
+                    new = task_file(cfg.run, 0, k, tr2.attempt + 1, 0)
+                    nxt.fs.publish(f"tasks/{new}", ("task", k))
+                    nxt.with_track(k, tr2._replace(
+                        attempt=tr2.attempt + 1, delivery=0, req_att=0,
+                        fails=tr2.fails + 1, issued=tr2.issued + (new,)))
+                else:
+                    nxt.with_track(k, tr2._replace(fails=tr2.fails + 1))
+                    nxt.failed = True
+                steps.append((f"m.fail c{k} {latest}", nxt))
+            # stale-lease re-queue of the latest delivery
+            claimed = f"claimed/{latest}"
+            lease = claimed + ".lease"
+            if fs.exists(claimed):
+                stale = ((fs.exists(lease) and fs.read(lease) == STALE)
+                         or (not fs.exists(lease) and latest in state.aged))
+                if stale:
+                    if (tr.delivery >= cfg.max_delivery_bumps
+                            and cfg.variant not in ("requeue_no_bump",)):
+                        pruned = True
+                    else:
+                        nxt = state.clone()
+                        tr2 = nxt.tracks[k]
+                        if cfg.variant == "requeue_no_bump":
+                            new = latest          # BUG: same delivery name
+                        else:
+                            new = task_file(cfg.run, 0, k, tr2.attempt,
+                                            tr2.delivery + 1)
+                        nxt.fs.rename(claimed, f"tasks/{new}")
+                        nxt.fs.remove_quiet(lease)
+                        nxt.aged = nxt.aged - {latest}
+                        issued = (tr2.issued if new == latest
+                                  else tr2.issued + (new,))
+                        delivery = (tr2.delivery
+                                    if cfg.variant == "requeue_no_bump"
+                                    else tr2.delivery + 1)
+                        attempt = (tr2.attempt + 1
+                                   if cfg.variant == "requeue_burns_retry"
+                                   else tr2.attempt)
+                        nxt.with_track(k, tr2._replace(
+                            delivery=delivery, attempt=attempt,
+                            req_att=tr2.req_att + 1, issued=issued))
+                        steps.append((f"m.requeue c{k} {latest}", nxt))
+                # chunk timeout (live-but-stuck backstop): a fresh
+                # attempt through run_chunks_retry's budget
+                if cfg.max_retries > 0 and tr.attempt < cfg.max_retries:
+                    nxt = state.clone()
+                    tr2 = nxt.tracks[k]
+                    new = task_file(cfg.run, 0, k, tr2.attempt + 1, 0)
+                    nxt.fs.publish(f"tasks/{new}", ("task", k))
+                    nxt.with_track(k, tr2._replace(
+                        attempt=tr2.attempt + 1, delivery=0, req_att=0,
+                        timeouts=tr2.timeouts + 1,
+                        issued=tr2.issued + (new,)))
+                    steps.append((f"m.timeout c{k}", nxt))
+    if state.phase == M_RUN and (state.failed
+                                 or all(tr.done is not None
+                                        for tr in state.tracks)):
+        # job epilogue GC: keep the winners, sweep the rest of this
+        # run's job namespace (QueueBackend._finish_job)
+        nxt = state.clone()
+        winners = {f"results/{result_file(tr.done_name)}"
+                   for tr in nxt.tracks if tr.done_name}
+        _sweep_run(nxt.fs, cfg.run, keep=winners)
+        nxt.phase = M_FINISHED
+        steps.append(("m.finish", nxt))
+    elif state.phase == M_FINISHED:
+        nxt = state.clone()
+        nxt.fs.remove_quiet(f"runs/{cfg.run}.json")
+        nxt.phase = M_DEREG
+        steps.append(("m.close_dereg", nxt))
+    elif state.phase == M_DEREG:
+        nxt = state.clone()
+        _sweep_run(nxt.fs, cfg.run, keep=set())
+        nxt.phase = M_CLOSED
+        steps.append(("m.close_sweep", nxt))
+
+    return steps, pruned
+
+
+def _sweep_run(fs: Fs, run: str, keep: set) -> None:
+    """Model of ``QueueBackend._gc_sweep``: remove every file in the
+    run's namespace across tasks/claimed/results except ``keep`` —
+    other runs' files are untouched by construction of the prefix."""
+    prefix = f"r{run}_"
+    for d in ("tasks", "claimed", "results"):
+        for name in fs.listdir(d):
+            path = f"{d}/{name}"
+            if name.startswith(prefix) and path not in keep:
+                fs.remove_quiet(path)
+
+
+# ---------------------------------------------------------------------------
+# Invariants — asserted in EVERY reached state
+# ---------------------------------------------------------------------------
+
+def check_invariants(state: State, cfg: SpecConfig) -> Optional[str]:
+    fs = state.fs
+    # exactly-one-claim-winner: a task name is never claimable twice —
+    # not simultaneously in tasks/ and claimed/, and never held by two
+    # live workers
+    held = {}
+    for i, w in enumerate(state.workers):
+        if w.task and w.pc in (W_COPIED, W_CLAIMED, W_LEASED, W_EVALED,
+                               W_TORN_OPEN, W_EVAL_MISSING, W_PUBLISHED):
+            if w.task in held:
+                return (f"claim not exclusive: {w.task} held by "
+                        f"w{held[w.task]} and w{i}")
+            held[w.task] = i
+    for name in fs.listdir("tasks"):
+        if name.endswith(".npz") and fs.exists(f"claimed/{name}"):
+            return f"claim not exclusive: {name} in tasks/ AND claimed/"
+    # first-result-wins acceptance is well-formed and chunk-correct:
+    # a torn or foreign read must never be accepted
+    for k, tr in enumerate(state.tracks):
+        if tr.done is not None:
+            if (not isinstance(tr.done, tuple) or len(tr.done) != 5
+                    or tr.done[0] != "res" or tr.done[1] != k):
+                return (f"chunk {k} accepted malformed/mismatched result "
+                        f"{tr.done!r} from {tr.done_name}")
+        # liveness never burns the retry budget; deliveries track
+        # re-queues monotonically within the attempt
+        if tr.attempt != tr.fails + tr.timeouts:
+            return (f"chunk {k} attempt {tr.attempt} != fails {tr.fails} "
+                    f"+ timeouts {tr.timeouts}: a lease re-queue burned "
+                    f"the retry budget")
+        if tr.delivery != tr.req_att:
+            return (f"chunk {k} delivery {tr.delivery} != re-queues "
+                    f"{tr.req_att} this attempt: delivery bump lost")
+    # run-aware GC: the foreign run's files are untouchable
+    if cfg.foreign:
+        for path in FOREIGN_PLANT:
+            if not fs.exists(path):
+                return f"GC collected another run's file: {path}"
+    return None
+
+
+def check_quiescence(state: State, cfg: SpecConfig) -> Optional[str]:
+    """Invariants that hold only at TRUE quiescence (no enabled steps,
+    none suppressed by a bound): nothing was lost, nothing leaked."""
+    if state.phase != M_CLOSED:
+        return f"deadlock before close (phase={state.phase})"
+    if not state.failed:
+        for k, tr in enumerate(state.tracks):
+            if tr.done is None:
+                return f"lost task: chunk {k} never completed"
+    leaked = sorted(p for p in state.fs.files
+                    if not cfg.foreign or p not in FOREIGN_PLANT)
+    if leaked:
+        return f"files leaked at quiescence: {leaked}"
+    return None

@@ -1,0 +1,130 @@
+"""tmp-invisible: directory listings over broker dirs must filter names.
+
+The atomic-publish discipline (see ``atomic.py``) guarantees pollers
+never see a TORN file — but a crashed writer still leaves its ``*.tmp``
+sibling VISIBLE in the directory listing, and every claim carries a
+``*.lease`` heartbeat sibling whose body is meaningless (only its mtime
+is data). The model checker's crash injection surfaces both: a listing
+that acts on raw entries will claim a tmp dropping as a task, count a
+lease as a queued item, or double-process a name and its sibling.
+
+Inside the protocol modules this checker flags:
+
+* any listing call — ``os.listdir`` / ``os.scandir`` / ``glob.glob`` /
+  ``glob.iglob`` / ``pathlib`` ``iterdir`` — whose enclosing function
+  shows NO name-filtering evidence: an ``.endswith(...)`` guard, a
+  regex ``.match``/``.fullmatch`` on entries, a ``parse_task_name``
+  round-trip, or an explicit ``".tmp"`` constant. Structured name
+  parsing rejects tmp/lease siblings by construction (their suffixes
+  break the pattern), so any one of these is accepted as evidence —
+  the rule catches listings with no filter at all, not imperfect ones.
+* any read-mode ``open`` of a lease path (the argument mentions a
+  lease name or ``".lease"`` constant): leases are METADATA-ONLY — the
+  protocol reads ``getmtime``, never the body, and a body read would
+  race the mtime-only heartbeat touch.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.atomic import PROTOCOL_MODULES, _write_mode
+from repro.analysis.core import (Finding, build_aliases, canonical_call,
+                                 module_matches)
+
+RULE = "tmp-invisible"
+
+#: calls that enumerate raw directory entries
+_LISTING_CALLS = {
+    "os.listdir": "os.listdir",
+    "os.scandir": "os.scandir",
+    "glob.glob": "glob.glob",
+    "glob.iglob": "glob.iglob",
+}
+
+#: method names accepted as name-filtering evidence when called on
+#: anything in the enclosing function (entry.endswith, regex.match, ...)
+_FILTER_METHODS = ("endswith", "match", "fullmatch")
+
+#: functions whose round-trip implies structured name parsing
+_PARSER_CALLS = ("parse_task_name",)
+
+
+def _enclosing_function_of(tree: ast.Module) -> dict:
+    """Map each AST node id to its innermost enclosing function node
+    (or the module for top-level code)."""
+    owner: dict = {}
+
+    def visit(node, fn):
+        owner[id(node)] = fn
+        nxt = node if isinstance(
+            node, (ast.FunctionDef, ast.AsyncFunctionDef)) else fn
+        for child in ast.iter_child_nodes(node):
+            visit(child, nxt)
+
+    visit(tree, tree)
+    return owner
+
+
+def _has_filter_evidence(fn_node) -> bool:
+    for node in ast.walk(fn_node):
+        if isinstance(node, ast.Call):
+            func = node.func
+            if isinstance(func, ast.Attribute) and \
+                    func.attr in _FILTER_METHODS:
+                return True
+            if isinstance(func, ast.Name) and func.id in _PARSER_CALLS:
+                return True
+        elif isinstance(node, ast.Constant) and \
+                isinstance(node.value, str) and ".tmp" in node.value:
+            return True
+    return False
+
+
+def _mentions_lease(node) -> bool:
+    """True if the expression's names/attributes/constants mention a
+    lease — the heuristic the lease-metadata-only half keys off."""
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Name) and "lease" in sub.id.lower():
+            return True
+        if isinstance(sub, ast.Attribute) and "lease" in sub.attr.lower():
+            return True
+        if isinstance(sub, ast.Constant) and isinstance(sub.value, str) \
+                and ".lease" in sub.value.lower():
+            return True
+    return False
+
+
+def check_tmp_invisible(universe):
+    findings = []
+    for sf in universe:
+        if not module_matches(sf.module, PROTOCOL_MODULES):
+            continue
+        aliases = build_aliases(sf.tree)
+        owner = _enclosing_function_of(sf.tree)
+        for node in ast.walk(sf.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            target = canonical_call(node, aliases)
+            is_listing = target in _LISTING_CALLS or (
+                isinstance(node.func, ast.Attribute)
+                and node.func.attr == "iterdir")
+            if is_listing:
+                fn = owner.get(id(node), sf.tree)
+                if not _has_filter_evidence(fn):
+                    what = _LISTING_CALLS.get(target, "iterdir")
+                    findings.append(Finding(
+                        sf.path, node.lineno, RULE,
+                        f"unfiltered {what}(...) over a broker dir in "
+                        f"{sf.module}: entries include crashed writers' "
+                        f"*.tmp droppings and *.lease heartbeats — "
+                        f"filter by suffix or parse_task_name before "
+                        f"acting on names"))
+            elif target in ("open", "os.fdopen") and \
+                    not _write_mode(node, 1) and node.args and \
+                    _mentions_lease(node.args[0]):
+                findings.append(Finding(
+                    sf.path, node.lineno, RULE,
+                    f"read of a lease body in {sf.module}: leases are "
+                    f"metadata-only (mtime heartbeat) — poll "
+                    f"os.path.getmtime, never the contents"))
+    return findings

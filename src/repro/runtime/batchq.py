@@ -78,6 +78,24 @@ run as CI's lint lane and as a tier-1 zero-findings test):
 * **trace-purity** — the jit boundary crosses into this module only via
   ``PureCallbackBridge``; everything below ``_host_eval`` is host-side
   and free to do IO.
+* **tmp-invisible** — spool directory listings filter entries by name
+  structure (``_CHUNK_RE.fullmatch`` in the attempt pruner) before
+  acting on them, so crashed writers' ``*.tmp`` droppings are skipped.
+
+Model-checked
+-------------
+The shared-spool publish/poll discipline this backend relies on —
+atomic ``os.replace`` publication, torn ``*.tmp`` invisibility,
+crash-at-any-step droppings reaped by a later sweep — is the same
+abstract filesystem contract the broker-queue model checker
+(``python -m repro.analysis --protocol``, spec in
+``repro.analysis.proto.spec``) verifies exhaustively for ``mq.py``:
+every reachable interleaving of claim/lease/publish/crash against those
+semantics upholds exactly-one-winner, no-lost-task, and leak-free
+quiescence. The lease/requeue layer under check is mq-specific, but the
+fsmodel semantics (``repro.analysis.proto.fsmodel``) are this module's
+spool too — a future batchq-specific spec only needs new actor
+machines, not a new filesystem model.
 
 Persistent-worker alternative: this backend is batch-synchronous — every
 ``evaluate`` pays scheduler submission and worker startup per chunk. The

@@ -108,6 +108,36 @@ run as CI's lint lane and as a tier-1 zero-findings test):
   host only via ``jax.pure_callback``; the host-side queue machinery
   below the bridge is free to do IO.
 
+Model-checked (``python -m repro.analysis --protocol``)
+-------------------------------------------------------
+The queue contract above is transcribed as executable actor state
+machines in ``repro.analysis.proto.spec`` (each model step names the
+function here it models) and exhaustively explored over all
+interleavings of workers x chunks with crash injection at every step
+boundary, including kill-mid-atomic-write leaving a torn ``*.tmp``.
+Invariants asserted in every reachable state:
+
+* **exactly-one-claim-winner** — a task name is never in ``tasks/`` and
+  ``claimed/`` at once, and never held by two live workers;
+* **no-lost-task** — at quiescence every chunk was accepted (or failed
+  through the retry budget), never silently dropped;
+* **delivery bumps never burn the retry budget** — stale-lease
+  re-queues bump only the delivery counter; ``attempt`` moves only on
+  real failures/timeouts;
+* **first-result-wins is well-formed** — the accepted result is a whole
+  (never torn) file from a delivery of the right chunk, and conflicting
+  superseded deliveries never displace it;
+* **GC isolation** — no sweep ever touches another run's namespace or a
+  live attempt's files, and at quiescence the run leaves NOTHING behind
+  (late publishes self-clean via :func:`clean_if_run_closed`; crashed
+  publishers are reaped by :func:`janitor_sweep` from idle workers).
+
+The model's worst adversarial schedules replay step-locked against the
+real functions in this module (``repro.analysis.proto.replay``, tier-1
+``tests/test_proto_replay.py``), so this docstring, the spec, and the
+implementation cannot drift apart; the planned socket broker must pass
+the identical schedule corpus before swapping transports.
+
 Persistent workers (``python -m repro.runtime.mq --worker --mq-dir D``)
 are numpy-only like the batchq array task: they loop claim -> evaluate ->
 report, resolving each run's fitness ONCE from the ``runs/`` registry
@@ -155,8 +185,9 @@ import numpy as np
 from repro.core.hostbridge import (PureCallbackBridge, collect_chunk_results,
                                    plan_cost_chunks, scatter_chunk_results)
 from repro.runtime.batchq import _PAYLOAD, _SRC_ROOT, resolve_fn
-from repro.runtime.fsatomic import (atomic_savez, atomic_write_bytes,
-                                    atomic_write_json, atomic_write_text)
+from repro.runtime.fsatomic import (TMP_SUFFIX, atomic_savez,
+                                    atomic_write_bytes, atomic_write_json,
+                                    atomic_write_text)
 
 TASKS_DIR = "tasks"
 CLAIMED_DIR = "claimed"
@@ -416,14 +447,10 @@ def claim_next(mq_dir: str, skip_runs=()) -> Optional[str]:
     return None
 
 
-def process_task(mq_dir: str, name: str, fn: Callable, *,
-                 heartbeat_s: float = 1.0, hang: bool = False) -> bool:
-    """Evaluate one claimed task: lease -> heartbeat -> eval -> atomic
-    result/fail -> release claim. ``hang=True`` simulates a worker killed
-    mid-task (lease written once, never renewed, nothing reported) so the
-    manager's stale-lease re-queue path can be exercised."""
-    claimed = os.path.join(mq_dir, CLAIMED_DIR, name)
-    lease = claimed + LEASE_SUFFIX
+def write_lease(mq_dir: str, name: str) -> str:
+    """Write the claimed task's lease file (worker protocol step; the
+    heartbeat thread then renews its mtime). Returns the lease path."""
+    lease = os.path.join(mq_dir, CLAIMED_DIR, name) + LEASE_SUFFIX
     try:
         # lint: allow[atomic-write] lease is mtime-only liveness: pollers
         # read getmtime/existence, never the body, and the heartbeat
@@ -432,6 +459,124 @@ def process_task(mq_dir: str, name: str, fn: Callable, *,
             f.write(f"{os.getpid()}\n")
     except OSError:
         pass
+    return lease
+
+
+def publish_result(mq_dir: str, name: str, fit: np.ndarray,
+                   duration: float) -> None:
+    """Atomically publish one claimed task's result (worker protocol
+    step): the manager's poller sees the whole file or nothing."""
+    atomic_savez(mq_result_path(mq_dir, name), fitness=fit,
+                  duration=np.float64(duration))
+
+
+def publish_fail(mq_dir: str, name: str, tb: str) -> None:
+    """Atomically publish a failure marker for one claimed task."""
+    try:
+        atomic_write_text(mq_fail_path(mq_dir, name), tb)
+    except OSError:
+        pass
+
+
+def release_claim(mq_dir: str, name: str) -> None:
+    """Drop the claim and lease after reporting (worker protocol step).
+    Quiet: the manager may have re-queued the claim from under us."""
+    claimed = os.path.join(mq_dir, CLAIMED_DIR, name)
+    for path in (claimed, claimed + LEASE_SUFFIX):
+        try:
+            os.remove(path)
+        except OSError:
+            pass
+
+
+def clean_if_run_closed(mq_dir: str, name: str) -> bool:
+    """Tombstone for a late report: if ``name``'s run has deregistered
+    (manager gone for good — nothing will ever accept the result and the
+    run's final sweep already happened), remove our own result and fail
+    files so a shared broker directory does not leak them forever.
+
+    This is the fix for a model-checker counterexample: a superseded
+    delivery that publishes AFTER its run's ``close()`` swept the
+    namespace leaves an orphan nobody else may touch (other runs' sweeps
+    are namespace-scoped by contract). Directories populated by hand
+    (legacy ``payload.json``, no registry) are exempt — there is no
+    registration to signal closure, and tests read results directly."""
+    parsed = parse_task_name(name)
+    run = parsed[0] if parsed else ""
+    if registry_stamp(mq_dir, run) is not None:
+        return False
+    if os.path.exists(os.path.join(mq_dir, _PAYLOAD)):
+        return False
+    for path in (mq_result_path(mq_dir, name), mq_fail_path(mq_dir, name)):
+        try:
+            os.remove(path)
+        except OSError:
+            pass
+    return True
+
+
+def janitor_sweep(mq_dir: str, *, max_age_s: float) -> int:
+    """Fleet-side garbage backstop for droppings no run-scoped sweep can
+    reach, run from idle workers: (1) aged ``*.tmp`` siblings of writers
+    that crashed mid-atomic-write, (2) aged orphan ``*.lease`` files
+    whose claim is gone and whose heartbeat has stopped (a lease without
+    its claim is always garbage: release removes both together and
+    ``claim_next`` renames only the ``.npz``), (3) aged results/fails of
+    DEREGISTERED runs (the crash-proof twin of
+    :func:`clean_if_run_closed` — their publisher died before its own
+    tombstone). The age guard keeps in-flight writes and actively
+    heartbeated leases safe; registered runs' files are never touched,
+    which is what makes ``keep_jobs=None`` (a run that stays registered)
+    the durable GC opt-out. Returns the number of files removed."""
+    removed = 0
+    cutoff = time.time() - max_age_s
+    legacy = os.path.exists(os.path.join(mq_dir, _PAYLOAD))
+    live_stamp: Dict[str, bool] = {}
+    for d in (TASKS_DIR, CLAIMED_DIR, RESULTS_DIR):
+        try:
+            names = os.listdir(os.path.join(mq_dir, d))
+        except OSError:
+            continue
+        for name in names:
+            path = os.path.join(mq_dir, d, name)
+            garbage = False
+            if name.endswith(TMP_SUFFIX):
+                garbage = True
+            elif d == CLAIMED_DIR and name.endswith(LEASE_SUFFIX):
+                garbage = not os.path.exists(path[:-len(LEASE_SUFFIX)])
+            elif d == RESULTS_DIR and not legacy:
+                stem = name
+                for suffix in (".result.npz", ".fail", ".npz"):
+                    if stem.endswith(suffix):
+                        stem = stem[:-len(suffix)] + ".npz"
+                        break
+                parsed = parse_task_name(stem)
+                if parsed:
+                    run = parsed[0]
+                    if run not in live_stamp:
+                        live_stamp[run] = (
+                            registry_stamp(mq_dir, run) is not None)
+                    garbage = not live_stamp[run]
+            if not garbage:
+                continue
+            try:
+                if os.path.getmtime(path) > cutoff:
+                    continue
+                os.remove(path)
+                removed += 1
+            except OSError:
+                pass
+    return removed
+
+
+def process_task(mq_dir: str, name: str, fn: Callable, *,
+                 heartbeat_s: float = 1.0, hang: bool = False) -> bool:
+    """Evaluate one claimed task: lease -> heartbeat -> eval -> atomic
+    result/fail -> release claim. ``hang=True`` simulates a worker killed
+    mid-task (lease written once, never renewed, nothing reported) so the
+    manager's stale-lease re-queue path can be exercised."""
+    claimed = os.path.join(mq_dir, CLAIMED_DIR, name)
+    lease = write_lease(mq_dir, name)
     if hang:
         return False
     hb = _Heartbeat(lease, heartbeat_s)
@@ -442,23 +587,15 @@ def process_task(mq_dir: str, name: str, fn: Callable, *,
         t0 = time.perf_counter()
         fit = np.asarray(fn(genomes), np.float32).reshape(len(genomes), -1)
         duration = time.perf_counter() - t0
-        atomic_savez(mq_result_path(mq_dir, name), fitness=fit,
-                      duration=np.float64(duration))
+        publish_result(mq_dir, name, fit, duration)
         ok = True
     except Exception:
         tb = traceback.format_exc()
-        try:
-            atomic_write_text(mq_fail_path(mq_dir, name), tb)
-        except OSError:
-            pass
+        publish_fail(mq_dir, name, tb)
         sys.stderr.write(tb)
     finally:
         hb.stop()
-        for path in (claimed, lease):
-            try:
-                os.remove(path)
-            except OSError:
-                pass                             # manager re-queued it
+        release_claim(mq_dir, name)
     return ok
 
 
@@ -487,6 +624,7 @@ def worker_loop(mq_dir: str, *, fn: Optional[Callable] = None,
     fns: Dict[str, tuple] = {}       # run -> (registry stamp, fitness)
     bad_runs: Dict[str, object] = {}  # run -> stamp when it failed
     idle_t0 = time.monotonic()
+    janitor_t = time.monotonic()
     while True:
         if os.path.exists(os.path.join(mq_dir, STOP_NAME)):
             return done
@@ -501,6 +639,14 @@ def worker_loop(mq_dir: str, *, fn: Optional[Callable] = None,
             if (idle_exit_s is not None
                     and time.monotonic() - idle_t0 > idle_exit_s):
                 return done
+            # idle workers double as the fleet's janitor: crashed
+            # writers' tmp droppings, orphan leases, and dead runs'
+            # late results have no run-scoped sweeper left (throttled
+            # to one sweep per lease window; the age guard inside
+            # keeps anything live untouched)
+            if time.monotonic() - janitor_t > lease_s:
+                janitor_t = time.monotonic()
+                janitor_sweep(mq_dir, max_age_s=2.0 * lease_s)
             time.sleep(poll_s)
             continue
         if name.endswith(POISON_SUFFIX):
@@ -523,6 +669,17 @@ def worker_loop(mq_dir: str, *, fn: Optional[Callable] = None,
                 task_fn = resolve_run_fn(mq_dir, run)
                 fns[run] = (stamp, task_fn)
             except Exception:
+                if (stamp is None
+                        and not os.path.exists(
+                            os.path.join(mq_dir, _PAYLOAD))):
+                    # the run DEREGISTERED between our claim and the
+                    # resolve (close() raced us): the task is a stray
+                    # the final sweep missed, not a bad spec — drop the
+                    # claim quietly; a RESOLVE_FAIL marker here would
+                    # leak forever (no manager left to consume it)
+                    bad_runs[run] = stamp
+                    release_claim(mq_dir, name)
+                    continue
                 # cannot serve THIS run (bad import spec, unpicklable
                 # callable): surface the traceback on a per-run marker so
                 # its manager fails fast instead of waiting forever (the
@@ -545,6 +702,11 @@ def worker_loop(mq_dir: str, *, fn: Optional[Callable] = None,
                      hang=hang)
         if hang:
             return done                          # the simulated kill -9
+        if fn is None:
+            # late-report tombstone (registry-resolved runs only: an fn
+            # override serves hand-made directories whose results are
+            # read without a registration to signal liveness)
+            clean_if_run_closed(mq_dir, name)
         done += 1
         if max_tasks is not None and done >= max_tasks:
             return done
@@ -1071,7 +1233,8 @@ class QueueBackend(PureCallbackBridge):
                  min_chunk_cost_s: float = 0.0,
                  keep_jobs: Optional[int] = 4,
                  worker_pool=None,
-                 autoscaler: Optional[FleetAutoscaler] = None):
+                 autoscaler: Optional[FleetAutoscaler] = None,
+                 step_hook: Optional[Callable] = None):
         if fitness_fn is None and not fn_spec:
             raise ValueError("need fitness_fn (pickled) or fn_spec "
                              "(module:attr import path)")
@@ -1097,6 +1260,12 @@ class QueueBackend(PureCallbackBridge):
         self.chunk_sizing = chunk_sizing
         self.min_chunk_cost_s = float(min_chunk_cost_s)
         self.keep_jobs = keep_jobs
+        # step-barrier seam for the protocol replay harness (analysis/
+        # proto/replay): called as step_hook("manager", "pump") at every
+        # pump sweep so adversarial schedules from the model checker can
+        # drive the REAL manager loop step-locked against real workers.
+        # None (production) costs one attribute check per sweep.
+        self._step_hook = step_hook
         self.stats = {"jobs": 0, "retries": 0, "timeouts": 0,
                       "lease_requeues": 0, "streamed": 0, "jobs_pruned": 0}
         self._lock = threading.Lock()
@@ -1219,6 +1388,8 @@ class QueueBackend(PureCallbackBridge):
             """One streaming sweep over every outstanding chunk: collect
             landed results (feeding the EMA immediately), surface failure
             markers, and re-queue stale leases."""
+            if self._step_hook is not None:
+                self._step_hook("manager", "pump")
             now_w = time.time()
             for i, tr in enumerate(tracks):
                 if tr.done is not None or tr.failed_msg is not None:
@@ -1406,13 +1577,17 @@ class QueueBackend(PureCallbackBridge):
                 self._cond.wait()
         if self.autoscaler is not None:
             self.autoscaler.stop()
-        deregister_run(self.mq_dir, self.run_id)
         if self.keep_jobs is not None:
             # a finishing run leaves nothing behind in a shared broker
             # directory: the retained keep_jobs winners existed for this
             # manager alone, and no surviving run's sweep may touch a
-            # foreign namespace (keep_jobs=None keeps winners forever by
-            # contract — the explicit opt-out of GC)
+            # foreign namespace. keep_jobs=None keeps winners forever by
+            # contract — the explicit opt-out of GC — and therefore KEEPS
+            # ITS REGISTRATION: deregistering is the protocol's "these
+            # files are garbage" signal (worker tombstones and the idle
+            # janitor both key on it), so a deregistered run's retained
+            # winners would not survive a live fleet
+            deregister_run(self.mq_dir, self.run_id)
             self._gc_sweep(set(), {})
         if self.worker_pool is not None:
             self.worker_pool.stop()              # raises fleet-wide STOP

@@ -6,10 +6,11 @@ import subprocess
 import sys
 import textwrap
 
-from repro.analysis import run_analysis
+from repro.analysis import list_allows, run_analysis
 from repro.analysis.atomic import check_atomic_writes
 from repro.analysis.concurrency import check_concurrency
 from repro.analysis.imports import check_worker_purity
+from repro.analysis.tmpvis import check_tmp_invisible
 from repro.analysis.trace import check_trace_purity
 
 REPO_SRC = os.path.join(os.path.dirname(__file__), os.pardir, "src")
@@ -337,15 +338,153 @@ class TestConcurrency:
 
 
 # ---------------------------------------------------------------------------
+# tmp-invisible
+# ---------------------------------------------------------------------------
+
+class TestTmpInvisible:
+    def test_unfiltered_listing_in_protocol_module_flagged(self, tmp_path):
+        root = make_tree(tmp_path, {"repro/runtime/mq.py": """
+            import glob
+            import os
+
+            def drain(tasks_dir):
+                for name in os.listdir(tasks_dir):   # raw entries!
+                    os.remove(os.path.join(tasks_dir, name))
+
+            def scan(tasks_dir):
+                return glob.glob(tasks_dir + "/*")
+            """})
+        findings = run_analysis([root], [check_tmp_invisible])
+        assert rules(findings) == ["tmp-invisible"] * 2
+        assert all(".tmp" in f.message for f in findings)
+
+    def test_suffix_filtered_listing_clean(self, tmp_path):
+        root = make_tree(tmp_path, {"repro/runtime/mq.py": """
+            import os
+
+            def claimable(tasks_dir):
+                return [n for n in os.listdir(tasks_dir)
+                        if n.endswith(".npz")]
+            """})
+        assert run_analysis([root], [check_tmp_invisible]) == []
+
+    def test_regex_and_parser_filters_accepted_as_evidence(self, tmp_path):
+        root = make_tree(tmp_path, {"repro/runtime/batchq.py": """
+            import os
+            import re
+
+            _RE = re.compile(r"chunk_(\\d+)\\.npz")
+
+            def sweep(job_dir):
+                return [n for n in os.listdir(job_dir)
+                        if _RE.fullmatch(n)]
+
+            def parse_task_name(name):
+                return name
+
+            def parsed(job_dir):
+                return [parse_task_name(n) for n in os.listdir(job_dir)]
+            """})
+        assert run_analysis([root], [check_tmp_invisible]) == []
+
+    def test_listing_outside_protocol_modules_clean(self, tmp_path):
+        root = make_tree(tmp_path, {"repro/train/ckpt.py": """
+            import os
+
+            def all_ckpts(d):
+                return os.listdir(d)
+            """})
+        assert run_analysis([root], [check_tmp_invisible]) == []
+
+    def test_lease_body_read_flagged_metadata_poll_clean(self, tmp_path):
+        root = make_tree(tmp_path, {"repro/runtime/mq.py": """
+            import os
+
+            def beat_bad(lease_path):
+                with open(lease_path) as f:          # body read!
+                    return float(f.read())
+
+            def beat_good(lease_path):
+                # metadata-only: the mtime IS the heartbeat
+                return os.path.getmtime(lease_path)
+
+            def load_task(npz_path):
+                with open(npz_path, "rb") as f:      # not a lease
+                    return f.read()
+            """})
+        findings = run_analysis([root], [check_tmp_invisible])
+        assert rules(findings) == ["tmp-invisible"]
+        assert "metadata-only" in findings[0].message
+
+    def test_allow_comment_suppresses(self, tmp_path):
+        root = make_tree(tmp_path, {"repro/runtime/mq.py": """
+            import os
+
+            def raw(d):
+                # lint: allow[tmp-invisible] debug dump of ALL entries
+                return os.listdir(d)
+            """})
+        assert run_analysis([root], [check_tmp_invisible]) == []
+
+
+# ---------------------------------------------------------------------------
+# allow inventory (--list-allows)
+# ---------------------------------------------------------------------------
+
+class TestListAllows:
+    def test_live_and_stale_allows_inventoried(self, tmp_path):
+        root = make_tree(tmp_path, {"repro/runtime/mq.py": """
+            def lease(path):
+                # lint: allow[atomic-write] mtime-only heartbeat
+                with open(path, "w") as f:
+                    f.write("hb")
+
+            def read(path):
+                # lint: allow[atomic-write] outlived its write
+                with open(path) as f:
+                    return f.read()
+            """})
+        allows = list_allows([root], [check_atomic_writes])
+        assert [(a.rule, a.stale) for a in allows] == [
+            ("atomic-write", False), ("atomic-write", True)]
+        assert allows[0].reason == "mtime-only heartbeat"
+        assert "STALE" in str(allows[1]) and "STALE" not in str(allows[0])
+
+    def test_docstring_mention_is_not_an_allow(self, tmp_path):
+        root = make_tree(tmp_path, {"repro/runtime/mq.py": '''
+            """Exceptions carry ``# lint: allow[atomic-write] reason``."""
+            x = 1
+            '''})
+        assert list_allows([root], [check_atomic_writes]) == []
+
+    def test_cli_prints_inventory_and_stale_warning(self, tmp_path):
+        root = make_tree(tmp_path, {"repro/runtime/mq.py": """
+            def read(path):
+                # lint: allow[atomic-write] nothing here triggers it
+                with open(path) as f:
+                    return f.read()
+            """})
+        proc = _run_cli(root, "--list-allows")
+        assert proc.returncode == 0          # stale allows are advisory
+        line = proc.stdout.strip().splitlines()[0]
+        assert "atomic-write" in line and "STALE" in line
+        assert "warning: stale allow" in proc.stderr
+
+    def test_repo_src_has_no_stale_allows(self):
+        stale = [a for a in list_allows([REPO_SRC]) if a.stale]
+        assert stale == [], "\n".join(str(a) for a in stale)
+
+
+# ---------------------------------------------------------------------------
 # CLI + tier-1 gate
 # ---------------------------------------------------------------------------
 
-def _run_cli(root):
+def _run_cli(root, *extra):
     env = dict(os.environ)
     env["PYTHONPATH"] = os.path.abspath(REPO_SRC) + os.pathsep + \
         env.get("PYTHONPATH", "")
     return subprocess.run(
-        [sys.executable, "-m", "repro.analysis", root],
+        [sys.executable, "-m", "repro.analysis", root, *extra],
         capture_output=True, text=True, env=env)
 
 

@@ -1,0 +1,178 @@
+"""The protocol model checker itself (repro.analysis.proto).
+
+A checker is only trusted if it can FAIL: alongside the fsmodel
+semantics (atomic replace, torn-tmp visibility, crash droppings) and
+the good-spec pass, every seeded-bad protocol variant must produce a
+counterexample — each one models a real implementation mistake the
+queue contract forbids (claim via copy-then-delete, release before
+publish, re-queue without a delivery bump, re-queue burning the retry
+budget, non-atomic publish, no post-close tombstone).
+"""
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro.analysis.proto import fsmodel as F
+from repro.analysis.proto.explorer import explore
+from repro.analysis.proto.spec import SpecConfig
+
+REPO_SRC = os.path.join(os.path.dirname(__file__), os.pardir, "src")
+
+
+# ---------------------------------------------------------------------------
+# fsmodel: the abstract shared filesystem
+# ---------------------------------------------------------------------------
+
+class TestFsModel:
+    def test_publish_is_atomic_no_tmp_ever_visible(self):
+        fs = F.Fs()
+        fs.publish("results/a.npz", ("res", 0))
+        assert fs.listdir("results") == ["a.npz"]
+        assert fs.read("results/a.npz") == ("res", 0)
+
+    def test_torn_write_leaves_only_the_tmp_dropping(self):
+        # crash mid-atomic-write: the final name NEVER appears, the tmp
+        # sibling DOES — pollers must see (and skip) it
+        fs = F.Fs()
+        fs.torn("results/a.npz")
+        assert not fs.exists("results/a.npz")
+        assert fs.listdir("results") == ["a.npz" + F.TMP_SUFFIX]
+        assert fs.read("results/a.npz" + F.TMP_SUFFIX) is F.TORN
+
+    def test_rename_moves_content_and_raises_when_lost(self):
+        fs = F.Fs()
+        fs.write_raw("tasks/t.npz", ("task",))
+        fs.rename("tasks/t.npz", "claimed/t.npz")
+        assert not fs.exists("tasks/t.npz")
+        assert fs.read("claimed/t.npz") == ("task",)
+        # the losing side of a claim race: source already gone
+        with pytest.raises(F.FsError):
+            fs.rename("tasks/t.npz", "claimed/t.npz")
+
+    def test_utime_freshens_and_raises_on_missing(self):
+        fs = F.Fs()
+        fs.write_raw("claimed/t.npz.lease", F.STALE)
+        fs.utime("claimed/t.npz.lease")
+        assert fs.read("claimed/t.npz.lease") == F.FRESH
+        fs.remove("claimed/t.npz.lease")
+        with pytest.raises(F.FsError):
+            fs.utime("claimed/t.npz.lease")
+
+    def test_freeze_excludes_the_clock(self):
+        # converging interleavings must merge even when they took
+        # different numbers of steps to converge
+        a, b = F.Fs(), F.Fs()
+        a.write_raw("x", 1)
+        b.write_raw("x", 1)
+        b.clock += 7
+        assert a.freeze() == b.freeze()
+        b.write_raw("y", 1)
+        assert a.freeze() != b.freeze()
+
+    def test_clone_is_independent(self):
+        fs = F.Fs()
+        fs.write_raw("x", 1)
+        fork = fs.clone()
+        fork.remove("x")
+        assert fs.exists("x") and not fork.exists("x")
+
+    def test_task_name_round_trip_shapes(self):
+        name = F.task_file("a", 0, 1, 0, 2)
+        assert name == "ra_j000000_c0001_t0_d2.npz"
+        assert F.result_file(name).endswith(".result.npz")
+        assert F.fail_file(name).endswith(".fail")
+        assert F.lease_file(name) == name + ".lease"
+
+
+# ---------------------------------------------------------------------------
+# explorer: seeded-bad protocols MUST produce counterexamples
+# ---------------------------------------------------------------------------
+
+BAD_VARIANTS = [
+    # (variant, cfg overrides, substring expected in the violation,
+    #  max acceptable counterexample length — BFS minimality guard)
+    ("copy_claim", {}, "claim not exclusive", 4),
+    ("release_before_publish", {}, "deadlock", 16),
+    ("requeue_no_bump", {}, "delivery", 8),
+    ("requeue_burns_retry", {}, "retry", 8),
+    ("torn_publish", {}, "malformed", 10),
+    ("no_tombstone", {"chunks": 1, "max_crashes": 0}, "leak", 24),
+]
+
+
+@pytest.mark.parametrize("variant,over,needle,max_len",
+                         BAD_VARIANTS, ids=[v[0] for v in BAD_VARIANTS])
+def test_seeded_bad_variant_produces_counterexample(
+        variant, over, needle, max_len):
+    cfg = SpecConfig(variant=variant, **over)
+    result = explore(cfg, max_depth=60, max_states=300_000)
+    assert not result.ok, f"{variant}: the checker failed to fail"
+    assert needle in result.violation, result.violation
+    assert 0 < len(result.schedule) <= max_len, \
+        f"BFS counterexample not minimal: {result.schedule}"
+    assert result.stop_reason == "violation"
+
+
+def test_good_spec_single_chunk_sweeps_clean_and_complete():
+    result = explore(SpecConfig(chunks=1), max_depth=80)
+    assert result.ok and result.complete, result.violation
+    assert result.states > 1_000        # crash injection actually explored
+    assert result.stop_reason == "exhausted"
+
+
+def test_bounded_sweep_reports_incomplete_not_clean():
+    # "no violation found" under a bound must never read as a full pass
+    result = explore(SpecConfig(), max_depth=80, max_states=50)
+    assert result.ok and not result.complete
+    assert result.stop_reason == "max_states"
+
+
+@pytest.mark.slow
+def test_good_spec_full_ci_bound_sweep():
+    """The verify-protocol CI lane's sweep: 2 workers x 2 chunks with a
+    delivery bump and a crash injection, to quiescence, complete."""
+    result = explore(SpecConfig(), max_depth=80, max_states=500_000)
+    assert result.ok and result.complete, result.violation
+    assert result.states > 100_000
+
+
+# ---------------------------------------------------------------------------
+# CLI exit codes
+# ---------------------------------------------------------------------------
+
+def _run_protocol_cli(*args):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath(REPO_SRC) + os.pathsep + \
+        env.get("PYTHONPATH", "")
+    return subprocess.run(
+        [sys.executable, "-m", "repro.analysis", "--protocol", *args],
+        capture_output=True, text=True, env=env)
+
+
+class TestProtocolCli:
+    def test_violation_exits_1_with_minimal_schedule(self):
+        proc = _run_protocol_cli("--variant", "copy_claim")
+        assert proc.returncode == 1
+        assert "VIOLATION" in proc.stdout
+        assert "minimal counterexample" in proc.stdout
+        assert "w0.claim_copy" in proc.stdout
+
+    def test_clean_complete_exits_0_and_prints_states(self):
+        proc = _run_protocol_cli("--tasks", "1")
+        assert proc.returncode == 0, proc.stdout + proc.stderr
+        assert "states=" in proc.stdout
+        assert "OK: all invariants hold" in proc.stdout
+
+    def test_bounded_sweep_exits_3(self):
+        proc = _run_protocol_cli("--max-states", "50")
+        assert proc.returncode == 3
+        assert "complete=False" in proc.stdout
+
+    def test_json_output_parses(self):
+        import json
+        proc = _run_protocol_cli("--tasks", "1", "--json")
+        out = json.loads(proc.stdout)
+        assert out["ok"] and out["complete"]
+        assert out["states"] > 1_000

@@ -1,0 +1,191 @@
+"""Model-derived adversarial schedules replayed against the REAL mq.
+
+The model checker (repro.analysis.proto) explores the broker contract
+over an abstraction; these tests drive its worst interleavings through
+the real ``runtime/mq.py`` code paths thread-by-thread with a
+step-barrier (``QueueBackend(step_hook=...)`` + the extracted worker
+protocol helpers), as deterministic tier-1 regressions. Every schedule
+here replays a counterexample trace the explorer produced against the
+pre-fix protocol (or the good-spec race the contract clause is about).
+"""
+import os
+import threading
+
+import numpy as np
+import pytest
+
+from repro.analysis.proto import schedules as sched
+from repro.analysis.proto.explorer import explore
+from repro.analysis.proto.replay import Replayer, StepGate, to_replay_steps
+from repro.analysis.proto.spec import SpecConfig
+from repro.fitness import hostsim
+from repro.runtime.mq import (CLAIMED_DIR, RESULTS_DIR, TASKS_DIR,
+                              QueueBackend, mq_result_path)
+
+SPEC = "repro.fitness.hostsim:sphere"
+
+
+def _ra_files(mq_dir):
+    out = []
+    for d in (TASKS_DIR, CLAIMED_DIR, RESULTS_DIR):
+        out += [f"{d}/{n}" for n in os.listdir(os.path.join(mq_dir, d))
+                if n.startswith("ra_")]
+    return sorted(out)
+
+
+class _Run:
+    """One gated manager evaluation: backend + manager thread + replayer.
+
+    ``lease_s=60`` means a lease can only go stale through the
+    schedule's explicit ``env.expire`` backdating — wall-clock time
+    cannot perturb the interleaving, which is what makes replay
+    deterministic."""
+
+    def __init__(self, tmp_path, n=4, num_workers=2, **kw):
+        self.gate = StepGate()
+        self.mq_dir = str(tmp_path)
+        kw.setdefault("keep_jobs", 4)
+        self.qb = QueueBackend(
+            fn_spec=SPEC, num_workers=num_workers, run_id="a",
+            mq_dir=self.mq_dir, lease_s=60.0, chunk_timeout_s=None,
+            max_retries=0, poll_interval_s=0.005,
+            step_hook=self.gate.step, **kw)
+        self.replayer = Replayer(self.mq_dir, hostsim.sphere, lease_s=60.0)
+        self.g = np.random.default_rng(0).uniform(
+            -1, 1, (n, 3)).astype(np.float32)
+        self.out = {}
+
+        def manager():
+            try:
+                self.out["fit"] = self.qb._host_eval(self.g)
+            except Exception as exc:          # surfaced by the test body
+                self.out["exc"] = exc
+            finally:
+                self.gate.finish()
+
+        self.thread = threading.Thread(target=manager, daemon=True)
+        self.thread.start()
+
+    def replay(self, steps):
+        self.replayer.run(self.gate, steps)
+
+    def finish(self):
+        """Free-run the manager to completion and return its fitness."""
+        self.gate.open()
+        self.thread.join(timeout=60)
+        assert not self.thread.is_alive(), "manager never finished"
+        if "exc" in self.out:
+            raise self.out["exc"]
+        return self.out["fit"]
+
+
+def test_stale_lease_requeue_first_result_wins(tmp_path):
+    """Delivery 1 answers a re-queued chunk; the superseded delivery 0
+    then lands a CONFLICTING value. First-result-wins: the accepted
+    fitness is delivery 1's, and the conflict is swept with the job."""
+    run = _Run(tmp_path)
+    run.replay(sched.stale_lease_requeue_conflicting_late_publish())
+    fit = run.finish()
+    np.testing.assert_allclose(
+        fit.reshape(hostsim.sphere(run.g).shape), hostsim.sphere(run.g),
+        rtol=1e-6)
+    assert not np.any(fit >= 1e8), "conflicting superseded result accepted"
+    assert run.qb.stats["lease_requeues"] == 1
+    assert run.qb.stats["retries"] == 0, \
+        "a lease re-queue burned the retry budget"
+    run.qb.close()
+    assert _ra_files(run.mq_dir) == []
+
+
+def test_crash_after_publish_result_accepted_orphan_reaped(tmp_path):
+    """A worker killed between publish and release: the chunk is not
+    lost (its published result is accepted) and the job epilogue GC
+    reaps the dead worker's orphan claim + lease."""
+    run = _Run(tmp_path)
+    run.replay(sched.crash_after_publish_orphan_claim())
+    fit = run.finish()
+    np.testing.assert_allclose(
+        fit.reshape(hostsim.sphere(run.g).shape), hostsim.sphere(run.g),
+        rtol=1e-6)
+    # the orphan claim/lease of job 0 are gone (non-active job sweep)
+    assert not [p for p in _ra_files(run.mq_dir)
+                if p.startswith(f"{CLAIMED_DIR}/")]
+    run.qb.close()
+    assert _ra_files(run.mq_dir) == []
+
+
+def test_torn_publish_never_read_and_janitor_reaps(tmp_path):
+    """A publisher killed mid-atomic-write leaves only the torn ``*.tmp``
+    sibling: the manager must never read it (delivery 1 answers the
+    chunk instead) and the janitor reaps the aged dropping."""
+    run = _Run(tmp_path)
+    run.replay(sched.torn_publish_invisible_then_reaped())
+    fit = run.finish()
+    np.testing.assert_allclose(
+        fit.reshape(hostsim.sphere(run.g).shape), hostsim.sphere(run.g),
+        rtol=1e-6)
+    assert run.qb.stats["lease_requeues"] == 1
+    run.qb.close()
+    leftovers = _ra_files(run.mq_dir)
+    assert not [p for p in leftovers if p.endswith(".tmp")], leftovers
+    assert leftovers == []
+
+
+def test_late_publish_after_close_tombstone_prevents_leak(tmp_path):
+    """THE model-checker counterexample (no_tombstone variant): a
+    superseded delivery publishes after ``close()`` already swept the
+    run's namespace. Without ``clean_if_run_closed`` the result leaks
+    forever in a shared broker dir; the tombstone removes it."""
+    run = _Run(tmp_path)
+    run.replay(sched.late_publish_after_close_prefix())
+    fit = run.finish()
+    np.testing.assert_allclose(
+        fit.reshape(hostsim.sphere(run.g).shape), hostsim.sphere(run.g),
+        rtol=1e-6)
+    run.qb.close()
+    assert _ra_files(run.mq_dir) == []           # close swept everything
+    # ...and only now does the slow worker land its superseded result
+    suffix = sched.late_publish_after_close_suffix()
+    run.replayer.worker_step(*suffix[0])         # w0.publish
+    leaked = mq_result_path(run.mq_dir, sched.tname(0))
+    assert os.path.exists(leaked), "setup: the late publish must land"
+    for step in suffix[1:]:                      # w0.release, w0.tombstone
+        run.replayer.worker_step(*step)
+    assert _ra_files(run.mq_dir) == [], \
+        "late publish after close leaked past the tombstone"
+
+
+def test_explorer_counterexample_translates_and_replays(tmp_path):
+    """Close the loop LIVE: run the explorer on the pre-fix protocol
+    (``no_tombstone``), translate its minimal counterexample schedule
+    with ``to_replay_steps``, and replay it against the real (fixed)
+    mq — the real protocol must survive the exact interleaving that
+    broke the unfixed model."""
+    cfg = SpecConfig(chunks=1, max_crashes=0, variant="no_tombstone")
+    result = explore(cfg, max_depth=60, max_states=200_000)
+    assert not result.ok, "seeded-bad variant must produce a counterexample"
+    assert "leak" in result.violation
+    labels = result.schedule
+    # split the trace at the close: the gated prefix replays against the
+    # live manager, the suffix is the post-close leak
+    cut = labels.index("m.close_dereg")
+    prefix = to_replay_steps(labels[:cut])
+    suffix = to_replay_steps(labels[cut:])
+    assert prefix and suffix, (prefix, suffix)
+    run = _Run(tmp_path, n=4, num_workers=1)     # 1 chunk, like the model
+    run.replay(prefix)
+    fit = run.finish()
+    np.testing.assert_allclose(
+        fit.reshape(hostsim.sphere(run.g).shape), hostsim.sphere(run.g),
+        rtol=1e-6)
+    run.qb.close()
+    for step in suffix:
+        if step[0] == "manager":
+            continue                             # manager is closed
+        if step[0] == "env":
+            run.replayer.env_step(step[1], step[2] if len(step) > 2
+                                  else None)
+        else:
+            run.replayer.worker_step(*step)
+    assert _ra_files(run.mq_dir) == [], \
+        "the explorer's leak schedule leaked against the real mq"
