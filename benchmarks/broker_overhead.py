@@ -24,6 +24,12 @@ heavy_work/(W/2). ``mq_fixed_min_fleet`` vs ``mq_autoscale_ramp`` puts a
 burst of work on a 1-worker floor: the ``FleetAutoscaler`` sees the
 queue depth, ramps the fleet to max_workers, and drains back to the
 floor afterwards.
+
+``mq_dispatch_sanitizer_absent`` vs ``mq_dispatch_sanitizer_loaded``
+pins the thread sanitizer's zero-cost-when-disabled seam: importing
+``repro.analysis.sanitize`` must leave the threading factories stock
+and the measured mq dispatch cost unchanged — instrumentation exists
+only inside an explicit ``instrumented()`` context.
 """
 from __future__ import annotations
 
@@ -237,6 +243,40 @@ def run(csv: bool = True):
     if csv:
         print(f"mq_tiny_chunks,{us:.0f},us_per_evaluate")
 
+    # sanitizer zero-cost when disabled: merely importing the thread
+    # sanitizer (repro.analysis.sanitize) must leave the dispatch path
+    # untouched — stock threading factories, no tracing branch anywhere
+    # in runtime/. Identical mq dispatch measured before and after the
+    # import; any delta between these two rows is timer noise.
+    san_w = 4
+    san_g = jnp.asarray(np.random.default_rng(4).uniform(
+        -1, 1, (32, 6)).astype(np.float32))
+
+    def _mq_dispatch_us():
+        backend = QueueBackend(
+            hostsim.sphere, num_workers=san_w,
+            worker_pool=LocalWorkerPool(num_workers=san_w, mode="thread",
+                                        fn=hostsim.sphere, poll_s=0.002),
+            chunk_timeout_s=60, poll_interval_s=0.002)
+        ev = jax.jit(lambda g, b=Broker(backend=backend): b.evaluate(g)[0])
+        jax.block_until_ready(ev(san_g))
+        us = _time(ev, san_g, reps=3)
+        backend.close()
+        return us
+
+    lock_before = threading.Lock
+    us = _mq_dispatch_us()
+    rows.append(("mq_dispatch_sanitizer_absent", us))
+    if csv:
+        print(f"mq_dispatch_sanitizer_absent,{us:.0f},us_per_evaluate")
+    import repro.analysis.sanitize              # noqa: F401 — loaded, NOT enabled
+    assert threading.Lock is lock_before, \
+        "importing the sanitizer must not patch threading"
+    us = _mq_dispatch_us()
+    rows.append(("mq_dispatch_sanitizer_loaded", us))
+    if csv:
+        print(f"mq_dispatch_sanitizer_loaded,{us:.0f},us_per_evaluate")
+
     # cost convergence WITHIN a generation: time from batch start to the
     # FIRST CostEMA observation on a skewed simulator. The batch backend
     # observes at collect time (≈ the full makespan); the mq backend
@@ -384,7 +424,7 @@ def run(csv: bool = True):
         t0 = time.perf_counter()
         backend._host_eval(g_heavy)
         wall = time.perf_counter() - t0
-        peak = scaler.stats["peak_workers"] if scaler else 1
+        peak = scaler.stats_snapshot()["peak_workers"] if scaler else 1
         bstats = ramp_broker.backend_stats()
         backend.close()
         shutil.rmtree(d, ignore_errors=True)

@@ -5,6 +5,7 @@
 #   scripts/ci.sh durations       # fast-lane tests + the 15 slowest listed
 #   scripts/ci.sh lint            # protocol linter + ruff, no test suites
 #   scripts/ci.sh verify-protocol # broker-contract model check, no tests
+#   scripts/ci.sh sanitize        # dynamic thread sanitizer, no tests
 #
 # The verify-protocol lane model-checks the broker queue contract
 # (src/repro/analysis/proto/): a bounded, deterministic (BFS order,
@@ -19,6 +20,19 @@
 # test in tests/test_proto_model.py covers the full CI-bound sweep and
 # tests/test_proto_replay.py replays model counterexample schedules
 # against the real mq.py in tier-1 (covered by the durations lane).
+#
+# The sanitize lane runs the dynamic thread sanitizer
+# (src/repro/analysis/sanitize/): real runtime scenarios — queue
+# dispatch, multitenant fleet sharing, the autoscaler, CostEMA, host
+# pool, batch spool — under instrumented threading with hybrid
+# lockset + happens-before race detection, a FIXED seed set (base seed
+# 0, 3 PCT interleavings per schedulable scenario; a racy schedule
+# replays bit-identically from its seed), a per-schedule wall cap
+# (exit 3 when truncated, never a silent pass), and per-site OSError
+# fault injection asserting the model checker's invariants on a live
+# broker tree. It prints the schedules explored and runs in the fast
+# lane right after verify-protocol: a race regression in runtime/
+# fails in seconds, before any test suite starts.
 #
 # The lint lane runs the protocol linter (`python -m repro.analysis src`
 # — atomic-write discipline, worker import purity, trace purity, lock
@@ -85,18 +99,25 @@ run_verify_protocol() {
         --workers 2 --tasks 2 --wall-time 120
 }
 
+run_sanitize() {
+    python -m repro.analysis --sanitize \
+        --seed 0 --schedules 3 --wall-time 30 --fault-inject
+}
+
 LANE="${1:-full}"
 case "$LANE" in
     lint)      run_lint ;;
     verify-protocol) run_verify_protocol ;;
+    sanitize)  run_sanitize ;;
     fast)      run_lint
                run_verify_protocol
+               run_sanitize
                exec python -m pytest -x -q -m "not slow" \
                     tests/backend_conformance.py tests ;;
     durations) exec python -m pytest -q -m "not slow" --durations=15 \
                     tests/backend_conformance.py tests ;;
     full)      exec python -m pytest -x -q ;;
     *)         echo "unknown lane: $LANE" >&2
-               echo "want: fast|durations|full|lint|verify-protocol" >&2
+               echo "want: fast|durations|full|lint|verify-protocol|sanitize" >&2
                exit 2 ;;
 esac

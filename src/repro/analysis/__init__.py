@@ -21,8 +21,10 @@ zero-findings test:
   call sites must not touch ``time.*`` / ``random.*`` / file IO /
   ``subprocess`` except through ``jax.pure_callback`` / ``io_callback``.
 * ``concurrency`` (:mod:`.concurrency`) — ``.acquire()`` outside
-  ``with``, blocking calls while holding a lock, and bare ``except:``
-  inside retry/claim loops.
+  ``with``, blocking calls while holding a lock, bare ``except:``
+  inside retry/claim loops, and ``self`` attributes mutated both by a
+  ``threading.Thread(target=...)`` body and its spawning object with
+  no lock evidence on either side (``thread-shared-mutation``).
 * ``tmp-invisible`` (:mod:`.tmpvis`) — directory listings over broker
   dirs must filter ``*.tmp`` crash droppings (suffix guard, regex
   match, or ``parse_task_name``) before acting on entries, and lease
@@ -32,7 +34,12 @@ Beyond the linter, :mod:`.proto` holds the protocol MODEL CHECKER — an
 explicit-state explorer of the broker queue contract
 (``python -m repro.analysis --protocol``) whose counterexample
 schedules replay against the real ``runtime/mq.py`` in tier-1
-(``tests/test_proto_replay.py``).
+(``tests/test_proto_replay.py``) — and :mod:`.sanitize` holds the
+dynamic THREAD SANITIZER (``python -m repro.analysis --sanitize``):
+lockset + happens-before race detection over instrumented runs of the
+real runtime, seed-deterministic PCT schedule fuzzing, and per-site FS
+fault injection asserting the model checker's invariants on a live
+broker tree.
 
 Findings print as ``file:line rule-id message``. Deliberate exceptions
 carry an inline escape hatch ON the flagged line (or the line above)::

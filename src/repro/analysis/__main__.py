@@ -1,6 +1,7 @@
-"""CLI: ``python -m repro.analysis [paths...] [--protocol|--list-allows]``.
+"""CLI: ``python -m repro.analysis [paths...]
+[--protocol|--sanitize|--list-allows]``.
 
-Three modes, one entrypoint:
+Four modes, one entrypoint:
 
 * default (lint): run every protocol checker over the given
   files/directories (default ``src``) and print findings as
@@ -20,6 +21,14 @@ Three modes, one entrypoint:
   counterexample schedule. Exit 0 = clean sweep, 1 = invariant
   violation, 3 = clean but a bound truncated the sweep (never
   conflated with a real pass).
+* ``--sanitize``: run the dynamic thread sanitizer
+  (:mod:`repro.analysis.sanitize`) — real runtime scenarios under
+  instrumented threading with hybrid lockset + happens-before race
+  detection, ``--schedules N`` seed-deterministic PCT interleavings
+  per scenario starting at ``--seed``, and (``--fault-inject``)
+  per-site ``OSError`` injection on a live broker tree. Same exit
+  codes as ``--protocol``: 0 clean, 1 races/violations, 3 clean but
+  wall-capped.
 """
 from __future__ import annotations
 
@@ -84,6 +93,16 @@ def _protocol(args) -> int:
     return EXIT_CLEAN
 
 
+def _sanitize(args) -> int:
+    # local import: plain lint runs should not pay for numpy + the
+    # runtime modules the scenarios exercise
+    from repro.analysis.sanitize.scenarios import run_sanitize
+
+    return run_sanitize(seed=args.seed, schedules=args.schedules,
+                        wall_s=args.wall_time or 30.0,
+                        fault_inject=args.fault_inject)
+
+
 def build_parser() -> argparse.ArgumentParser:
     from repro.analysis.proto.spec import VARIANTS
 
@@ -100,6 +119,19 @@ def build_parser() -> argparse.ArgumentParser:
     mode.add_argument("--protocol", action="store_true",
                       help="model-check the broker queue contract "
                            "instead of linting")
+    mode.add_argument("--sanitize", action="store_true",
+                      help="run the dynamic thread sanitizer over the "
+                           "real runtime instead of linting")
+    s = p.add_argument_group("sanitizer options")
+    s.add_argument("--seed", type=int, default=0, metavar="S",
+                   help="base schedule seed (default 0); schedule k of "
+                        "a scenario runs under seed S+k")
+    s.add_argument("--schedules", type=int, default=3, metavar="N",
+                   help="PCT interleavings per schedulable scenario "
+                        "(default 3)")
+    s.add_argument("--fault-inject", action="store_true",
+                   help="additionally sweep per-site OSError injection "
+                        "over a live broker tree")
     g = p.add_argument_group("protocol sweep bounds")
     g.add_argument("--workers", type=int, default=2, metavar="W")
     g.add_argument("--tasks", type=int, default=2, metavar="M",
@@ -114,7 +146,9 @@ def build_parser() -> argparse.ArgumentParser:
                    help="crash injections per sweep (default 1)")
     g.add_argument("--max-states", type=int, default=500_000)
     g.add_argument("--wall-time", type=float, default=None, metavar="S",
-                   help="abort the sweep after S seconds (exit 3)")
+                   help="abort the sweep after S seconds (exit 3); "
+                        "under --sanitize, per-schedule wall cap "
+                        "(default 30)")
     g.add_argument("--variant", default="good", choices=VARIANTS,
                    help="protocol variant: 'good' is the real contract; "
                         "the others are seeded-bad mutants that must "
@@ -133,6 +167,8 @@ def main(argv=None) -> int:
     args = build_parser().parse_args(argv)
     if args.protocol:
         return _protocol(args)
+    if args.sanitize:
+        return _sanitize(args)
     if args.list_allows:
         return _allows(args.paths)
     return _lint(args.paths)

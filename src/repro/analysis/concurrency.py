@@ -17,6 +17,14 @@ structurally prone to:
   retry/claim loops are exactly where a bare except eats
   ``KeyboardInterrupt``/``SystemExit`` and turns a dead worker into a
   spinning one; catch ``Exception`` (or narrower).
+* ``thread-shared-mutation`` — a ``self.X`` attribute mutated inside a
+  ``threading.Thread(target=...)`` function AND mutated by the
+  spawning object's other methods, with no lock evidence (an enclosing
+  ``with <lock-ish>:``) on both sides. This is the static twin of the
+  dynamic sanitizer's lockset check (``repro.analysis.sanitize``): the
+  autoscaler's tick bookkeeping vs its owner's reads was exactly this
+  shape. ``__init__`` is exempt as the spawning side (it completes
+  before any thread it could hand the object to exists).
 """
 from __future__ import annotations
 
@@ -27,8 +35,15 @@ from repro.analysis.core import Finding, build_aliases, canonical_call
 RULE_ACQUIRE = "lock-acquire"
 RULE_BLOCKING = "lock-blocking-call"
 RULE_BARE_EXCEPT = "bare-except"
+RULE_THREAD_SHARED = "thread-shared-mutation"
 
 _LOCKISH_TOKENS = ("lock", "cond", "mutex", "sem")
+
+#: method calls that mutate their receiver (list/dict/set containers)
+_MUTATOR_METHODS = frozenset({
+    "append", "extend", "insert", "remove", "pop", "clear", "update",
+    "setdefault", "add", "discard",
+})
 
 _BLOCKING_CANONICAL = frozenset({
     "time.sleep",
@@ -72,6 +87,9 @@ def _check_lock_body(sf, aliases, with_node, lock_items, findings) -> None:
                 # str-literal .join is string concat, not thread join
                 if isinstance(receiver, ast.Constant):
                     continue
+                # path concatenation, not a thread join
+                if canonical_call(node, aliases) == "os.path.join":
+                    continue
                 # cond.wait()/wait_for() on the held condition is the
                 # sanctioned pattern: Condition.wait releases the lock
                 if (node.func.attr in ("wait", "wait_for")
@@ -82,6 +100,152 @@ def _check_lock_body(sf, aliases, with_node, lock_items, findings) -> None:
                     f".{node.func.attr}(...) while holding "
                     f"{sorted(lock_srcs)[0]!r}; blocking under a lock "
                     f"stalls every other claimant — release first"))
+
+
+def _self_attr_of(expr):
+    """``self.X`` (or a subscript of it) being stored into → ``X``."""
+    while isinstance(expr, ast.Subscript):
+        expr = expr.value
+    if (isinstance(expr, ast.Attribute)
+            and isinstance(expr.value, ast.Name)
+            and expr.value.id == "self"):
+        return expr.attr
+    return None
+
+
+def _self_attr_mutations(sf, func):
+    """``{attr: [(lineno, locked), ...]}`` for every ``self.X``
+    mutation in ``func``'s body: assignments, augmented assignments,
+    subscript stores, and container-mutator calls. ``locked`` means an
+    enclosing ``with <lock-ish>:``."""
+    out: dict = {}
+
+    def note(attr, lineno, locked):
+        if attr is not None:
+            out.setdefault(attr, []).append((lineno, locked))
+
+    def walk(node, locked):
+        if isinstance(node, ast.With) and _lockish_items(sf, node):
+            locked = True
+        elif isinstance(node, ast.Assign):
+            for tgt in node.targets:
+                for t in (tgt.elts if isinstance(
+                        tgt, (ast.Tuple, ast.List)) else (tgt,)):
+                    note(_self_attr_of(t), node.lineno, locked)
+        elif isinstance(node, ast.AugAssign):
+            note(_self_attr_of(node.target), node.lineno, locked)
+        elif (isinstance(node, ast.Call)
+                and isinstance(node.func, ast.Attribute)
+                and node.func.attr in _MUTATOR_METHODS):
+            note(_self_attr_of(node.func.value), node.lineno, locked)
+        for child in ast.iter_child_nodes(node):
+            walk(child, locked)
+
+    for stmt in func.body:
+        walk(stmt, False)
+    return out
+
+
+def _thread_targets(sf, aliases, func):
+    """Names/attrs passed as ``target=`` to ``threading.Thread`` inside
+    ``func``: ``("method", name)`` for ``self.name``, ``("name", name)``
+    for a bare name."""
+    targets = []
+    for node in ast.walk(func):
+        if not isinstance(node, ast.Call):
+            continue
+        if canonical_call(node, aliases) != "threading.Thread":
+            continue
+        for kw in node.keywords:
+            if kw.arg != "target":
+                continue
+            v = kw.value
+            if (isinstance(v, ast.Attribute)
+                    and isinstance(v.value, ast.Name)
+                    and v.value.id == "self"):
+                targets.append(("method", v.attr, node.lineno))
+            elif isinstance(v, ast.Name):
+                targets.append(("name", v.id, node.lineno))
+    return targets
+
+
+def _method_closure(methods, entry):
+    """``entry`` plus every method transitively reached via
+    ``self.Y(...)`` calls — the code the spawned thread runs."""
+    seen = set()
+    todo = [entry]
+    while todo:
+        name = todo.pop()
+        if name in seen or name not in methods:
+            continue
+        seen.add(name)
+        for node in ast.walk(methods[name]):
+            if (isinstance(node, ast.Call)
+                    and isinstance(node.func, ast.Attribute)
+                    and isinstance(node.func.value, ast.Name)
+                    and node.func.value.id == "self"):
+                todo.append(node.func.attr)
+    return seen
+
+
+def _check_thread_shared(sf, aliases, cls, findings):
+    methods = {n.name: n for n in cls.body
+               if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))}
+    for spawner_name, spawner in methods.items():
+        for kind, tname, _spawn_line in _thread_targets(sf, aliases,
+                                                        spawner):
+            if kind == "method":
+                if tname not in methods:
+                    continue
+                closure = _method_closure(methods, tname)
+                closure_muts: dict = {}
+                for m in closure:
+                    for attr, sites in _self_attr_mutations(
+                            sf, methods[m]).items():
+                        closure_muts.setdefault(attr, []).extend(sites)
+                other = [m for m in methods
+                         if m not in closure and m != "__init__"]
+                other_muts: dict = {}
+                for m in other:
+                    for attr, sites in _self_attr_mutations(
+                            sf, methods[m]).items():
+                        other_muts.setdefault(attr, []).extend(sites)
+            else:
+                # a nested def in the spawning method: the spawn side is
+                # the rest of that method; module-level targets (e.g.
+                # worker_loop) share through the FS, not through self
+                nested = next((n for n in ast.walk(spawner)
+                               if isinstance(n, ast.FunctionDef)
+                               and n.name == tname), None)
+                if nested is None:
+                    continue
+                closure_muts = _self_attr_mutations(sf, nested)
+                pruned = ast.FunctionDef(
+                    name=spawner.name, args=spawner.args,
+                    body=[s for s in spawner.body if s is not nested],
+                    decorator_list=[], returns=None)
+                # mutations before the Thread object even exists cannot
+                # race with it — only the tail of the spawner competes
+                other_muts = {
+                    attr: kept for attr, sites in
+                    _self_attr_mutations(sf, pruned).items()
+                    if (kept := [(ln, lk) for ln, lk in sites
+                                 if ln > _spawn_line])}
+            for attr, sites in closure_muts.items():
+                bare = [ln for ln, locked in sites if not locked]
+                if not bare:
+                    continue
+                peer = [ln for ln, locked in other_muts.get(attr, ())
+                        if not locked]
+                if not peer:
+                    continue
+                findings.append(Finding(
+                    sf.path, bare[0], RULE_THREAD_SHARED,
+                    f"self.{attr} is mutated by the "
+                    f"threading.Thread(target={tname!r}) body (line "
+                    f"{bare[0]}) and by the spawning object (line "
+                    f"{peer[0]}) with no common lock — guard both "
+                    f"sides with one lock"))
 
 
 def check_concurrency(universe):
@@ -104,6 +268,8 @@ def check_concurrency(universe):
                 if lock_items:
                     _check_lock_body(sf, aliases, node, lock_items,
                                      findings)
+            if isinstance(node, ast.ClassDef):
+                _check_thread_shared(sf, aliases, node, findings)
             if isinstance(node, ast.ExceptHandler) and node.type is None:
                 if loop_depth > 0:
                     findings.append(Finding(

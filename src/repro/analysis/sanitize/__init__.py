@@ -1,0 +1,31 @@
+"""Thread sanitizer for the dispatch runtime — the dynamic third of
+the analysis trilogy (linter: AST, :mod:`repro.analysis` checkers;
+model checker: abstract FS, :mod:`repro.analysis.proto`; sanitizer:
+the REAL implementation's threads).
+
+* :mod:`.instrument` — tracing wrappers for ``threading`` primitives
+  plus shared-object registration; strictly zero-cost when disabled
+  (nothing in ``runtime/`` imports any of this).
+* :mod:`.tsan` — hybrid vector-clock happens-before + lockset race
+  detection over the event stream; reports ``file:line ↔ file:line``
+  with thread stacks and lockset evidence.
+* :mod:`.schedfuzz` — PCT-style priority scheduler serializing
+  instrumented threads at yield points; deterministic per seed, so a
+  racy schedule replays from its seed.
+* :mod:`.faultinject` — per-site ``OSError`` injection at the
+  fsatomic/os mutation points of a live broker tree, asserting the
+  model checker's invariants on the real FS afterward.
+* :mod:`.scenarios` — real-runtime workloads (dispatch, multitenant,
+  autoscaler, CostEMA, host pool, batch spool) the CLI fans out
+  across the seed set: ``python -m repro.analysis --sanitize``.
+"""
+from repro.analysis.sanitize.instrument import (Tracer, instrumented,
+                                                track_attrs, track_dict,
+                                                track_list)
+from repro.analysis.sanitize.schedfuzz import PCTScheduler
+from repro.analysis.sanitize.tsan import Race, detect_races, format_report
+
+__all__ = [
+    "Tracer", "instrumented", "track_attrs", "track_dict", "track_list",
+    "PCTScheduler", "Race", "detect_races", "format_report",
+]

@@ -1,0 +1,230 @@
+"""Systematic FS fault injection against the real broker tree.
+
+A recording pass runs the workload once and notes every distinct
+``op@file:line`` call site that reached the atomic-publish helper
+(:func:`repro.runtime.fsatomic._publish`) or a broker-directory
+``os.replace``/``os.rename``/``os.remove``/``os.utime``. Then one pass
+per site re-runs the workload with an ``OSError`` injected at that
+site's FIRST hit (a ``_publish`` injection additionally leaves a torn
+``*.tmp`` sibling behind — the crashed-mid-write case the atomic
+protocol exists for). After every pass, the model checker's invariants
+are asserted on the real tree:
+
+* **no torn publication** — after a zero-age janitor sweep, no
+  ``*.tmp`` survives anywhere, and every file in ``results/`` is
+  complete (``np.load``-able with ``fitness``+``duration``, or a
+  readable ``.fail`` text);
+* **claim released-or-published** — no task name is simultaneously in
+  ``tasks/`` and ``claimed/``, and no orphan lease survives the sweep;
+* **locks released** — the tracer's acquire/release ledger balances.
+
+Faults are injected once per site (at-least-once delivery plus the
+retry budget must absorb a single fault), so the workload's own
+``close()`` path runs clean afterwards.
+"""
+from __future__ import annotations
+
+import os
+import sys
+from contextlib import contextmanager
+from dataclasses import dataclass, field
+from typing import Callable, List, Optional
+
+import numpy as np
+
+from repro.runtime import fsatomic
+
+_REAL_PUBLISH = fsatomic._publish
+_REAL_OS = {name: getattr(os, name)
+            for name in ("replace", "rename", "remove", "utime")}
+
+
+def _caller_site() -> str:
+    """First frame outside this module and fsatomic: the runtime call
+    site being exercised."""
+    skip = (__file__, fsatomic.__file__)
+    f = sys._getframe(2)
+    while f is not None and f.f_code.co_filename in skip:
+        f = f.f_back
+    if f is None:
+        return "?:0"
+    path = f.f_code.co_filename
+    try:
+        rel = os.path.relpath(path)
+        path = path if rel.startswith("..") else rel
+    except ValueError:
+        pass
+    return f"{path}:{f.f_lineno}"
+
+
+class FaultInjector:
+    """Path-filtered interception of the broker's FS mutation points.
+
+    ``mode``: ``"record"`` collects sites; ``"inject"`` raises at the
+    first hit of ``armed`` and passes everything else through.
+    """
+
+    def __init__(self, root: str):
+        self.root = os.path.abspath(root)
+        self.mode = "record"
+        self.sites: List[str] = []
+        self.armed: Optional[str] = None
+        self.fired: Optional[str] = None
+
+    def arm(self, site: str):
+        self.mode = "inject"
+        self.armed = site
+        self.fired = None
+
+    def _under_root(self, path) -> bool:
+        try:
+            return os.path.abspath(os.fspath(path)).startswith(self.root)
+        except TypeError:
+            return False
+
+    def _hit(self, op: str, site: str) -> bool:
+        """Record or decide to inject. True → the caller must raise."""
+        tag = f"{op}@{site}"
+        if self.mode == "record":
+            if tag not in self.sites:
+                self.sites.append(tag)
+            return False
+        if tag == self.armed and self.fired is None:
+            self.fired = tag
+            return True
+        return False
+
+    @contextmanager
+    def patched(self):
+        def publish(path, mode, write):
+            if self._under_root(path) and self._hit(
+                    "publish", _caller_site()):
+                # the crashed-mid-write case: torn tmp sibling left on
+                # disk, target never appears
+                with open(path + fsatomic.TMP_SUFFIX, "wb") as f:
+                    f.write(b"torn")
+                raise OSError(f"injected fault: publish {path}")
+            return _REAL_PUBLISH(path, mode, write)
+
+        def make_os_wrapper(name, real):
+            def wrapper(path, *a, **kw):
+                if self._under_root(path) and self._hit(
+                        name, _caller_site()):
+                    raise OSError(f"injected fault: {name} {path}")
+                return real(path, *a, **kw)
+            return wrapper
+
+        fsatomic._publish = publish
+        for name in _REAL_OS:
+            setattr(os, name, make_os_wrapper(name, _REAL_OS[name]))
+        try:
+            yield self
+        finally:
+            fsatomic._publish = _REAL_PUBLISH
+            for name, real in _REAL_OS.items():
+                setattr(os, name, real)
+
+
+# ---------------------------------------------------------------------------
+# Tree invariants (the model checker's, asserted on the real FS)
+# ---------------------------------------------------------------------------
+
+def check_tree(mq_dir: str) -> List[str]:
+    """Return every invariant violation found in a broker directory
+    (empty list = clean). Runs a zero-age janitor sweep first — exactly
+    what an idle worker would eventually do."""
+    from repro.runtime.mq import (CLAIMED_DIR, RESULTS_DIR, TASKS_DIR,
+                                  janitor_sweep)
+    problems: List[str] = []
+    # negative age: sub-second mtime granularity must not let
+    # just-written garbage outlive the "everything is stale" sweep
+    janitor_sweep(mq_dir, max_age_s=-1.0)
+    for dirpath, _dirnames, filenames in os.walk(mq_dir):
+        for name in filenames:
+            if name.endswith(fsatomic.TMP_SUFFIX):
+                problems.append(
+                    f"torn tmp survived the sweep: "
+                    f"{os.path.join(dirpath, name)}")
+    results = os.path.join(mq_dir, RESULTS_DIR)
+    if os.path.isdir(results):
+        for name in os.listdir(results):
+            path = os.path.join(results, name)
+            try:
+                if name.endswith(".npz"):
+                    with np.load(path) as d:
+                        if ("fitness" not in d or "duration" not in d):
+                            problems.append(
+                                f"incomplete result published: {path}")
+                elif name.endswith(".fail"):
+                    with open(path) as f:
+                        f.read()
+            except Exception as exc:
+                problems.append(f"torn publication {path}: {exc!r}")
+    try:
+        tasks = set(os.listdir(os.path.join(mq_dir, TASKS_DIR)))
+        claimed = os.listdir(os.path.join(mq_dir, CLAIMED_DIR))
+    except OSError:
+        tasks, claimed = set(), []
+    for name in claimed:
+        if name in tasks:
+            problems.append(
+                f"claim atomicity broken: {name} in tasks/ AND claimed/")
+        if name.endswith(".lease") and name[:-len(".lease")] not in claimed:
+            problems.append(f"orphan lease survived the sweep: {name}")
+    return problems
+
+
+@dataclass
+class SweepResult:
+    sites: List[str] = field(default_factory=list)
+    passes: int = 0
+    problems: List[str] = field(default_factory=list)
+
+    @property
+    def ok(self) -> bool:
+        return not self.problems
+
+
+def fault_sweep(scenario: Callable[[str, "FaultInjector"], None],
+                make_dir: Callable[[], str],
+                log: Optional[Callable[[str], None]] = None) -> SweepResult:
+    """Drive ``scenario(mq_dir, injector)`` once per reachable fault
+    site. The scenario must run a full workload against ``mq_dir``
+    (enqueue → evaluate → close); it may raise — a fault that exhausts
+    the retry budget is a legal outcome, a corrupt tree or a held lock
+    is not."""
+    from repro.analysis.sanitize.instrument import Tracer, instrumented
+
+    result = SweepResult()
+    root = make_dir()
+    inj = FaultInjector(root)
+    with inj.patched():
+        scenario(root, inj)                      # recording pass
+    result.sites = list(inj.sites)
+    baseline = check_tree(root)
+    if baseline:
+        result.problems += [f"[no-fault] {p}" for p in baseline]
+
+    for site in result.sites:
+        root = make_dir()
+        inj = FaultInjector(root)
+        inj.arm(site)
+        tracer = Tracer()
+        err = None
+        try:
+            with inj.patched(), instrumented(tracer):
+                scenario(root, inj)
+        except Exception as exc:                 # a legal outcome
+            err = exc
+        result.passes += 1
+        for p in check_tree(root):
+            result.problems.append(f"[{site}] {p}")
+        held = tracer.outstanding_locks()
+        if held:
+            result.problems.append(
+                f"[{site}] locks still held after the run: {held}")
+        if log is not None:
+            status = "raised " + type(err).__name__ if err else "clean"
+            fired = "fired" if inj.fired else "not reached"
+            log(f"fault {site}: {fired}, scenario {status}")
+    return result

@@ -1,0 +1,619 @@
+"""Tracing instrumentation for the dispatch runtime's threads.
+
+The seam: nothing in ``runtime/`` imports this module. Inside an
+:func:`instrumented` context the ``threading`` factory functions
+(``Lock``/``RLock``/``Condition``/``Event``/``Thread``) and
+``time.sleep`` are rebound to tracer-aware wrappers, so every primitive
+a scenario constructs *inside the context* records acquire/release/
+wait/notify/fork/join events into a :class:`Tracer`; shared runtime
+objects are additionally registered by hand (:func:`track_dict`,
+:func:`track_list`, :func:`track_attrs`) so their reads and writes land
+in the same event stream with the lockset held at the moment of access.
+Outside the context the runtime pays strictly nothing — the factories
+are the stock ones and no runtime module carries a single tracing
+branch (``benchmarks/broker_overhead.py`` pins this).
+
+Threading-internal primitives (``Thread._started`` et al.) are created
+from ``threading.py`` frames and deliberately get REAL primitives —
+their bookkeeping would otherwise pollute the trace with events whose
+order depends on OS thread startup timing, destroying the
+seed-determinism the schedule fuzzer (:mod:`.schedfuzz`) guarantees.
+
+Event stream consumers: :mod:`.tsan` (vector-clock + lockset race
+detection) and :mod:`.faultinject` (locks-released postcondition).
+"""
+from __future__ import annotations
+
+import itertools
+import os
+import sys
+import threading
+import time
+from contextlib import contextmanager
+from dataclasses import dataclass
+from typing import Dict, List, Optional
+
+# the stock primitives, captured before any patching can happen
+_REAL_LOCK = threading.Lock
+_REAL_RLOCK = threading.RLock
+_REAL_CONDITION = threading.Condition
+_REAL_EVENT = threading.Event
+_REAL_THREAD = threading.Thread
+_REAL_SLEEP = time.sleep
+
+_THREADING_FILE = threading.__file__
+_SELF_FILE = __file__
+
+#: event kinds that are pure bookkeeping (no scheduler yield): the
+#: surrounding wrapper already sits at a schedule point of its own
+_NO_YIELD_KINDS = frozenset({"begin", "end", "join", "wakeup"})
+
+
+@dataclass(frozen=True)
+class Event:
+    """One traced operation. ``obj`` names the lock/variable/child-tid
+    the operation touched; ``locks`` is the caller's lockset at that
+    moment; ``stack`` is a short app-frame backtrace (reads/writes
+    only — that is what race reports print)."""
+    seq: int
+    tid: str
+    kind: str            # acquire release read write fork join
+    obj: str             # notify wakeup begin end
+    site: str
+    locks: frozenset
+    stack: tuple
+
+
+def _relpath(path: str) -> str:
+    try:
+        rel = os.path.relpath(path)
+    except ValueError:
+        return path
+    return path if rel.startswith("..") else rel
+
+
+def _app_frames(limit: int = 4) -> List[str]:
+    """Innermost app frames as ``file:line``, skipping this module and
+    threading internals."""
+    out: List[str] = []
+    f = sys._getframe(1)
+    while f is not None and len(out) < limit:
+        fname = f.f_code.co_filename
+        if fname not in (_SELF_FILE, _THREADING_FILE):
+            out.append(f"{_relpath(fname)}:{f.f_lineno}")
+        f = f.f_back
+    return out
+
+
+def _caller_in_threading() -> bool:
+    """True when the factory call came from threading.py itself
+    (Thread._started and friends) — those must stay real."""
+    f = sys._getframe(2)
+    return f is not None and f.f_code.co_filename == _THREADING_FILE
+
+
+class Tracer:
+    """Append-only event log plus per-thread lockset bookkeeping.
+
+    Logical thread ids (``T0``, ``T1``, ...) are assigned in fork
+    order — stable across runs of a deterministic schedule, unlike OS
+    idents (which the kernel reuses) or default ``Thread`` names
+    (which increment process-globally)."""
+
+    def __init__(self, stack_depth: int = 4):
+        self.events: List[Event] = []
+        self.stack_depth = stack_depth
+        self.scheduler = None            # set by instrumented()
+        self.closed = False
+        self._elk = _REAL_LOCK()
+        self._tls = threading.local()
+        self._ident_map: Dict[int, str] = {}
+        self._tid_seq = itertools.count()
+        self._obj_seq = itertools.count()
+
+    # -- thread identity ------------------------------------------------
+    def alloc_tid(self) -> str:
+        with self._elk:
+            return f"T{next(self._tid_seq)}"
+
+    def bind_current(self, tid: str) -> str:
+        with self._elk:
+            self._ident_map[threading.get_ident()] = tid
+        return tid
+
+    def bind_main(self) -> str:
+        return self.bind_current(self.alloc_tid())
+
+    def current_tid(self) -> Optional[str]:
+        with self._elk:
+            return self._ident_map.get(threading.get_ident())
+
+    def next_obj_idx(self) -> int:
+        with self._elk:
+            return next(self._obj_seq)
+
+    # -- lockset --------------------------------------------------------
+    def _held(self) -> list:
+        held = getattr(self._tls, "held", None)
+        if held is None:
+            held = self._tls.held = []
+        return held
+
+    def lockset(self) -> frozenset:
+        return frozenset(self._held())
+
+    def outstanding_locks(self) -> Dict[str, int]:
+        """Locks with more acquires than releases over the whole trace
+        — the faultinject postcondition asserts this is empty."""
+        counts: Dict[str, int] = {}
+        for ev in self.events:
+            if ev.kind == "acquire":
+                counts[ev.obj] = counts.get(ev.obj, 0) + 1
+            elif ev.kind == "release":
+                counts[ev.obj] = counts.get(ev.obj, 0) - 1
+        return {k: v for k, v in counts.items() if v != 0}
+
+    # -- recording ------------------------------------------------------
+    def record(self, kind: str, obj: str, with_stack: bool = False):
+        if self.closed:
+            return
+        sched = self.scheduler
+        if sched is not None and kind not in _NO_YIELD_KINDS:
+            tid = self.current_tid()
+            if tid is not None:
+                sched.yield_point(tid)
+        frames = _app_frames(self.stack_depth)
+        site = frames[0] if frames else "?:0"
+        stack = tuple(frames) if with_stack else ()
+        tid = self.current_tid() or "T?"
+        with self._elk:
+            self.events.append(Event(len(self.events), tid, kind, obj,
+                                     site, self.lockset(), stack))
+
+    def on_acquire(self, name: str):
+        self._held().append(name)
+        self.record("acquire", name)
+
+    def on_release(self, name: str):
+        held = self._held()
+        if name in held:
+            held.remove(name)
+        self.record("release", name)
+
+    def on_read(self, var: str):
+        self.record("read", var, with_stack=True)
+
+    def on_write(self, var: str):
+        self.record("write", var, with_stack=True)
+
+    # -- the proto/replay seam, reused ---------------------------------
+    def step_hook(self, role: str, action: str):
+        """Drop-in for ``QueueBackend(step_hook=...)``: the manager's
+        pump sweep becomes a schedule point, exactly the barrier the
+        protocol replay harness drives (analysis/proto/replay)."""
+        self.record("read", f"step:{role}.{action}")
+
+
+# ---------------------------------------------------------------------------
+# Instrumented primitives
+# ---------------------------------------------------------------------------
+
+class TLock:
+    """Tracer-aware Lock/RLock. Under a scheduler, contended acquire is
+    a deterministic spin-yield (the scheduler decides who runs next, not
+    the OS futex queue); without one it delegates to the real lock."""
+
+    def __init__(self, tracer: Tracer, reentrant: bool = False):
+        self._tracer = tracer
+        self._reentrant = reentrant
+        self._real = _REAL_RLOCK() if reentrant else _REAL_LOCK()
+        frames = _app_frames(1)
+        kind = "RLock" if reentrant else "Lock"
+        self.name = (f"{kind}#{tracer.next_obj_idx()}"
+                     f"@{frames[0] if frames else '?'}")
+
+    def acquire(self, blocking: bool = True, timeout: float = -1):
+        tracer = self._tracer
+        sched = tracer.scheduler
+        if sched is not None and not sched.opened and blocking:
+            while True:
+                # schedule point BEFORE the attempt: the fuzzer may hand
+                # the lock to a competitor right here
+                tid = tracer.current_tid()
+                if tid is not None:
+                    sched.yield_point(tid)
+                # lint: allow[lock-acquire] non-blocking probe inside the deterministic spin-yield; release is the caller's contract
+                if self._real.acquire(False):
+                    break
+                if tid is not None:
+                    if not sched.yield_point(tid, waiting=True):
+                        _REAL_SLEEP(0.0005)
+                else:
+                    _REAL_SLEEP(0.0005)
+            got = True
+        elif timeout != -1:
+            # lint: allow[lock-acquire] instrumentation wrapper; release is the caller's contract
+            got = self._real.acquire(blocking, timeout)
+        else:
+            # lint: allow[lock-acquire] instrumentation wrapper; release is the caller's contract
+            got = self._real.acquire(blocking)
+        if got:
+            self._tracer.on_acquire(self.name)
+        return got
+
+    def release(self):
+        self._tracer.on_release(self.name)
+        self._real.release()
+
+    def locked(self):
+        return self._real.locked()
+
+    def _at_fork_reinit(self):
+        # stdlib modules imported inside the context (e.g.
+        # concurrent.futures.thread) register this with os.register_at_fork
+        self._real = _REAL_RLOCK() if self._reentrant else _REAL_LOCK()
+
+    def __enter__(self):
+        # lint: allow[lock-acquire] the with-protocol itself; __exit__ releases
+        self.acquire()
+        return self
+
+    def __exit__(self, *exc_info):
+        self.release()
+        return False
+
+
+class TCondition:
+    """Tracer-aware Condition. ``notify`` joins the notifier's clock
+    into the condition; a notified waiter's wakeup joins it back — the
+    only lock-related happens-before edge the detector honors (plain
+    release→acquire stays a lockset fact, hybrid-detector style).
+
+    Under a scheduler, ``wait`` is a deterministic poll of a notify
+    sequence number with yield points; timeouts are counted in yields,
+    not wall seconds, so a schedule replays bit-identically."""
+
+    _SCHED_TIMEOUT_YIELDS = 6
+
+    def __init__(self, tracer: Tracer, lock=None):
+        self._tracer = tracer
+        if lock is None:
+            lock = TLock(tracer, reentrant=True)
+        elif not isinstance(lock, TLock):          # a pre-context real lock
+            real, lock = lock, TLock(tracer)
+            lock._real = real
+        self._tlock = lock
+        self._real_cond = _REAL_CONDITION(lock._real)
+        self._notify_seq = 0
+        self.name = f"Cond#{tracer.next_obj_idx()}({lock.name})"
+
+    # delegate the lock protocol
+    def acquire(self, *a, **kw):
+        # lint: allow[lock-acquire] condition lock protocol delegation; release is the caller's contract
+        return self._tlock.acquire(*a, **kw)
+
+    def release(self):
+        return self._tlock.release()
+
+    def __enter__(self):
+        # lint: allow[lock-acquire] the with-protocol itself; __exit__ releases
+        self._tlock.acquire()
+        return self
+
+    def __exit__(self, *exc_info):
+        self._tlock.release()
+        return False
+
+    def wait(self, timeout: Optional[float] = None) -> bool:
+        tracer = self._tracer
+        sched = tracer.scheduler
+        if sched is not None:
+            target = self._notify_seq
+            self._tlock.release()
+            notified = False
+            yields = 0
+            t_open = None
+            while True:
+                if self._notify_seq > target:
+                    notified = True
+                    break
+                if (timeout is not None
+                        and yields >= self._SCHED_TIMEOUT_YIELDS):
+                    break
+                tid = tracer.current_tid()
+                parked = (sched.yield_point(tid, waiting=True)
+                          if tid is not None else False)
+                if not parked:                   # scheduler opened/ended
+                    if t_open is None:
+                        t_open = time.monotonic()
+                    elif time.monotonic() - t_open > 30.0:
+                        break                    # safety net, not a path
+                    _REAL_SLEEP(0.0005)
+                yields += 1
+            # lint: allow[lock-acquire] condition-wait re-acquire: wait's contract returns with the lock held
+            self._tlock.acquire()
+            if notified:
+                tracer.record("wakeup", self.name)
+            return notified
+        tracer.on_release(self._tlock.name)
+        ok = self._real_cond.wait(timeout)
+        tracer.on_acquire(self._tlock.name)
+        if ok:
+            tracer.record("wakeup", self.name)
+        return bool(ok)
+
+    def wait_for(self, predicate, timeout: Optional[float] = None):
+        result = predicate()
+        while not result:
+            if not self.wait(timeout) and timeout is not None:
+                return predicate()
+            result = predicate()
+        return result
+
+    def _notify(self):
+        self._tracer.record("notify", self.name)
+        self._notify_seq += 1
+        self._real_cond.notify_all()
+
+    def notify(self, n: int = 1):
+        self._notify()
+
+    def notify_all(self):
+        self._notify()
+
+
+class TEvent:
+    """Tracer-aware Event built directly on :class:`TCondition` (NOT on
+    the stock ``threading.Event`` — its internals would re-enter the
+    patched factories from threading.py frames and get real primitives,
+    leaving ``wait`` a real block that never yields the schedule
+    token)."""
+
+    def __init__(self, tracer: Tracer):
+        self._cond = TCondition(tracer, TLock(tracer))
+        self._flag = False
+
+    def is_set(self) -> bool:
+        return self._flag
+
+    def set(self):
+        with self._cond:
+            self._flag = True
+            self._cond.notify_all()
+
+    def clear(self):
+        with self._cond:
+            self._flag = False
+
+    def wait(self, timeout: Optional[float] = None) -> bool:
+        with self._cond:
+            if not self._flag:
+                self._cond.wait(timeout)
+            return self._flag
+
+
+def _make_thread_class(tracer: Tracer):
+    class TThread(_REAL_THREAD):
+        """Tracer-aware Thread: ``start`` records the fork edge and
+        registers the child with the scheduler; ``run`` parks until
+        granted; ``join`` records the join edge (the other half of the
+        happens-before pair the missed-join fixture plants)."""
+
+        def start(self):
+            tid = tracer.alloc_tid()
+            self._san_tid = tid
+            tracer.record("fork", tid)
+            sched = tracer.scheduler
+            if sched is not None:
+                sched.register(tid)
+            _REAL_THREAD.start(self)
+            if sched is not None:
+                # the child's presence in the runnable set must be a
+                # fact, not a startup race, before the parent's next
+                # schedule decision
+                sched.wait_attached(tid)
+
+        def run(self):
+            tid = getattr(self, "_san_tid", None) or tracer.alloc_tid()
+            tracer.bind_current(tid)
+            sched = tracer.scheduler
+            if sched is not None:
+                sched.attach(tid)
+            tracer.record("begin", "")
+            try:
+                _REAL_THREAD.run(self)
+            finally:
+                tracer.record("end", "")
+                if sched is not None:
+                    sched.detach(tid)
+
+        def join(self, timeout: Optional[float] = None):
+            sched = tracer.scheduler
+            tid = getattr(self, "_san_tid", None)
+            my_tid = tracer.current_tid()
+            if (sched is not None and not sched.opened
+                    and tid is not None and my_tid is not None):
+                budget = None if timeout is None else max(
+                    8, int(timeout * 100))
+                while not sched.is_done(tid):
+                    if not sched.yield_point(my_tid, waiting=True):
+                        break                    # scheduler opened
+                    if budget is not None:
+                        budget -= 1
+                        if budget <= 0:
+                            return               # timed-out join
+                _REAL_THREAD.join(self)
+            else:
+                _REAL_THREAD.join(self, timeout)
+            if tid is not None and not self.is_alive():
+                tracer.record("join", tid)
+
+    return TThread
+
+
+# ---------------------------------------------------------------------------
+# Shared-object registration
+# ---------------------------------------------------------------------------
+
+def track_dict(data: dict, name: str, tracer: Tracer) -> dict:
+    """A dict whose item reads/writes land in the trace (``name[key]``
+    variables) with the caller's lockset — drop-in for a ``stats``
+    counter dict."""
+
+    class TrackedDict(dict):
+        def __getitem__(self, k):
+            tracer.on_read(f"{name}[{k!r}]")
+            return dict.__getitem__(self, k)
+
+        def __setitem__(self, k, v):
+            tracer.on_write(f"{name}[{k!r}]")
+            dict.__setitem__(self, k, v)
+
+        def get(self, k, default=None):
+            tracer.on_read(f"{name}[{k!r}]")
+            return dict.get(self, k, default)
+
+        def setdefault(self, k, default=None):
+            tracer.on_write(f"{name}[{k!r}]")
+            return dict.setdefault(self, k, default)
+
+        def pop(self, k, *a):
+            tracer.on_write(f"{name}[{k!r}]")
+            return dict.pop(self, k, *a)
+
+        def update(self, *a, **kw):
+            tracer.on_write(f"{name}[*]")
+            return dict.update(self, *a, **kw)
+
+    return TrackedDict(data)
+
+
+def track_list(data: list, name: str, tracer: Tracer) -> list:
+    """A list whose mutations/iterations land in the trace — drop-in
+    for a pool member list."""
+
+    class TrackedList(list):
+        def append(self, v):
+            tracer.on_write(name)
+            list.append(self, v)
+
+        def extend(self, it):
+            tracer.on_write(name)
+            list.extend(self, it)
+
+        def insert(self, i, v):
+            tracer.on_write(name)
+            list.insert(self, i, v)
+
+        def remove(self, v):
+            tracer.on_write(name)
+            list.remove(self, v)
+
+        def pop(self, *a):
+            tracer.on_write(name)
+            return list.pop(self, *a)
+
+        def clear(self):
+            tracer.on_write(name)
+            list.clear(self)
+
+        def __iter__(self):
+            tracer.on_read(name)
+            return list.__iter__(self)
+
+        def __len__(self):
+            tracer.on_read(name)
+            return list.__len__(self)
+
+        def __getitem__(self, i):
+            tracer.on_read(name)
+            return list.__getitem__(self, i)
+
+    return TrackedList(data)
+
+
+def track_attrs(obj, name: str, tracer: Tracer, attrs) -> object:
+    """Swap ``obj``'s class for a subclass that traces reads/writes of
+    the named attributes (``name.attr`` variables). Everything else —
+    methods, untracked attributes — costs one frozenset membership
+    test."""
+    tracked = frozenset(attrs)
+    cls = obj.__class__
+
+    class Tracked(cls):
+        def __getattribute__(self, a):
+            if a in tracked:
+                tracer.on_read(f"{name}.{a}")
+            return cls.__getattribute__(self, a)
+
+        def __setattr__(self, a, v):
+            if a in tracked:
+                tracer.on_write(f"{name}.{a}")
+            cls.__setattr__(self, a, v)
+
+    Tracked.__name__ = cls.__name__
+    Tracked.__qualname__ = cls.__qualname__
+    obj.__class__ = Tracked
+    return obj
+
+
+# ---------------------------------------------------------------------------
+# The patch context
+# ---------------------------------------------------------------------------
+
+@contextmanager
+def instrumented(tracer: Tracer, scheduler=None):
+    """Rebind the ``threading`` factories and ``time.sleep`` to
+    tracer-aware wrappers for the duration of the block. ``scheduler``
+    (a :class:`repro.analysis.sanitize.schedfuzz.PCTScheduler`) makes
+    every traced operation a schedule point. Primitives constructed
+    inside the block keep working after it exits (the tracer is merely
+    closed); nothing constructed outside is touched."""
+    tracer.scheduler = scheduler
+    tracer.bind_main()
+    if scheduler is not None:
+        scheduler.adopt_main(tracer.current_tid())
+
+    def make_lock():
+        if _caller_in_threading():
+            return _REAL_LOCK()
+        return TLock(tracer)
+
+    def make_rlock():
+        if _caller_in_threading():
+            return _REAL_RLOCK()
+        return TLock(tracer, reentrant=True)
+
+    def make_condition(lock=None):
+        if _caller_in_threading():
+            return _REAL_CONDITION(lock)
+        return TCondition(tracer, lock)
+
+    def make_event():
+        if _caller_in_threading():
+            return _REAL_EVENT()
+        return TEvent(tracer)
+
+    def traced_sleep(secs):
+        sched = tracer.scheduler
+        if sched is not None and not sched.opened:
+            tid = tracer.current_tid()
+            if tid is not None and sched.yield_point(tid, waiting=True):
+                return
+        _REAL_SLEEP(secs)
+
+    saved = (threading.Lock, threading.RLock, threading.Condition,
+             threading.Event, threading.Thread, time.sleep)
+    threading.Lock = make_lock
+    threading.RLock = make_rlock
+    threading.Condition = make_condition
+    threading.Event = make_event
+    threading.Thread = _make_thread_class(tracer)
+    time.sleep = traced_sleep
+    try:
+        yield tracer
+    finally:
+        (threading.Lock, threading.RLock, threading.Condition,
+         threading.Event, threading.Thread, time.sleep) = saved
+        tracer.closed = True
+        tracer.scheduler = None

@@ -1,0 +1,168 @@
+"""PCT-style schedule fuzzing: serialize instrumented threads, one
+token, seeded priorities.
+
+Every traced operation (:mod:`.instrument`) is a *yield point*: the
+running thread parks, the scheduler picks the highest-priority runnable
+thread (probabilistic-concurrency-testing flavor — each yield point may
+reshuffle the yielder's priority with probability ``change_prob``, so
+priority-inversion bugs that need a mid-run preemption get one), and
+exactly one thread executes between consecutive yield points. All
+scheduling randomness comes from one ``random.Random(seed)`` consumed
+under the scheduler lock in token order, so a schedule — and therefore
+the trace and any race report derived from it — replays bit-identically
+from its seed *provided the threads under test synchronize only through
+instrumented primitives* (the fixture/regression scenarios do; the
+file-polling mq scenarios are additionally steered through the
+``step_hook`` seam but keep real wall-clock lease arithmetic, so for
+them the fuzzer is an interleaving explorer, not a replay oracle).
+
+Threads that yield with ``waiting=True`` (spin-acquire, condition poll,
+join poll) are deprioritized: the scheduler prefers any thread that can
+make real progress and only hands the token back to a waiter when no
+one else is runnable — picked uniformly (seeded) among the waiters to
+break holder/waiter livelocks.
+
+A wall-time cap *opens* the scheduler: every parked thread is released
+to free-run (real concurrency, still traced) and the run is marked
+``truncated`` — surfaced as exit code 3, never a silent pass.
+"""
+from __future__ import annotations
+
+import random
+import threading
+import time
+from typing import Dict, Optional, Set
+
+from repro.analysis.sanitize.instrument import (_REAL_CONDITION,
+                                                _REAL_LOCK)
+
+
+class PCTScheduler:
+    """Single-token cooperative scheduler over instrumented threads."""
+
+    def __init__(self, seed: int, *, change_prob: float = 0.1,
+                 wall_s: float = 30.0):
+        self._rng = random.Random(seed)
+        self.seed = seed
+        self.change_prob = change_prob
+        self._lock = _REAL_LOCK()
+        self._cond = _REAL_CONDITION(self._lock)
+        self._prio: Dict[str, float] = {}
+        self._runnable: Set[str] = set()
+        self._waiting: Set[str] = set()
+        self._done: Set[str] = set()
+        self._attached: Set[str] = set()
+        self._current: Optional[str] = None
+        self.opened = False
+        self.truncated = False
+        self.yields = 0
+        self._deadline = time.monotonic() + wall_s
+
+    # -- lifecycle ------------------------------------------------------
+    def adopt_main(self, tid: str):
+        """The scenario thread: token holder from the start."""
+        with self._cond:
+            self._prio[tid] = self._rng.random()
+            self._attached.add(tid)
+            self._current = tid
+
+    def register(self, tid: str):
+        """Called by the PARENT (token holder) at ``Thread.start`` —
+        priority assignment rides the deterministic token order."""
+        with self._cond:
+            self._prio[tid] = self._rng.random()
+
+    def attach(self, tid: str):
+        """First act of a child thread: park until granted."""
+        with self._cond:
+            self._attached.add(tid)
+            self._runnable.add(tid)
+            self._cond.notify_all()
+            self._await_grant(tid)
+
+    def wait_attached(self, tid: str):
+        """Parent-side barrier: the child is a schedulable fact before
+        the parent's next decision (kills thread-startup races in the
+        schedule itself)."""
+        with self._cond:
+            while tid not in self._attached and not self.opened:
+                self._cond.wait(0.05)
+                self._check_deadline()
+
+    def detach(self, tid: str):
+        with self._cond:
+            self._done.add(tid)
+            self._runnable.discard(tid)
+            self._waiting.discard(tid)
+            if self._current == tid:
+                self._current = None
+                self._pick()
+            self._cond.notify_all()
+
+    def is_done(self, tid: str) -> bool:
+        with self._lock:
+            return tid in self._done
+
+    def open_freerun(self, truncated: bool = False):
+        """Release every parked thread to run concurrently (still
+        traced). Terminal: the token protocol never resumes."""
+        with self._cond:
+            self.opened = True
+            self.truncated = self.truncated or truncated
+            self._current = None
+            self._cond.notify_all()
+
+    # -- the yield point ------------------------------------------------
+    def yield_point(self, tid: str, waiting: bool = False) -> bool:
+        """Park, let the scheduler pick, return once granted. Returns
+        False (without parking) when the thread is unknown or the
+        scheduler is open — callers fall back to real blocking."""
+        if self.opened:
+            return False
+        with self._cond:
+            if self.opened or tid not in self._prio or tid in self._done:
+                return False
+            self.yields += 1
+            self._check_deadline()
+            if self.opened:
+                return False
+            if self._rng.random() < self.change_prob:
+                self._prio[tid] = self._rng.random()
+            (self._waiting if waiting else self._runnable).add(tid)
+            if self._current == tid:
+                self._current = None
+            self._pick()
+            self._await_grant(tid)
+            return True
+
+    # -- internals (scheduler lock held) --------------------------------
+    def _check_deadline(self):
+        if time.monotonic() > self._deadline and not self.opened:
+            self.opened = True
+            self.truncated = True
+            self._current = None
+            self._cond.notify_all()
+
+    def _pick(self):
+        if self._current is not None or self.opened:
+            return
+        if self._runnable:
+            chosen = max(self._runnable,
+                         key=lambda t: (self._prio[t], t))
+            self._runnable.discard(chosen)
+        elif self._waiting:
+            # all candidates are spinning on someone else's state:
+            # seeded uniform choice breaks holder/waiter livelock
+            chosen = self._rng.choice(sorted(self._waiting))
+            self._waiting.discard(chosen)
+        else:
+            return
+        self._current = chosen
+        self._cond.notify_all()
+
+    def _await_grant(self, tid: str):
+        while not self.opened and self._current != tid:
+            if self._current is None:
+                self._pick()
+            self._cond.wait(0.05)
+            self._check_deadline()

@@ -457,7 +457,9 @@ class HostPoolBackend(PureCallbackBridge):
                 return fut.result(timeout=timeout_s)
 
             def on_retry(i, attempt, exc):
-                self.stats["retries"] += 1
+                # two pipelined _host_eval threads can retry at once
+                with self._cond:
+                    self.stats["retries"] += 1
 
             outs = run_chunks_retry(chunks, submit, wait,
                                     timeout_s=self.chunk_timeout_s,
@@ -469,6 +471,12 @@ class HostPoolBackend(PureCallbackBridge):
             with self._cond:
                 self._inflight -= 1
                 self._cond.notify_all()
+
+    def stats_snapshot(self) -> dict:
+        """Consistent copy of the counters — increments run under
+        ``self._cond``'s lock, so read under it too."""
+        with self._cond:
+            return dict(self.stats)
 
     def close(self):
         """Drain in-flight host callbacks, then shut the pool down. Safe
@@ -526,7 +534,12 @@ class Broker:
         retries, timeouts, lease re-queues, streamed EMA updates, pruned
         jobs, whatever the backend keeps (empty for backends that keep
         none, e.g. inline SPMD). Returns a copy: safe to mutate, and
-        stable while in-flight evaluations keep counting."""
+        stable while in-flight evaluations keep counting. Backends that
+        expose a locked ``stats_snapshot`` are read through it so the
+        copy is consistent under concurrent increments."""
+        snap = getattr(self.backend, "stats_snapshot", None)
+        if snap is not None:
+            return snap()
         return dict(getattr(self.backend, "stats", None) or {})
 
     def _identity_stats(self) -> dict:

@@ -97,6 +97,20 @@ fsmodel semantics (``repro.analysis.proto.fsmodel``) are this module's
 spool too — a future batchq-specific spec only needs new actor
 machines, not a new filesystem model.
 
+Race-checked
+------------
+The thread sanitizer (``python -m repro.analysis --sanitize``,
+``repro.analysis.sanitize``) drives this backend's real threads —
+concurrent pipelined ``_host_eval`` callers with flaky evaluations
+burning the shared timeout/retry counters — under instrumented
+primitives with hybrid lockset + happens-before race detection. The
+contract here: every ``stats`` increment (including the ``timeouts``
+and ``retries`` bumps made from ``run_chunks_retry`` callbacks) and
+every ``_inflight``/``_seq`` mutation happens under ``self._lock``;
+readers use ``stats_snapshot()``. ``tests/test_sanitize.py`` keeps
+the batchq scenario race-clean and nothing in this module imports the
+sanitizer — instrumentation is zero-cost when disabled.
+
 Persistent-worker alternative: this backend is batch-synchronous — every
 ``evaluate`` pays scheduler submission and worker startup per chunk. The
 message-queue subsystem (``repro.runtime.mq``) keeps the same shared-
@@ -868,6 +882,12 @@ class SlurmArrayBackend(PureCallbackBridge):
         self._closed = False
         self._done_jobs: List[str] = []
 
+    def stats_snapshot(self) -> Dict[str, int]:
+        """Consistent copy of the counters — every increment in this
+        class runs under ``self._lock``, so read under it too."""
+        with self._lock:
+            return dict(self.stats)
+
     # -- spool helpers --------------------------------------------------
     def _new_job_dir(self) -> str:
         with self._lock:
@@ -978,7 +998,8 @@ class SlurmArrayBackend(PureCallbackBridge):
                     t_clock = time.monotonic()
                 if (timeout_s is not None and t_clock is not None
                         and time.monotonic() - t_clock > timeout_s):
-                    self.stats["timeouts"] += 1
+                    with self._lock:
+                        self.stats["timeouts"] += 1
                     self.scheduler.cancel(handle)
                     raise TimeoutError(
                         f"chunk {i} straggled past {timeout_s}s "
@@ -986,7 +1007,8 @@ class SlurmArrayBackend(PureCallbackBridge):
                 time.sleep(self.poll_interval_s)
 
         def on_retry(i, attempt, exc):
-            self.stats["retries"] += 1
+            with self._lock:
+                self.stats["retries"] += 1
 
         try:
             outs = run_chunks_retry(chunks, submit, wait,

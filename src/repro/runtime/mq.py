@@ -138,6 +138,36 @@ real functions in this module (``repro.analysis.proto.replay``, tier-1
 implementation cannot drift apart; the planned socket broker must pass
 the identical schedule corpus before swapping transports.
 
+Race-checked (``python -m repro.analysis --sanitize``)
+------------------------------------------------------
+The model checker explores the *protocol*; the thread sanitizer
+(``repro.analysis.sanitize``) runs THIS module's real threads — worker
+loops, the autoscaler tick, concurrent multitenant managers — under
+instrumented primitives with hybrid lockset + happens-before race
+detection and seed-deterministic PCT schedule fuzzing (reusing the
+same ``step_hook`` seam the replay harness drives). The in-process
+shared state it guards, each pinned by a strip-the-lock regression in
+``tests/test_sanitize.py``:
+
+* ``_PRIORITY_CACHE`` behind ``_PRIORITY_LOCK`` (claim-loop threads of
+  a shared-process fleet all hit it);
+* :class:`LocalWorkerPool` / :class:`MQWorkerFleet` member lists,
+  ticket counters, and ``_started`` behind each pool's ``_lock``
+  (``grow`` runs on the autoscaler thread concurrent with owner
+  start/stop/poll; ``stop`` swaps the member list out under the lock
+  and joins OUTSIDE it);
+* :class:`FleetAutoscaler` tick bookkeeping (``size``, ``stats``,
+  cooldown state) behind ``_lock`` — lock order is strictly
+  autoscaler ``_lock`` → pool ``_lock`` via ``grow``, never the
+  reverse; read counters via ``stats_snapshot()``;
+* ``QueueBackend.stats`` increments under the existing queue lock,
+  snapshot via ``stats_snapshot()``.
+
+Nothing in this module imports the sanitizer — instrumentation exists
+only inside the sanitizer's own ``instrumented()`` context, and
+``benchmarks/broker_overhead.py::mq_dispatch_sanitizer_*`` pins the
+dispatch cost unchanged.
+
 Persistent workers (``python -m repro.runtime.mq --worker --mq-dir D``)
 are numpy-only like the batchq array task: they loop claim -> evaluate ->
 report, resolving each run's fitness ONCE from the ``runs/`` registry
@@ -326,6 +356,9 @@ def registry_stamp(mq_dir: str, run_id: str):
 #: scarce resource is metadata ops: one stat per ready run per claim
 #: instead of open+read+parse
 _PRIORITY_CACHE: Dict[str, tuple] = {}
+#: guards _PRIORITY_CACHE — worker threads sharing a process (thread-mode
+#: LocalWorkerPool, pipelined managers) all hit the cache from claim_next
+_PRIORITY_LOCK = threading.Lock()
 
 
 def run_priority(mq_dir: str, run_id: str) -> int:
@@ -335,7 +368,8 @@ def run_priority(mq_dir: str, run_id: str) -> int:
     stamp = registry_stamp(mq_dir, run_id)
     if stamp is None:
         return DEFAULT_PRIORITY
-    hit = _PRIORITY_CACHE.get(path)
+    with _PRIORITY_LOCK:
+        hit = _PRIORITY_CACHE.get(path)
     if hit is not None and hit[0] == stamp:
         return hit[1]
     try:
@@ -343,7 +377,8 @@ def run_priority(mq_dir: str, run_id: str) -> int:
             prio = int(json.load(f).get("priority", DEFAULT_PRIORITY))
     except (OSError, ValueError):
         return DEFAULT_PRIORITY
-    _PRIORITY_CACHE[path] = (stamp, prio)
+    with _PRIORITY_LOCK:
+        _PRIORITY_CACHE[path] = (stamp, prio)
     return prio
 
 
@@ -566,6 +601,26 @@ def janitor_sweep(mq_dir: str, *, max_age_s: float) -> int:
                 removed += 1
             except OSError:
                 pass
+    # torn tmp outside the queue dirs: a publisher crashed mid-write of
+    # a registry entry (runs/), a fleet ticket (fleet/) or the STOP
+    # sentinel (root). Same age guard; only *.tmp is ever eligible here
+    # (fault-injection sweep in analysis/sanitize pins this path)
+    for d in (RUNS_DIR, FLEET_DIR, ""):
+        try:
+            names = os.listdir(os.path.join(mq_dir, d))
+        except OSError:
+            continue
+        for name in names:
+            if not name.endswith(TMP_SUFFIX):
+                continue
+            path = os.path.join(mq_dir, d, name)
+            try:
+                if os.path.getmtime(path) > cutoff:
+                    continue
+                os.remove(path)
+                removed += 1
+            except OSError:
+                pass
     return removed
 
 
@@ -766,8 +821,12 @@ class LocalWorkerPool:
         self.python = python or sys.executable
         self._members: list = []
         self._started = False
+        # guards _members/num_workers/_started: grow() is called from the
+        # autoscaler thread while the owner may start/stop/poll
+        self._lock = threading.Lock()
 
     def _spawn_member(self):
+        # caller holds self._lock
         if self.mode == "thread":
             t = threading.Thread(
                 target=worker_loop, args=(self.mq_dir,),
@@ -794,32 +853,36 @@ class LocalWorkerPool:
                 stderr=subprocess.DEVNULL))
 
     def start(self):
-        if self._started:
-            return self
-        if self.mq_dir is None:
-            raise ValueError("LocalWorkerPool.start: mq_dir not bound")
-        make_broker_dirs(self.mq_dir)
-        for _ in range(self.num_workers):
-            self._spawn_member()
-        self._started = True
+        with self._lock:
+            if self._started:
+                return self
+            if self.mq_dir is None:
+                raise ValueError("LocalWorkerPool.start: mq_dir not bound")
+            make_broker_dirs(self.mq_dir)
+            for _ in range(self.num_workers):
+                self._spawn_member()
+            self._started = True
         return self
 
     def grow(self, n: int):
         """Incremental scale-up (:class:`FleetAutoscaler`): spawn ``n``
         more workers against the same broker directory."""
         n = max(0, int(n))
-        self.num_workers += n
-        if self._started:
-            for _ in range(n):
-                self._spawn_member()
+        with self._lock:
+            self.num_workers += n
+            if self._started:
+                for _ in range(n):
+                    self._spawn_member()
         return self
 
     def alive_workers(self) -> int:
         """Workers still running (threads alive / subprocesses not
         exited) — poison STOP tickets and the fleet-wide STOP reduce
         this as workers drain out."""
+        with self._lock:
+            members = list(self._members)
         alive = 0
-        for m in self._members:
+        for m in members:
             if isinstance(m, threading.Thread):
                 alive += m.is_alive()
             else:
@@ -830,14 +893,19 @@ class LocalWorkerPool:
         """Raise the STOP sentinel and collect the fleet. Threads that
         ignore the deadline are daemons (abandoned); subprocesses are
         killed."""
-        if not self._started:
-            return
+        with self._lock:
+            if not self._started:
+                return
+            # swap out under the lock; join/wait OUTSIDE it so a slow
+            # drain never blocks a concurrent grow()/alive_workers()
+            members, self._members = self._members, []
+            self._started = False
         try:
             atomic_write_text(os.path.join(self.mq_dir, STOP_NAME), "stop\n")
         except OSError:
             pass
         deadline = time.monotonic() + timeout_s
-        for m in self._members:
+        for m in members:
             left = max(0.0, deadline - time.monotonic())
             if isinstance(m, threading.Thread):
                 m.join(timeout=left)
@@ -846,8 +914,6 @@ class LocalWorkerPool:
                     m.wait(timeout=left)
                 except subprocess.TimeoutExpired:
                     m.kill()
-        self._members = []
-        self._started = False
 
     def __enter__(self):
         return self.start()
@@ -884,8 +950,12 @@ class MQWorkerFleet:
         self.handles: List[str] = []
         self._ticket_seq = 0
         self._started = False
+        # guards handles/_ticket_seq/num_workers/_started: grow() runs on
+        # the autoscaler thread concurrent with owner start/stop/poll
+        self._lock = threading.Lock()
 
     def _submit_tickets(self, n: int):
+        # caller holds self._lock
         fleet_dir = os.path.join(self.mq_dir, FLEET_DIR)
         os.makedirs(fleet_dir, exist_ok=True)
         tickets = []
@@ -901,39 +971,46 @@ class MQWorkerFleet:
                                                   job_dir=fleet_dir))
 
     def start(self):
-        if self._started:
-            return self
-        if self.mq_dir is None:
-            raise ValueError("MQWorkerFleet.start: mq_dir not bound")
-        make_broker_dirs(self.mq_dir)
-        self._submit_tickets(self.num_workers)
-        self._started = True
+        with self._lock:
+            if self._started:
+                return self
+            if self.mq_dir is None:
+                raise ValueError("MQWorkerFleet.start: mq_dir not bound")
+            make_broker_dirs(self.mq_dir)
+            self._submit_tickets(self.num_workers)
+            self._started = True
         return self
 
     def grow(self, n: int):
         """Incremental scale-up through the unchanged ``Scheduler``
         protocol: one more submission carrying ``n`` fresh tickets."""
         n = max(0, int(n))
-        self.num_workers += n
-        if self._started and n:
-            self._submit_tickets(n)
+        with self._lock:
+            self.num_workers += n
+            if self._started and n:
+                self._submit_tickets(n)
         return self
 
     def alive_workers(self) -> int:
+        with self._lock:
+            handles = list(self.handles)
         return sum(self.scheduler.poll(h) in ("pending", "running")
-                   for h in self.handles)
+                   for h in handles)
 
     def stop(self, timeout_s: float = 10.0):
         """STOP the fleet, give it a grace period to drain off the queue,
         then cancel stragglers and reap scheduler objects."""
-        if not self._started:
-            return
+        with self._lock:
+            if not self._started:
+                return
+            self._started = False
+            handles = list(self.handles)
         try:
             atomic_write_text(os.path.join(self.mq_dir, STOP_NAME), "stop\n")
         except OSError:
             pass
         deadline = time.monotonic() + timeout_s
-        pending = list(self.handles)
+        pending = handles
         while pending and time.monotonic() < deadline:
             pending = [h for h in pending
                        if self.scheduler.poll(h) in ("pending", "running")]
@@ -947,10 +1024,9 @@ class MQWorkerFleet:
         reap = getattr(self.scheduler, "reap", None)
         if reap is not None:
             try:
-                reap(tuple(self.handles))
+                reap(tuple(handles))
             except Exception:
                 pass
-        self._started = False
 
     def __enter__(self):
         return self.start()
@@ -1017,6 +1093,10 @@ class FleetAutoscaler:
         self._last_action: Optional[float] = None
         self._stop_evt = threading.Event()
         self._thread: Optional[threading.Thread] = None
+        # guards size/stats/_poisons/_poison_seq/_last_action: _tick runs
+        # on the control thread while start() and readers run on the
+        # manager thread
+        self._lock = threading.Lock()
 
     def queue_state(self):
         """One directory scan: ``(ready, leased, pending_poison)``."""
@@ -1039,59 +1119,66 @@ class FleetAutoscaler:
 
     def _tick(self, now: float) -> None:
         ready, leased, _poison = self.queue_state()
-        # reconcile the intended size with reality: a worker that CRASHED
-        # (as opposed to retiring on a poison ticket, which decremented
-        # size when issued) leaves size overstating the fleet — without
-        # this, a drained-then-reloaded queue would never re-grow past
-        # the ghosts and could starve on an empty fleet
-        alive_fn = getattr(self.pool, "alive_workers", None)
-        if alive_fn is not None:
-            try:
-                self.size = min(self.size, int(alive_fn()))
-            except Exception:
-                pass                             # scheduler poll hiccup
-        outstanding = ready + leased
-        want = -(-outstanding // max(self.backlog_per_worker, 1e-9))
-        desired = min(self.max_workers, max(self.min_workers, int(want)))
-        self.stats["ticks"] += 1
-        if desired == self.size:
-            return
-        if (self._last_action is not None
-                and now - self._last_action < self.cooldown_s):
-            return
-        if desired > self.size:
-            delta = desired - self.size
-            # revoke pending poison first: an unclaimed .stop file is a
-            # scale-down that has not happened yet
-            revoked = 0
-            while self._poisons and revoked < delta:
-                path = self._poisons.pop()
+        # the whole decision runs under self._lock: size/stats/_poisons
+        # are also read by the manager thread (stats_snapshot, start).
+        # Lock order is autoscaler._lock -> pool._lock (via grow); the
+        # pool never calls back into the autoscaler, so no cycle.
+        with self._lock:
+            # reconcile the intended size with reality: a worker that
+            # CRASHED (as opposed to retiring on a poison ticket, which
+            # decremented size when issued) leaves size overstating the
+            # fleet — without this, a drained-then-reloaded queue would
+            # never re-grow past the ghosts and could starve on an empty
+            # fleet
+            alive_fn = getattr(self.pool, "alive_workers", None)
+            if alive_fn is not None:
                 try:
-                    os.remove(path)
-                    revoked += 1
-                except OSError:
-                    pass                         # already claimed: that
+                    self.size = min(self.size, int(alive_fn()))
+                except Exception:
+                    pass                         # scheduler poll hiccup
+            outstanding = ready + leased
+            want = -(-outstanding // max(self.backlog_per_worker, 1e-9))
+            desired = min(self.max_workers,
+                          max(self.min_workers, int(want)))
+            self.stats["ticks"] += 1
+            if desired == self.size:
+                return
+            if (self._last_action is not None
+                    and now - self._last_action < self.cooldown_s):
+                return
+            if desired > self.size:
+                delta = desired - self.size
+                # revoke pending poison first: an unclaimed .stop file
+                # is a scale-down that has not happened yet
+                revoked = 0
+                while self._poisons and revoked < delta:
+                    path = self._poisons.pop()
+                    try:
+                        os.remove(path)
+                        revoked += 1
+                    except OSError:
+                        pass                     # already claimed: that
                                                  # worker really exited
-            if delta - revoked > 0:
-                self.pool.grow(delta - revoked)
-            self.stats["scale_ups"] += 1
-        else:
-            for _ in range(self.size - desired):
-                path = os.path.join(
-                    self.mq_dir, TASKS_DIR,
-                    f"zzzstop-{os.getpid():x}-{self._poison_seq:04d}"
-                    f"{POISON_SUFFIX}")
-                self._poison_seq += 1
-                try:
-                    atomic_write_text(path, "stop\n")
-                    self._poisons.append(path)
-                except OSError:
-                    break
-            self.stats["scale_downs"] += 1
-        self.size = desired
-        self.stats["peak_workers"] = max(self.stats["peak_workers"],
-                                         desired)
-        self._last_action = now
+                if delta - revoked > 0:
+                    self.pool.grow(delta - revoked)
+                self.stats["scale_ups"] += 1
+            else:
+                for _ in range(self.size - desired):
+                    path = os.path.join(
+                        self.mq_dir, TASKS_DIR,
+                        f"zzzstop-{os.getpid():x}-{self._poison_seq:04d}"
+                        f"{POISON_SUFFIX}")
+                    self._poison_seq += 1
+                    try:
+                        atomic_write_text(path, "stop\n")
+                        self._poisons.append(path)
+                    except OSError:
+                        break
+                self.stats["scale_downs"] += 1
+            self.size = desired
+            self.stats["peak_workers"] = max(self.stats["peak_workers"],
+                                             desired)
+            self._last_action = now
 
     def _run(self):
         while not self._stop_evt.wait(self.interval_s):
@@ -1108,13 +1195,20 @@ class FleetAutoscaler:
         if self.mq_dir is None:
             raise ValueError(
                 "FleetAutoscaler.start: pool has no mq_dir bound")
-        self.size = int(self.pool.num_workers)
-        self.stats["peak_workers"] = max(self.stats["peak_workers"],
-                                         self.size)
+        with self._lock:
+            self.size = int(self.pool.num_workers)
+            self.stats["peak_workers"] = max(self.stats["peak_workers"],
+                                             self.size)
         self._stop_evt.clear()
         self._thread = threading.Thread(target=self._run, daemon=True)
         self._thread.start()
         return self
+
+    def stats_snapshot(self) -> Dict[str, int]:
+        """Consistent copy of the counters (the control thread mutates
+        ``stats`` under the same lock)."""
+        with self._lock:
+            return dict(self.stats)
 
     def stop(self):
         """Halt the control loop. The pool keeps its current size;
@@ -1268,6 +1362,8 @@ class QueueBackend(PureCallbackBridge):
         self._step_hook = step_hook
         self.stats = {"jobs": 0, "retries": 0, "timeouts": 0,
                       "lease_requeues": 0, "streamed": 0, "jobs_pruned": 0}
+        #: _lock guards stats and all job-tracking state below; every
+        #: ``stats[...] += 1`` in this class already sits inside it
         self._lock = threading.Lock()
         self._cond = threading.Condition(self._lock)
         self._inflight = 0
@@ -1555,6 +1651,12 @@ class QueueBackend(PureCallbackBridge):
                     os.remove(os.path.join(d, name))
                 except OSError:
                     pass
+
+    def stats_snapshot(self) -> Dict[str, int]:
+        """Consistent copy of the counters — every increment in this
+        class runs under ``self._lock``, so read under it too."""
+        with self._lock:
+            return dict(self.stats)
 
     def close(self, remove_dir: Optional[bool] = None):
         """Drain in-flight evaluations (a pure_callback may still be

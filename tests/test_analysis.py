@@ -336,6 +336,143 @@ class TestConcurrency:
         assert rules(findings) == ["bare-except"]
         assert findings[0].line == 6
 
+    def test_os_path_join_under_lock_not_a_thread_join(self, tmp_path):
+        root = make_tree(tmp_path, {"repro/runtime/pool.py": """
+            import os
+            import threading
+            lock = threading.Lock()
+
+            def path(a, b):
+                with lock:
+                    return os.path.join(a, b)
+            """})
+        assert run_analysis([root], [check_concurrency]) == []
+
+    def test_thread_shared_mutation_flagged(self, tmp_path):
+        root = make_tree(tmp_path, {"repro/runtime/pool.py": """
+            import threading
+
+            class Scaler:
+                def __init__(self):
+                    self.size = 1
+
+                def start(self):
+                    threading.Thread(target=self._run).start()
+
+                def _run(self):
+                    self.size += 1
+
+                def shrink(self):
+                    self.size -= 1
+            """})
+        findings = run_analysis([root], [check_concurrency])
+        assert rules(findings) == ["thread-shared-mutation"]
+        assert "self.size" in findings[0].message
+        assert "common lock" in findings[0].message
+
+    def test_thread_shared_transitive_closure_flagged(self, tmp_path):
+        # the thread body reaches the mutation via self._tick()
+        root = make_tree(tmp_path, {"repro/runtime/pool.py": """
+            import threading
+
+            class Scaler:
+                def start(self):
+                    threading.Thread(target=self._run).start()
+
+                def _run(self):
+                    self._tick()
+
+                def _tick(self):
+                    self.stats.update(ticks=1)
+
+                def reset(self):
+                    self.stats.clear()
+            """})
+        assert rules(run_analysis([root], [check_concurrency])) == \
+            ["thread-shared-mutation"]
+
+    def test_thread_shared_both_locked_clean(self, tmp_path):
+        root = make_tree(tmp_path, {"repro/runtime/pool.py": """
+            import threading
+
+            class Scaler:
+                def __init__(self):
+                    self._lock = threading.Lock()
+                    self.size = 1
+
+                def start(self):
+                    threading.Thread(target=self._run).start()
+
+                def _run(self):
+                    with self._lock:
+                        self.size += 1
+
+                def shrink(self):
+                    with self._lock:
+                        self.size -= 1
+            """})
+        assert run_analysis([root], [check_concurrency]) == []
+
+    def test_thread_shared_init_only_spawn_side_clean(self, tmp_path):
+        # __init__ completes before any thread can hold the object
+        root = make_tree(tmp_path, {"repro/runtime/pool.py": """
+            import threading
+
+            class Scaler:
+                def __init__(self):
+                    self.size = 1
+
+                def start(self):
+                    threading.Thread(target=self._run).start()
+
+                def _run(self):
+                    self.size += 1
+            """})
+        assert run_analysis([root], [check_concurrency]) == []
+
+    def test_thread_shared_allow_suppresses(self, tmp_path):
+        root = make_tree(tmp_path, {"repro/runtime/pool.py": """
+            import threading
+
+            class Scaler:
+                def start(self):
+                    threading.Thread(target=self._run).start()
+
+                def _run(self):
+                    # lint: allow[thread-shared-mutation] single writer
+                    self.size += 1
+
+                def shrink(self):
+                    self.size -= 1
+            """})
+        assert run_analysis([root], [check_concurrency]) == []
+
+    def test_thread_shared_nested_def_spawn_line_split(self, tmp_path):
+        # mutations BEFORE the Thread exists cannot race its body; only
+        # the spawner's tail after the construction line competes
+        root = make_tree(tmp_path, {"repro/runtime/pool.py": """
+            import threading
+
+            class Harness:
+                def run_before(self):
+                    self.out = {}
+
+                    def worker():
+                        self.out.update(fit=1)
+
+                    threading.Thread(target=worker).start()
+
+                def run_after(self):
+                    def worker():
+                        self.res.update(fit=1)
+
+                    threading.Thread(target=worker).start()
+                    self.res.update(seed=0)
+            """})
+        findings = run_analysis([root], [check_concurrency])
+        assert rules(findings) == ["thread-shared-mutation"]
+        assert "self.res" in findings[0].message
+
 
 # ---------------------------------------------------------------------------
 # tmp-invisible

@@ -1,0 +1,479 @@
+"""Thread sanitizer (repro.analysis.sanitize): seeded-race fixtures the
+detector MUST flag (and their synchronized twins it must not), seed →
+identical-schedule determinism, the real-runtime scenarios race-clean,
+lock-stripped negative controls pinning each PR-8 runtime fix, the FS
+fault-injection sweep, and the janitor's torn-tmp coverage outside the
+queue dirs."""
+import os
+import tempfile
+import threading
+
+import numpy as np
+import pytest
+
+from repro.analysis.sanitize import (Tracer, detect_races, format_report,
+                                     instrumented, track_attrs, track_dict,
+                                     track_list)
+from repro.analysis.sanitize.faultinject import fault_sweep
+from repro.analysis.sanitize.schedfuzz import PCTScheduler
+from repro.analysis.sanitize.scenarios import (SCENARIOS, _fault_scenario,
+                                               run_scenario, run_sanitize)
+
+_REAL_LOCK = threading.Lock   # pre-patch: invisible to the tracer
+
+
+def sites(races):
+    return {s for r in races for s in (r.a.site, r.b.site)}
+
+
+# ---------------------------------------------------------------------------
+# Seeded-race fixtures: each MUST be detected; each synchronized twin
+# MUST be clean
+# ---------------------------------------------------------------------------
+
+class TestSeededRaces:
+    def test_unlocked_counter_detected(self):
+        tracer = Tracer()
+        with instrumented(tracer):
+            stats = track_dict({"n": 0}, "stats", tracer)
+
+            def bump():
+                for _ in range(20):
+                    stats["n"] = stats["n"] + 1
+
+            ts = [threading.Thread(target=bump) for _ in range(2)]
+            for t in ts:
+                t.start()
+            for t in ts:
+                t.join()
+        races = detect_races(tracer.events)
+        assert races, "unlocked counter must race"
+        assert any(r.var == "stats['n']" for r in races)
+        report = format_report(races)
+        assert "RACE stats['n']" in report and "↔" in report
+
+    def test_locked_counter_clean(self):
+        tracer = Tracer()
+        with instrumented(tracer):
+            lock = threading.Lock()
+            stats = track_dict({"n": 0}, "stats", tracer)
+
+            def bump():
+                for _ in range(20):
+                    with lock:
+                        stats["n"] = stats["n"] + 1
+
+            ts = [threading.Thread(target=bump) for _ in range(2)]
+            for t in ts:
+                t.start()
+            for t in ts:
+                t.join()
+        assert detect_races(tracer.events) == []
+
+    def test_lockset_disjoint_pair_detected(self):
+        """Each side holds A lock — just not the SAME lock. Lock
+        release→acquire is deliberately NOT a happens-before edge here
+        (hybrid-detector style), so even when the schedule happens not
+        to overlap the accesses, disjoint locksets still convict."""
+        tracer = Tracer()
+        with instrumented(tracer):
+            la, lb = threading.Lock(), threading.Lock()
+            shared = track_dict({"x": 0}, "shared", tracer)
+
+            def via(lk):
+                with lk:
+                    shared["x"] = shared["x"] + 1
+
+            t1 = threading.Thread(target=via, args=(la,))
+            t2 = threading.Thread(target=via, args=(lb,))
+            t1.start()
+            t2.start()
+            t1.join()
+            t2.join()
+        races = detect_races(tracer.events)
+        assert any(r.var == "shared['x']" for r in races)
+        assert "∩" in format_report(races)
+
+    def test_common_lock_one_of_many_clean(self):
+        tracer = Tracer()
+        with instrumented(tracer):
+            common, extra = threading.Lock(), threading.Lock()
+            shared = track_dict({"x": 0}, "shared", tracer)
+
+            def a():
+                with common:
+                    shared["x"] = 1
+
+            def b():
+                with extra:
+                    with common:
+                        shared["x"] = 2
+
+            t1, t2 = threading.Thread(target=a), threading.Thread(target=b)
+            t1.start()
+            t2.start()
+            t1.join()
+            t2.join()
+        assert detect_races(tracer.events) == []
+
+    def test_missed_join_publish_detected(self):
+        tracer = Tracer()
+        with instrumented(tracer):
+            out = track_dict({}, "out", tracer)
+
+            def produce():
+                out["result"] = 42
+
+            t = threading.Thread(target=produce)
+            t.start()
+            _ = out.get("result")      # read BEFORE the join
+            t.join()
+        races = detect_races(tracer.events)
+        assert any(r.var == "out['result']" for r in races)
+
+    def test_join_establishes_order_clean(self):
+        tracer = Tracer()
+        with instrumented(tracer):
+            out = track_dict({}, "out", tracer)
+
+            def produce():
+                out["result"] = 42
+
+            t = threading.Thread(target=produce)
+            t.start()
+            t.join()
+            _ = out.get("result")
+        assert detect_races(tracer.events) == []
+
+    def test_fork_publishes_parent_writes(self):
+        """Parent writes before start() are visible to the child."""
+        tracer = Tracer()
+        with instrumented(tracer):
+            box = track_dict({}, "box", tracer)
+            box["cfg"] = 1
+
+            def consume():
+                _ = box.get("cfg")
+
+            t = threading.Thread(target=consume)
+            t.start()
+            t.join()
+        assert detect_races(tracer.events) == []
+
+    def test_condition_notify_orders_handoff(self):
+        tracer = Tracer()
+        with instrumented(tracer):
+            cond = threading.Condition()
+            box = track_dict({}, "box", tracer)
+
+            def produce():
+                with cond:
+                    box["v"] = 7
+                    cond.notify_all()
+
+            t = threading.Thread(target=produce)
+            with cond:
+                t.start()
+                cond.wait(5.0)
+            with cond:
+                _ = box.get("v")
+            t.join()
+        assert detect_races(tracer.events) == []
+
+    def test_tracked_list_and_attrs(self):
+        tracer = Tracer()
+        with instrumented(tracer):
+            class Box:
+                pass
+
+            b = Box()
+            b.size = 0
+            track_attrs(b, "Box", tracer, ["size"])
+            members = track_list([], "members", tracer)
+
+            def grow():
+                members.append(1)
+                b.size = b.size + 1
+
+            ts = [threading.Thread(target=grow) for _ in range(2)]
+            for t in ts:
+                t.start()
+            for t in ts:
+                t.join()
+        races = detect_races(tracer.events)
+        assert any(r.var == "members" for r in races)
+        assert any(r.var == "Box.size" for r in races)
+
+
+# ---------------------------------------------------------------------------
+# Determinism: a seed names one schedule
+# ---------------------------------------------------------------------------
+
+class TestDeterminism:
+    @staticmethod
+    def _one(seed):
+        tracer = Tracer()
+        sched = PCTScheduler(seed, wall_s=45.0)
+        with instrumented(tracer, scheduler=sched):
+            stats = track_dict({"n": 0}, "stats", tracer)
+
+            def bump():
+                for _ in range(5):
+                    stats["n"] = stats["n"] + 1
+
+            ts = [threading.Thread(target=bump) for _ in range(3)]
+            for t in ts:
+                t.start()
+            for t in ts:
+                t.join()
+            sched.open_freerun()
+        assert not sched.truncated
+        trace = [(e.tid, e.kind, e.obj, e.site) for e in tracer.events]
+        return trace, format_report(detect_races(tracer.events))
+
+    def test_same_seed_identical_trace_and_report(self):
+        t1, r1 = self._one(7)
+        t2, r2 = self._one(7)
+        assert t1 == t2
+        assert r1 == r2
+        assert "RACE" in r1        # the fixture really races
+
+    def test_different_seed_different_schedule(self):
+        t1, _ = self._one(7)
+        t3, _ = self._one(8)
+        assert t1 != t3
+
+
+# ---------------------------------------------------------------------------
+# Real-runtime scenarios: race-clean after the PR-8 fixes
+# ---------------------------------------------------------------------------
+
+class TestScenariosClean:
+    @pytest.mark.parametrize("name", sorted(SCENARIOS))
+    def test_scenario_race_clean(self, name):
+        r = run_scenario(name, seed=0, wall_s=45.0)
+        assert r.error is None, r.error
+        assert r.races == [], format_report(r.races)
+        assert r.events > 0
+
+    def test_driver_exit_clean(self, capsys):
+        assert run_sanitize(seed=0, schedules=1, wall_s=45.0,
+                            fault_inject=False) == 0
+        assert "run(s) explored" in capsys.readouterr().out
+
+
+# ---------------------------------------------------------------------------
+# Seed-pinned regressions: strip one fix's lock → the sanitizer must
+# light up; the shipped (locked) code must stay dark
+# ---------------------------------------------------------------------------
+
+SEED_AUTOSCALER = 5     # pinned: this seed exhibits the stripped race
+
+
+class TestFixRegressions:
+    def _autoscaler(self, strip):
+        from repro.analysis.sanitize.scenarios import mq_autoscaler
+        import repro.runtime.mq as mq
+
+        orig_init = mq.FleetAutoscaler.__init__
+        if strip:
+            def unlocked_init(self, *a, **kw):
+                orig_init(self, *a, **kw)
+                self._lock = _REAL_LOCK()   # invisible = pre-fix
+            mq.FleetAutoscaler.__init__ = unlocked_init
+        try:
+            tracer = Tracer()
+            sched = PCTScheduler(SEED_AUTOSCALER, wall_s=45.0)
+            with instrumented(tracer, sched):
+                cleanup = mq_autoscaler(tracer)
+                sched.open_freerun()
+                cleanup()
+            return detect_races(tracer.events)
+        finally:
+            mq.FleetAutoscaler.__init__ = orig_init
+
+    def test_autoscaler_tick_lock_regression(self):
+        assert self._autoscaler(strip=False) == []
+        races = self._autoscaler(strip=True)
+        assert any("FleetAutoscaler" in r.var for r in races), \
+            "stripping the autoscaler lock must surface the tick races"
+        assert any("mq.py" in s for s in sites(races))
+
+    def _pool(self, strip, tmp_path):
+        from repro.runtime.mq import LocalWorkerPool
+
+        tracer = Tracer()
+        sched = PCTScheduler(3, wall_s=45.0)
+        with instrumented(tracer, sched):
+            pool = LocalWorkerPool(1, "thread", mq_dir=str(tmp_path),
+                                   fn=lambda g: g.sum(1, keepdims=True),
+                                   lease_s=30.0, poll_s=0.001)
+            if strip:
+                pool._lock = _REAL_LOCK()
+            pool._members = track_list(pool._members,
+                                       "LocalWorkerPool._members", tracer)
+            pool.start()
+
+            def grower():
+                pool.grow(1)
+
+            g = threading.Thread(target=grower)
+            g.start()
+            pool.alive_workers()
+            g.join()
+            sched.open_freerun()
+            pool.stop()
+        return detect_races(tracer.events)
+
+    def test_worker_pool_members_lock_regression(self, tmp_path):
+        assert self._pool(False, tmp_path / "a") == []
+        races = self._pool(True, tmp_path / "b")
+        assert any(r.var == "LocalWorkerPool._members" for r in races), \
+            "stripping the pool lock must surface the members race"
+
+    class _StubScheduler:
+        def submit(self, tickets, job_dir=None):
+            return [f"h{t}" for t in tickets]
+
+        def poll(self, handle):
+            return "done"
+
+        def cancel(self, handle):
+            pass
+
+    def _fleet(self, strip, tmp_path):
+        from repro.runtime.mq import MQWorkerFleet
+
+        tracer = Tracer()
+        sched = PCTScheduler(3, wall_s=45.0)
+        with instrumented(tracer, sched):
+            fleet = MQWorkerFleet(self._StubScheduler(), 1,
+                                  mq_dir=str(tmp_path))
+            if strip:
+                fleet._lock = _REAL_LOCK()
+            fleet.handles = track_list(fleet.handles,
+                                       "MQWorkerFleet.handles", tracer)
+            track_attrs(fleet, "MQWorkerFleet", tracer,
+                        ["_ticket_seq", "num_workers"])
+            fleet.start()
+
+            def grower():
+                fleet.grow(1)
+
+            g = threading.Thread(target=grower)
+            g.start()
+            fleet.alive_workers()
+            g.join()
+            sched.open_freerun()
+            fleet.stop(timeout_s=0.1)
+        return detect_races(tracer.events)
+
+    def test_fleet_tickets_lock_regression(self, tmp_path):
+        assert self._fleet(False, tmp_path / "a") == []
+        races = self._fleet(True, tmp_path / "b")
+        assert any(r.var in ("MQWorkerFleet.handles",
+                             "MQWorkerFleet._ticket_seq",
+                             "MQWorkerFleet.num_workers")
+                   for r in races), \
+            "stripping the fleet lock must surface the submit races"
+
+    def test_priority_cache_locked(self, tmp_path):
+        """run_priority's cache writes go through _PRIORITY_LOCK (the
+        pre-fix bare dict mutation pattern must be gone)."""
+        from repro.runtime import mq
+
+        mq_dir = str(tmp_path)
+        mq.make_broker_dirs(mq_dir)
+        mq.register_run(mq_dir, "prio", priority=3,
+                        fn_spec="tests.conftest:_nope", num_objectives=1)
+        tracer = Tracer()
+        with instrumented(tracer):
+            old = (mq._PRIORITY_CACHE, mq._PRIORITY_LOCK)
+            # the tracked twin of the module pair: an instrumented lock
+            # (the module-level one predates the context, so the tracer
+            # cannot see it) guarding a tracked cache
+            mq._PRIORITY_CACHE = track_dict(dict(mq._PRIORITY_CACHE),
+                                            "_PRIORITY_CACHE", tracer)
+            mq._PRIORITY_LOCK = threading.Lock()
+            try:
+                ts = [threading.Thread(
+                    target=lambda: mq.run_priority(mq_dir, "prio"))
+                    for _ in range(2)]
+                for t in ts:
+                    t.start()
+                for t in ts:
+                    t.join()
+            finally:
+                mq._PRIORITY_CACHE, mq._PRIORITY_LOCK = old
+        assert detect_races(tracer.events) == [], \
+            "run_priority cache accesses must share _PRIORITY_LOCK"
+
+
+# ---------------------------------------------------------------------------
+# FS fault injection on the real broker tree
+# ---------------------------------------------------------------------------
+
+class TestFaultInjection:
+    def test_sweep_clean_and_covers_publish_sites(self):
+        logs = []
+        res = fault_sweep(
+            _fault_scenario,
+            lambda: tempfile.mkdtemp(prefix="san-test-fault-"),
+            log=logs.append)
+        assert res.ok, res.problems
+        ops = {s.split("@")[0] for s in res.sites}
+        assert "publish" in ops, res.sites
+        assert res.passes == len(res.sites) > 0
+        assert any("fired" in line for line in logs)
+
+    def test_janitor_reaps_torn_tmp_outside_queue_dirs(self, tmp_path):
+        """The gap this PR's sweep found: crashed publishers of registry
+        entries, fleet tickets, and the STOP sentinel leave *.tmp where
+        the janitor never looked."""
+        from repro.runtime.mq import (FLEET_DIR, RUNS_DIR, janitor_sweep,
+                                      make_broker_dirs)
+
+        mq_dir = str(tmp_path)
+        make_broker_dirs(mq_dir)
+        os.makedirs(os.path.join(mq_dir, FLEET_DIR), exist_ok=True)
+        torn = [os.path.join(mq_dir, RUNS_DIR, "r1.json.tmp"),
+                os.path.join(mq_dir, FLEET_DIR, "w0.worker.json.tmp"),
+                os.path.join(mq_dir, "STOP.tmp")]
+        for path in torn:
+            with open(path, "w") as f:
+                f.write("torn")
+        # age guard still protects in-flight writes
+        assert janitor_sweep(mq_dir, max_age_s=9999.0) == 0
+        assert all(os.path.exists(p) for p in torn)
+        assert janitor_sweep(mq_dir, max_age_s=-1.0) >= len(torn)
+        assert not any(os.path.exists(p) for p in torn)
+
+
+# ---------------------------------------------------------------------------
+# Zero-cost-when-disabled: the runtime never imports the sanitizer
+# ---------------------------------------------------------------------------
+
+def test_runtime_does_not_import_sanitizer():
+    import subprocess
+    import sys
+    code = ("import sys, repro.runtime.mq, repro.runtime.batchq, "
+            "repro.core.broker; "
+            "bad = [m for m in sys.modules if 'sanitize' in m]; "
+            "assert not bad, bad; print('clean')")
+    env = dict(os.environ)
+    src = os.path.join(os.path.dirname(__file__), os.pardir, "src")
+    env["PYTHONPATH"] = os.path.abspath(src)
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True)
+    assert out.returncode == 0 and "clean" in out.stdout, out.stderr
+
+
+def test_instrumented_restores_factories():
+    before = (threading.Lock, threading.RLock, threading.Condition,
+              threading.Event, threading.Thread)
+    tracer = Tracer()
+    with instrumented(tracer):
+        assert threading.Lock is not before[0]
+    after = (threading.Lock, threading.RLock, threading.Condition,
+             threading.Event, threading.Thread)
+    assert before == after
