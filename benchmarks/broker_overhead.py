@@ -30,6 +30,16 @@ pins the thread sanitizer's zero-cost-when-disabled seam: importing
 ``repro.analysis.sanitize`` must leave the threading factories stock
 and the measured mq dispatch cost unchanged — instrumentation exists
 only inside an explicit ``instrumented()`` context.
+
+Observability rows: ``mq_dispatch_metrics_off`` vs
+``mq_dispatch_metrics_on`` pins the metrics bus's own
+zero-cost-when-disabled seam (null registry vs a live
+``MetricsRegistry`` + JSONL event log; target <5% overhead on the
+tiny-chunks workload), and ``mq_autoscale_depth_signal`` vs
+``mq_autoscale_cost_signal`` replays a skewed-cost burst under both
+autoscaler signals — the cost signal reads the CostEMA-derived
+per-task seconds off the metrics bus, predicts the outstanding work,
+and out-provisions the depth heuristic on slow-task backlogs.
 """
 from __future__ import annotations
 
@@ -277,6 +287,33 @@ def run(csv: bool = True):
     if csv:
         print(f"mq_dispatch_sanitizer_loaded,{us:.0f},us_per_evaluate")
 
+    # observability plane, same zero-cost contract: identical mq
+    # dispatch with the metrics bus OFF (the null-registry seam — one
+    # attribute check per emission site) vs ON (a live MetricsRegistry
+    # + JSONL event log installed through repro.runtime.metrics).
+    # Target: <5% instrumented overhead on this tiny-chunks workload
+    import os as _os
+
+    from repro.obs import EventLog, MetricsRegistry
+    from repro.runtime import metrics as runtime_metrics
+    us_off = _mq_dispatch_us()
+    rows.append(("mq_dispatch_metrics_off", us_off))
+    if csv:
+        print(f"mq_dispatch_metrics_off,{us_off:.0f},us_per_evaluate")
+    obs_dir = tempfile.mkdtemp(prefix="chambga-obsbench-")
+    obs_log = EventLog(_os.path.join(obs_dir, "events.jsonl"))
+    runtime_metrics.set_registry(MetricsRegistry(events=obs_log))
+    try:
+        us_on = _mq_dispatch_us()
+    finally:
+        runtime_metrics.set_registry(None)
+        obs_log.close()
+        shutil.rmtree(obs_dir, ignore_errors=True)
+    rows.append(("mq_dispatch_metrics_on", us_on))
+    if csv:
+        print(f"mq_dispatch_metrics_on,{us_on:.0f},us_per_evaluate_"
+              f"{(us_on / us_off - 1) * 100:+.1f}pct_vs_off")
+
     # cost convergence WITHIN a generation: time from batch start to the
     # FIRST CostEMA observation on a skewed simulator. The batch backend
     # observes at collect time (≈ the full makespan); the mq backend
@@ -433,6 +470,42 @@ def run(csv: bool = True):
         if csv:
             print(f"{name},{wall * 1e6:.0f},us_per_evaluate_peak_{peak}"
                   f"_workers_jobs_{bstats.get('jobs', 0)}")
+
+    # autoscaler signal shoot-out on a SKEWED-COST burst: 8 chunks of
+    # ~90ms each from a 1-worker floor. The depth signal provisions
+    # ceil(8 / backlog_per_worker=3) = 3 workers — blind to how slow
+    # each task is. The cost signal multiplies the measured per-task
+    # CostEMA (published by the backend into the metrics bus) by the
+    # ready depth: 8 x 90ms outstanding against an 80ms horizon wants
+    # far more than 3, clamps to max_workers=6, and drains the burst
+    # in ~2 waves instead of ~3
+    for sig in ("depth", "cost"):
+        reg = MetricsRegistry()
+        runtime_metrics.set_registry(reg)
+        d = tempfile.mkdtemp(prefix="chambga-sig-")
+        pool = LocalWorkerPool(num_workers=1, mode="thread", mq_dir=d,
+                               lease_s=30.0, poll_s=0.002)
+        scaler = FleetAutoscaler(pool, min_workers=1, max_workers=6,
+                                 interval_s=0.02, cooldown_s=0.04,
+                                 backlog_per_worker=3.0, signal=sig,
+                                 metrics=reg, cost_horizon_s=0.08,
+                                 default_cost_s=0.09)
+        backend = QueueBackend(heavy_fn, run_id=f"sig-{sig}", mq_dir=d,
+                               worker_pool=pool, autoscaler=scaler,
+                               chunk_timeout_s=300, poll_interval_s=0.002,
+                               num_workers=8)
+        t0 = time.perf_counter()
+        backend._host_eval(g_heavy)
+        wall = time.perf_counter() - t0
+        peak = scaler.stats_snapshot()["peak_workers"]
+        backend.close()
+        runtime_metrics.set_registry(None)
+        shutil.rmtree(d, ignore_errors=True)
+        name = f"mq_autoscale_{sig}_signal"
+        rows.append((name, wall * 1e6))
+        if csv:
+            print(f"{name},{wall * 1e6:.0f},us_per_evaluate_peak_{peak}"
+                  f"_workers")
 
     # engine loop: synchronous metric reads every epoch vs the pipelined
     # (async D2H + deferred device_get) path — async must be no slower

@@ -8,18 +8,50 @@
   roofline         — three-term roofline per dry-run cell (EXPERIMENTS.md)
 
 Pass --quick for the fast subset (CI); --only NAME to run one section.
+--json PATH dumps every section's rows machine-readably (the default
+``BENCH_obs.json`` feeds dashboards and regression diffing — notably
+the ``mq_dispatch_metrics_{off,on}`` observability-overhead pair and
+the ``mq_autoscale_{depth,cost}_signal`` shoot-out).
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
+
+
+def _jsonable(value):
+    """Best-effort conversion of a benchmark row value (floats, numpy
+    scalars, nested tuples) into plain JSON types."""
+    if isinstance(value, (list, tuple)):
+        return [_jsonable(v) for v in value]
+    if isinstance(value, dict):
+        return {str(k): _jsonable(v) for k, v in value.items()}
+    if isinstance(value, (str, int, bool)) or value is None:
+        return value
+    try:
+        return float(value)
+    except (TypeError, ValueError):
+        return str(value)
+
+
+def write_bench_json(path: str, sections: dict) -> None:
+    """Dump every section's rows as ``{section: [[name, value], ...]}``
+    — the machine-readable mirror of the CSV lines printed above."""
+    with open(path, "w") as f:
+        json.dump({k: _jsonable(v) for k, v in sections.items()},
+                  f, indent=2, sort_keys=True)
+        f.write("\n")
 
 
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", default=None)
+    ap.add_argument("--json", default="BENCH_obs.json", metavar="PATH",
+                    help="write all section rows machine-readably "
+                         "(empty string disables)")
     args = ap.parse_args(argv)
 
     sections = {}
@@ -59,6 +91,9 @@ def main(argv=None) -> None:
         print("# --- roofline terms from the dry-run ---")
         sections["roofline"] = roofline.run()
 
+    if args.json:
+        write_bench_json(args.json, sections)
+        print(f"# wrote {args.json}")
     print(f"# total {time.perf_counter() - t_all:.1f}s")
 
 

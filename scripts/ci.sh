@@ -6,6 +6,7 @@
 #   scripts/ci.sh lint            # protocol linter + ruff, no test suites
 #   scripts/ci.sh verify-protocol # broker-contract model check, no tests
 #   scripts/ci.sh sanitize        # dynamic thread sanitizer, no tests
+#   scripts/ci.sh obs-smoke       # metrics bus + exporter smoke, no tests
 #
 # The verify-protocol lane model-checks the broker queue contract
 # (src/repro/analysis/proto/): a bounded, deterministic (BFS order,
@@ -104,14 +105,25 @@ run_sanitize() {
         --seed 0 --schedules 3 --wall-time 30 --fault-inject
 }
 
+# Observability smoke: a real mq-mock dispatch with the metrics bus
+# installed — asserts the claim/publish counters, event-log kinds, and
+# replayed queue depth, then writes + parses the Prometheus textfile
+# (see repro/obs/__main__.py). Catches a broken emission site or
+# exporter in seconds, before the test suites start.
+run_obs_smoke() {
+    python -m repro.obs --smoke
+}
+
 LANE="${1:-full}"
 case "$LANE" in
     lint)      run_lint ;;
     verify-protocol) run_verify_protocol ;;
     sanitize)  run_sanitize ;;
+    obs-smoke) run_obs_smoke ;;
     fast)      run_lint
                run_verify_protocol
                run_sanitize
+               run_obs_smoke
                exec python -m pytest -x -q -m "not slow" \
                     tests/backend_conformance.py tests ;;
     durations) exec python -m pytest -q -m "not slow" --durations=15 \

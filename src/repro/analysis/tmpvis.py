@@ -22,6 +22,15 @@ Inside the protocol modules this checker flags:
   lease name or ``".lease"`` constant): leases are METADATA-ONLY — the
   protocol reads ``getmtime``, never the body, and a body read would
   race the mtime-only heartbeat touch.
+
+Scope: the queue protocol modules (``PROTOCOL_MODULES``) plus
+``repro.obs`` — the observability exporters publish ``*.prom``
+textfiles into the SAME polled broker directories (atomic replace,
+so a ``.tmp`` sibling can appear there too), and the dashboard's
+scrapers list those directories; their listings must filter like any
+other poller. Only this checker extends to ``repro.obs``: the
+atomic-write rule keys off :data:`PROTOCOL_MODULES` unchanged, since
+the event log is append-only by design (see ``repro.obs.events``).
 """
 from __future__ import annotations
 
@@ -32,6 +41,13 @@ from repro.analysis.core import (Finding, build_aliases, canonical_call,
                                  module_matches)
 
 RULE = "tmp-invisible"
+
+#: this rule's scope: the queue protocol plus the obs exporter paths
+#: (metric textfiles live in polled broker dirs; module_matches is
+#: per-module suffix equality, so each obs module is named)
+TMPVIS_MODULES = PROTOCOL_MODULES + (
+    "repro.obs", "repro.obs.registry", "repro.obs.export",
+    "repro.obs.events", "repro.obs.dashboard", "repro.obs.__main__")
 
 #: calls that enumerate raw directory entries
 _LISTING_CALLS = {
@@ -97,7 +113,7 @@ def _mentions_lease(node) -> bool:
 def check_tmp_invisible(universe):
     findings = []
     for sf in universe:
-        if not module_matches(sf.module, PROTOCOL_MODULES):
+        if not module_matches(sf.module, TMPVIS_MODULES):
             continue
         aliases = build_aliases(sf.tree)
         owner = _enclosing_function_of(sf.tree)

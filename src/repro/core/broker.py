@@ -107,6 +107,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.hostbridge import PureCallbackBridge, collect_chunk_results
+from repro.runtime import metrics as _metrics
 
 
 def padded_size(n: int, num_workers: int) -> int:
@@ -305,6 +306,16 @@ class CostEMA:
                     self._est[idx] = ((1.0 - a) * self._est[idx]
                                       + a * per_item)
             self.updates += 1
+            est = self._est
+        m = _metrics.get_registry()
+        if m.enabled:
+            # per-slot costs, summarized: full per-slot label
+            # cardinality would blow the registry's series cap on any
+            # real population, so exporters get the distribution shape
+            m.inc("cost_ema_updates_total")
+            m.set_gauge("cost_ema_mean_seconds", float(est.mean()))
+            m.set_gauge("cost_ema_max_seconds", float(est.max()))
+            m.set_gauge("cost_ema_min_seconds", float(est.min()))
 
     def reset(self) -> None:
         """Drop learned state (e.g. after an elastic resize re-keys
@@ -534,13 +545,22 @@ class Broker:
         retries, timeouts, lease re-queues, streamed EMA updates, pruned
         jobs, whatever the backend keeps (empty for backends that keep
         none, e.g. inline SPMD). Returns a copy: safe to mutate, and
-        stable while in-flight evaluations keep counting. Backends that
-        expose a locked ``stats_snapshot`` are read through it so the
-        copy is consistent under concurrent increments."""
+        stable while in-flight evaluations keep counting. Every shipped
+        backend (HostPool, slurm-array batch, mq) exposes a locked
+        ``stats_snapshot`` and is read through it — a direct
+        ``self.stats`` dict read from the manager thread is a latent
+        race under concurrent increments; the raw fallback exists only
+        for foreign backends without one. A fleet autoscaled by the mq
+        backend contributes its own snapshot under ``autoscaler_*``
+        keys (same locked-read contract)."""
         snap = getattr(self.backend, "stats_snapshot", None)
-        if snap is not None:
-            return snap()
-        return dict(getattr(self.backend, "stats", None) or {})
+        stats = snap() if snap is not None \
+            else dict(getattr(self.backend, "stats", None) or {})
+        scaler = getattr(self.backend, "autoscaler", None)
+        if scaler is not None:
+            for k, v in scaler.stats_snapshot().items():
+                stats[f"autoscaler_{k}"] = v
+        return stats
 
     def _identity_stats(self) -> dict:
         one = jnp.ones(())

@@ -28,6 +28,8 @@ from typing import List, Optional
 
 import numpy as np
 
+from repro.runtime import metrics as _metrics
+
 
 class PureCallbackBridge:
     """Mixin: DispatchBackend surface over a host-side ``_host_eval``.
@@ -214,7 +216,12 @@ def collect_chunk_results(outs: List[tuple], cost_ema,
                           chunk_sizes: List[int]) -> np.ndarray:
     """Common epilogue of a chunked host evaluation: feed measured
     per-chunk durations to the EMA cost model (when dispatch supplied a
-    permutation) and concatenate the fitness chunks."""
+    permutation), publish the durations to the metrics bus, and
+    concatenate the fitness chunks."""
+    m = _metrics.get_registry()
+    if m.enabled:
+        for _, d in outs:
+            m.observe("dispatch_chunk_duration_seconds", d)
     if cost_ema is not None and perm is not None:
         cost_ema.observe(perm, chunk_sizes, [d for _, d in outs])
     out = np.concatenate([o for o, _ in outs], axis=0)

@@ -28,6 +28,7 @@ from __future__ import annotations
 
 import argparse
 import contextlib
+import os
 
 import jax
 import numpy as np
@@ -112,6 +113,37 @@ Fleet sharing (multi-tenant message queue):
   --array / kubectl apply round-trip), and shrinks it back to MIN on
   drain by dropping poison STOP tickets that idle workers honor at
   chunk boundaries (never mid-evaluation, never ahead of queued work).
+  --mq-autoscale-signal picks what the controller scales ON:
+    depth      raw outstanding task count (ready + leased) against
+               one-task-per-worker backlog — the default.
+    cost       predicted outstanding COST: (ready + leased) x the
+               streaming per-task cost EMA, provisioned to drain
+               within a horizon, plus measured worker utilization —
+               eight 10ms tasks and eight 10s tasks are the same
+               depth but very different fleets. Decision inputs are
+               read from the metrics bus (see Observability), so
+               enabling --metrics-dir/--events-log also records every
+               decision with its inputs.
+
+Observability (--metrics-dir / --metrics-port / --events-log):
+  Off by default and zero-cost when off (the runtime publishes through
+  a no-op seam; nothing under runtime/ imports repro.obs). Any of the
+  three flags installs the metrics bus (repro.obs.MetricsRegistry):
+  queue depth and lease counts per run, claim latency, chunk-duration
+  histograms, worker busy/idle utilization, per-task cost EMA, and
+  autoscaler decisions, from every dispatch backend that emits them.
+    --metrics-dir DIR   publish DIR/chambga.prom atomically every ~2s
+               (Prometheus textfile exposition — point a node-exporter
+               textfile collector, or this repo's terminal dashboard,
+               at it: python -m repro.obs --dashboard --metrics-dir DIR)
+    --metrics-port P    serve http://127.0.0.1:P/metrics from a stdlib
+               http.server thread (cloud runs; 0 picks a free port)
+    --events-log FILE   append every structured event (enqueue/claim/
+               publish/lease_requeue/retry/autoscale/...) as one JSON
+               line; replay queue depth over time with
+               python -m repro.obs --dashboard --events-log FILE
+  python -m repro.obs --grafana-out FILE writes an import-ready
+  Grafana dashboard JSON over the exported metric families.
 """
 
 from repro.configs.base import GAConfig
@@ -262,6 +294,24 @@ def main(argv=None):
                          "toward MAX on queue depth, shrink back to MIN "
                          "on drain via poison STOP tickets (owned fleets "
                          "only)")
+    ap.add_argument("--mq-autoscale-signal", default="depth",
+                    choices=("depth", "cost"),
+                    help="what --mq-autoscale scales on: raw outstanding "
+                         "task count (depth) or predicted outstanding "
+                         "cost x measured utilization read from the "
+                         "metrics bus (cost; see Observability below)")
+    ap.add_argument("--metrics-dir", default=None,
+                    help="publish a Prometheus textfile "
+                         "(DIR/chambga.prom, atomic replace) for "
+                         "node-exporter textfile collectors / the "
+                         "terminal dashboard (see Observability below)")
+    ap.add_argument("--metrics-port", type=int, default=None,
+                    help="serve /metrics on this port via stdlib "
+                         "http.server (0 picks a free port)")
+    ap.add_argument("--events-log", default=None,
+                    help="append structured dispatch events (JSONL) "
+                         "here: enqueue/claim/publish/lease_requeue/"
+                         "retry/autoscale/... (see Observability below)")
     ap.add_argument("--cost-ema", action="store_true",
                     help="learn the dispatch cost model online from "
                          "measured per-lane wall times (needs a "
@@ -287,6 +337,31 @@ def main(argv=None):
         # primes the EMA's slot table so even the FIRST dispatch of a
         # skewed workload is balanced; wall times refine it online
         cost_fn = CostEMA(alpha=args.ema_alpha, prime_fn=cost_fn)
+    # observability plane: install the metrics bus BEFORE backend
+    # construction so the very first job's enqueue/claim events land;
+    # absent these flags the runtime keeps its no-op null registry
+    obs_registry = obs_exporter = obs_http = obs_events = None
+    if args.metrics_dir or args.metrics_port is not None \
+            or args.events_log:
+        from repro.obs import (PROM_FILENAME, EventLog, MetricsHTTPServer,
+                               MetricsRegistry, TextfileExporter)
+        from repro.runtime import metrics as runtime_metrics
+        if args.events_log:
+            parent = os.path.dirname(args.events_log)
+            if parent:
+                os.makedirs(parent, exist_ok=True)
+            obs_events = EventLog(args.events_log)
+        obs_registry = MetricsRegistry(events=obs_events)
+        runtime_metrics.set_registry(obs_registry)
+        if args.metrics_dir:
+            os.makedirs(args.metrics_dir, exist_ok=True)
+            obs_exporter = TextfileExporter(
+                obs_registry,
+                os.path.join(args.metrics_dir, PROM_FILENAME)).start()
+        if args.metrics_port is not None:
+            obs_http = MetricsHTTPServer(
+                obs_registry, port=args.metrics_port).start()
+            print(f"metrics: http://127.0.0.1:{obs_http.port}/metrics")
     backend = None
     # decoupled backends default to 4 workers; the broker's lane count
     # must match them (not the dp-shard default of 1, which would take
@@ -388,7 +463,9 @@ def main(argv=None):
                                          image=args.k8s_image))
             pool = MQWorkerFleet(sched, n_mq, lease_s=args.lease_s)
         scaler = (FleetAutoscaler(pool, min_workers=autoscale[0],
-                                  max_workers=autoscale[1])
+                                  max_workers=autoscale[1],
+                                  signal=args.mq_autoscale_signal,
+                                  metrics=obs_registry)
                   if autoscale else None)
         backend = QueueBackend(
             fitness_fn, fn_spec=fn_spec,
@@ -405,6 +482,17 @@ def main(argv=None):
     # construction included) must still drain in-flight pure_callbacks
     # and free the pool / temp spool — a failed run must not strand them
     with contextlib.ExitStack() as stack:
+        if obs_registry is not None:
+            # LIFO: runs after the backend's close() below, so the
+            # exporter's final write captures the end-of-run counters
+            from repro.runtime import metrics as runtime_metrics
+            stack.callback(runtime_metrics.set_registry, None)
+            if obs_events is not None:
+                stack.callback(obs_events.close)
+            if obs_http is not None:
+                stack.callback(obs_http.stop)
+            if obs_exporter is not None:
+                stack.callback(obs_exporter.stop)
         if backend is not None:
             stack.enter_context(backend)
         plan = plan_scaling(len(jax.devices()), pop_total=cfg.global_pop,

@@ -1,0 +1,37 @@
+"""Observability plane for the dispatch runtime: metrics bus,
+structured events, Prometheus export, terminal dashboard.
+
+The plane is strictly one-directional: ``repro.obs`` imports from the
+runtime, NEVER the reverse — ``runtime/`` publishes through the no-op
+seam in :mod:`repro.runtime.metrics` and stays importable (and
+worker-purity clean) without this package. Install the live bus with::
+
+    from repro.obs import MetricsRegistry, EventLog
+    from repro.runtime import metrics as runtime_metrics
+
+    reg = MetricsRegistry(events=EventLog("events.jsonl"))
+    runtime_metrics.set_registry(reg)
+
+Exporters (:class:`TextfileExporter`, :class:`MetricsHTTPServer`) and
+the cost-signal ``FleetAutoscaler`` both read the SAME registry, so a
+test can drive autoscaling decisions purely through planted metrics.
+``python -m repro.obs --dashboard`` renders the exported artifacts in
+a terminal; ``--grafana-out`` emits importable dashboard JSON.
+"""
+from repro.obs.dashboard import (grafana_dashboard, load_metrics_dir,
+                                 render_dashboard,
+                                 write_grafana_dashboard)
+from repro.obs.events import (EventLog, iter_events,
+                              queue_depth_timeline, replay_events)
+from repro.obs.export import (PROM_FILENAME, MetricsHTTPServer,
+                              TextfileExporter, parse_prometheus_text,
+                              render_prometheus)
+from repro.obs.registry import DEFAULT_BUCKETS, MetricsRegistry
+
+__all__ = [
+    "DEFAULT_BUCKETS", "EventLog", "MetricsHTTPServer",
+    "MetricsRegistry", "PROM_FILENAME", "TextfileExporter",
+    "grafana_dashboard", "iter_events", "load_metrics_dir",
+    "parse_prometheus_text", "queue_depth_timeline", "render_dashboard",
+    "render_prometheus", "replay_events", "write_grafana_dashboard",
+]

@@ -128,6 +128,18 @@ poison ``*.stop`` tickets that idle workers honor at chunk boundaries.
 Its module docstring documents the full queue contract (atomic-rename
 claims, lease/heartbeat liveness, at-least-once delivery, run
 namespacing, priority claims, per-run vs fleet-wide STOP).
+
+Exported metrics
+----------------
+Manager-side sites publish through the no-op seam in
+:mod:`repro.runtime.metrics` (install ``repro.obs.MetricsRegistry`` to
+enable; one attribute check each when disabled; the array-task worker
+body emits nothing, so worker purity is untouched):
+``batchq_jobs_total{backend}`` / ``batchq_chunks_submitted_total`` /
+``batchq_results_total`` / ``batchq_retries_total`` /
+``batchq_timeouts_total`` (counters),
+``batchq_chunk_duration_seconds`` (histogram), plus ``batchq_submit``
+/ ``batchq_retry`` / ``batchq_timeout`` events.
 """
 from __future__ import annotations
 
@@ -149,6 +161,7 @@ import numpy as np
 
 from repro.core.hostbridge import (PureCallbackBridge, collect_chunk_results,
                                    plan_cost_chunks, scatter_chunk_results)
+from repro.runtime import metrics as _metrics
 from repro.runtime.fsatomic import (atomic_pickle, atomic_savez,
                                     atomic_write_json, atomic_write_text)
 
@@ -962,6 +975,14 @@ class SlurmArrayBackend(PureCallbackBridge):
         all_handles.extend(handles0)
         t0 = time.monotonic()
         tokens0 = [(p, h, t0) for p, h in zip(paths0, handles0)]
+        m = _metrics.get_registry()
+        if m.enabled:
+            m.inc("batchq_jobs_total", backend=self.name)
+            m.inc("batchq_chunks_submitted_total", float(len(chunks)),
+                  backend=self.name)
+            m.event("batchq_submit", backend=self.name,
+                    job_dir=os.path.basename(job_dir),
+                    chunks=len(chunks))
 
         def wait(i, token, timeout_s):
             path, handle, _t_submit = token
@@ -978,6 +999,11 @@ class SlurmArrayBackend(PureCallbackBridge):
                         raise ChunkFailure(
                             f"chunk {i}: result shape {fit.shape} != "
                             f"({len(chunks[i])}, {self.num_objectives})")
+                    mm = _metrics.get_registry()
+                    if mm.enabled:
+                        mm.inc("batchq_results_total",
+                               backend=self.name)
+                        mm.observe("batchq_chunk_duration_seconds", dur)
                     return np.asarray(fit, np.float32), dur
                 if os.path.exists(fail):
                     with open(fail) as f:
@@ -1000,6 +1026,12 @@ class SlurmArrayBackend(PureCallbackBridge):
                         and time.monotonic() - t_clock > timeout_s):
                     with self._lock:
                         self.stats["timeouts"] += 1
+                    mm = _metrics.get_registry()
+                    if mm.enabled:
+                        mm.inc("batchq_timeouts_total",
+                               backend=self.name)
+                        mm.event("batchq_timeout", backend=self.name,
+                                 chunk=i)
                     self.scheduler.cancel(handle)
                     raise TimeoutError(
                         f"chunk {i} straggled past {timeout_s}s "
@@ -1009,6 +1041,11 @@ class SlurmArrayBackend(PureCallbackBridge):
         def on_retry(i, attempt, exc):
             with self._lock:
                 self.stats["retries"] += 1
+            mm = _metrics.get_registry()
+            if mm.enabled:
+                mm.inc("batchq_retries_total", backend=self.name)
+                mm.event("batchq_retry", backend=self.name, chunk=i,
+                         attempt=attempt)
 
         try:
             outs = run_chunks_retry(chunks, submit, wait,

@@ -193,6 +193,40 @@ end — so under long tails the next generation's dispatch already sees
 sharpened estimates. It composes with ``Broker``'s padded cost-balanced
 dispatch and the shared ``run_chunks_retry`` timeout/retry semantics
 unchanged.
+
+Exported metrics
+----------------
+Every site below publishes through the no-op seam in
+:mod:`repro.runtime.metrics` — install ``repro.obs.MetricsRegistry``
+via ``set_registry`` to turn them on; disabled, each site costs one
+attribute check (the ``mq_dispatch_metrics_{off,on}`` benchmark rows
+pin the instrumented overhead <5%). Worker-side sites are stdlib-only,
+so the worker-purity closure is unchanged.
+
+* ``mq_claims_total{run}`` (counter), ``mq_claim_latency_seconds``
+  (histogram) — per winning claim; latency is enqueue→claim from the
+  task file's rename-preserved mtime.
+* ``mq_tasks_completed_total{run}`` / ``mq_task_failures_total{run}``
+  (counters), ``mq_worker_busy_seconds_total`` /
+  ``mq_worker_idle_seconds_total`` (counters) — claim→publish spans
+  and poll sleeps; their deltas are the fleet-utilization signal.
+* ``mq_jobs_total{run}`` / ``mq_chunks_enqueued_total{run}`` /
+  ``mq_results_streamed_total{run}`` / ``mq_lease_requeues_total{run}``
+  / ``mq_retries_total{run}`` / ``mq_timeouts_total{run}`` (counters),
+  ``mq_chunk_duration_seconds`` / ``mq_lease_age_seconds``
+  (histograms) — manager-side job lifecycle.
+* ``mq_cost_per_task_seconds{run}`` (gauge) — streaming EMA of
+  duration/chunk-size; ``mq_ready_total`` / ``mq_leased_total`` /
+  ``mq_worker_utilization`` / ``mq_outstanding_cost_seconds`` /
+  ``autoscaler_size`` / ``autoscaler_desired`` (gauges),
+  ``autoscaler_scale_{ups,downs}_total`` (counters) — published by
+  :class:`FleetAutoscaler`, whose ``signal="cost"`` mode also READS
+  its decision inputs from the same bus.
+* events (JSONL via ``MetricsRegistry(events=EventLog(...))``):
+  ``enqueue`` / ``claim`` / ``publish`` / ``fail`` / ``result`` /
+  ``lease_requeue`` / ``retry`` / ``timeout`` / ``job_done`` /
+  ``autoscale`` — ``repro.obs.queue_depth_timeline`` replays queue
+  depth over time from these alone.
 """
 from __future__ import annotations
 
@@ -214,6 +248,7 @@ import numpy as np
 
 from repro.core.hostbridge import (PureCallbackBridge, collect_chunk_results,
                                    plan_cost_chunks, scatter_chunk_results)
+from repro.runtime import metrics as _metrics
 from repro.runtime.batchq import _PAYLOAD, _SRC_ROOT, resolve_fn
 from repro.runtime.fsatomic import (TMP_SUFFIX, atomic_savez,
                                     atomic_write_bytes, atomic_write_json,
@@ -471,6 +506,19 @@ def claim_next(mq_dir: str, skip_runs=()) -> Optional[str]:
                           os.path.join(mq_dir, CLAIMED_DIR, name))
             except OSError:
                 continue                         # another worker won
+            m = _metrics.get_registry()
+            if m.enabled:
+                # rename preserves mtime, so the claimed file still
+                # carries its enqueue time: claim latency for free
+                try:
+                    age = max(0.0, time.time() - os.path.getmtime(
+                        os.path.join(mq_dir, CLAIMED_DIR, name)))
+                except OSError:
+                    age = 0.0
+                m.inc("mq_claims_total", run=run)
+                m.observe("mq_claim_latency_seconds", age)
+                m.event("claim", task=name, run=run,
+                        wait_s=round(age, 4))
             return name
     for name in poison:
         try:
@@ -637,6 +685,7 @@ def process_task(mq_dir: str, name: str, fn: Callable, *,
     hb = _Heartbeat(lease, heartbeat_s)
     hb.start()
     ok = False
+    t_claim = time.perf_counter()
     try:
         genomes = np.load(claimed)["genomes"]
         t0 = time.perf_counter()
@@ -651,6 +700,21 @@ def process_task(mq_dir: str, name: str, fn: Callable, *,
     finally:
         hb.stop()
         release_claim(mq_dir, name)
+    m = _metrics.get_registry()
+    if m.enabled:
+        parsed = parse_task_name(name)
+        run = parsed[0] if parsed else ""
+        busy = time.perf_counter() - t_claim
+        # claim→publish span: the utilization numerator (idle time is
+        # the worker loop's poll sleeps, counted separately)
+        m.inc("mq_worker_busy_seconds_total", busy)
+        if ok:
+            m.inc("mq_tasks_completed_total", run=run)
+            m.event("publish", task=name, run=run,
+                    duration=round(busy, 6))
+        else:
+            m.inc("mq_task_failures_total", run=run)
+            m.event("fail", task=name, run=run)
     return ok
 
 
@@ -702,6 +766,9 @@ def worker_loop(mq_dir: str, *, fn: Optional[Callable] = None,
             if time.monotonic() - janitor_t > lease_s:
                 janitor_t = time.monotonic()
                 janitor_sweep(mq_dir, max_age_s=2.0 * lease_s)
+            m = _metrics.get_registry()
+            if m.enabled:
+                m.inc("mq_worker_idle_seconds_total", poll_s)
             time.sleep(poll_s)
             continue
         if name.endswith(POISON_SUFFIX):
@@ -1062,15 +1129,37 @@ class FleetAutoscaler:
       not thrash the scheduler; ``backlog_per_worker`` sets how much
       outstanding work (ready + leased tasks) justifies one worker.
 
+    **Signals.** ``signal="depth"`` (default) scales on raw outstanding
+    task count, as above. ``signal="cost"`` scales on PREDICTED
+    OUTSTANDING COST instead: ``(ready + leased) × cost_per_task``
+    seconds of work, provisioned so the backlog drains within
+    ``cost_horizon_s`` — eight 10 ms tasks and eight 10 s tasks are the
+    same depth but very different fleets. The per-task cost and the
+    measured worker utilization (busy-seconds deltas from claim→publish
+    spans) are read from the METRICS BUS — the same registry the
+    exporters serve (``metrics=...``, or the process-wide seam in
+    :mod:`repro.runtime.metrics`) — so tests drive decisions purely
+    through planted metrics, with no fleet and no broker directory
+    (``pool=None`` skips actuation; decisions still land in ``size``/
+    ``stats``/events). When the bus has no cost series yet,
+    ``default_cost_s`` seeds the estimate; a saturated fleet
+    (utilization ≥ ``util_high`` with work still queued) is grown even
+    if the cost estimate lags.
+
     The autoscaler owns neither the pool nor the queue: ``stop()`` halts
     the control loop only (``QueueBackend.close`` stops it before the
     pool, so a dying manager never resizes a fleet it is abandoning).
     ``stats``: ``scale_ups`` / ``scale_downs`` / ``peak_workers`` /
     ``ticks``; ``size`` is the intended fleet size."""
 
-    def __init__(self, pool, *, min_workers: int = 1, max_workers: int = 8,
+    def __init__(self, pool=None, *, min_workers: int = 1,
+                 max_workers: int = 8,
                  interval_s: float = 0.25, cooldown_s: float = 1.0,
-                 backlog_per_worker: float = 1.0):
+                 backlog_per_worker: float = 1.0,
+                 signal: str = "depth", metrics=None,
+                 cost_horizon_s: float = 1.0,
+                 default_cost_s: float = 0.1,
+                 util_high: float = 0.85):
         if min_workers < 1 or max_workers < min_workers:
             raise ValueError(
                 f"need 1 <= min_workers <= max_workers: "
@@ -1078,16 +1167,25 @@ class FleetAutoscaler:
         if backlog_per_worker <= 0:
             raise ValueError(
                 f"backlog_per_worker must be > 0: {backlog_per_worker}")
+        if signal not in ("depth", "cost"):
+            raise ValueError(f"signal must be depth|cost: {signal}")
         self.pool = pool
         self.min_workers = int(min_workers)
         self.max_workers = int(max_workers)
         self.interval_s = float(interval_s)
         self.cooldown_s = float(cooldown_s)
         self.backlog_per_worker = float(backlog_per_worker)
-        self.size = int(pool.num_workers)
+        self.signal = signal
+        self.metrics = metrics
+        self.cost_horizon_s = float(cost_horizon_s)
+        self.default_cost_s = float(default_cost_s)
+        self.util_high = float(util_high)
+        self.size = int(pool.num_workers) if pool is not None \
+            else self.min_workers
         self.stats = {"scale_ups": 0, "scale_downs": 0,
-                      "peak_workers": int(pool.num_workers), "ticks": 0}
+                      "peak_workers": self.size, "ticks": 0}
         self.mq_dir: Optional[str] = None
+        self._util_prev: tuple = (0.0, None)     # (busy_total, tick time)
         self._poisons: List[str] = []
         self._poison_seq = 0
         self._last_action: Optional[float] = None
@@ -1117,12 +1215,79 @@ class FleetAutoscaler:
             pass
         return ready, leased, poison
 
+    def _utilization(self, reader, now: float, leased: int):
+        """Busy fraction of the fleet over the last tick interval.
+        Preference order: measured claim→publish busy-seconds deltas
+        from the bus, a planted/published ``mq_worker_utilization``
+        gauge, ``leased/size`` as the estimate of last resort. Caller
+        holds ``self._lock`` (the registry lock is a leaf)."""
+        if reader is not None \
+                and reader.has_series("mq_worker_busy_seconds_total"):
+            busy = reader.counter_total("mq_worker_busy_seconds_total")
+            prev_busy, prev_t = self._util_prev
+            self._util_prev = (busy, now)
+            if prev_t is not None and now > prev_t:
+                window = (now - prev_t) * max(1, self.size)
+                return min(1.0, max(0.0, (busy - prev_busy) / window))
+        if reader is not None:
+            g = reader.agg_gauge("mq_worker_utilization", "mean")
+            if g is not None:
+                return float(g)
+        if self.size > 0:
+            return min(1.0, leased / float(self.size))
+        return None
+
+    def _cost_decision(self, m, reader, now: float, ready: int,
+                       leased: int):
+        """Cost-signal sizing (caller holds ``self._lock``): provision
+        enough workers that the predicted outstanding cost drains
+        within ``cost_horizon_s``."""
+        cost = self.default_cost_s
+        if reader is not None:
+            r = reader.agg_gauge("mq_ready_total")
+            lg = reader.agg_gauge("mq_leased_total")
+            if r is not None:
+                ready = int(r)
+            if lg is not None:
+                leased = int(lg)
+            cost = reader.agg_gauge("mq_cost_per_task_seconds", "mean",
+                                    self.default_cost_s)
+        util = self._utilization(reader, now, leased)
+        outstanding_s = (ready + leased) * max(float(cost), 1e-9)
+        want = -(-outstanding_s // max(self.cost_horizon_s, 1e-9))
+        desired = min(self.max_workers, max(self.min_workers, int(want)))
+        if ready > 0 and util is not None and util >= self.util_high:
+            # saturated fleet with work still queued: grow even when
+            # the cost estimate lags reality (cold EMA, skewed tasks)
+            desired = min(self.max_workers, max(desired, self.size + 1))
+        if m.enabled:
+            m.set_gauge("mq_outstanding_cost_seconds", outstanding_s)
+            if util is not None:
+                m.set_gauge("mq_worker_utilization", util)
+        inputs = {"ready": ready, "leased": leased,
+                  "cost_per_task": round(float(cost), 6),
+                  "outstanding_s": round(outstanding_s, 6),
+                  "utilization": None if util is None
+                  else round(util, 4)}
+        return desired, inputs
+
     def _tick(self, now: float) -> None:
-        ready, leased, _poison = self.queue_state()
+        m = self.metrics if self.metrics is not None \
+            else _metrics.get_registry()
+        # cost-signal reads need the full registry interface; a bare
+        # emission sink (or the null default) falls back to estimates
+        reader = m if (m.enabled and hasattr(m, "agg_gauge")) else None
+        ready = leased = 0
+        if self.mq_dir is not None:
+            ready, leased, _poison = self.queue_state()
+            if m.enabled:
+                m.set_gauge("mq_ready_total", float(ready))
+                m.set_gauge("mq_leased_total", float(leased))
         # the whole decision runs under self._lock: size/stats/_poisons
         # are also read by the manager thread (stats_snapshot, start).
         # Lock order is autoscaler._lock -> pool._lock (via grow); the
-        # pool never calls back into the autoscaler, so no cycle.
+        # pool never calls back into the autoscaler, so no cycle. The
+        # registry's lock is a leaf: it never calls out.
         with self._lock:
             # reconcile the intended size with reality: a worker that
             # CRASHED (as opposed to retiring on a poison ticket, which
@@ -1136,11 +1301,20 @@ class FleetAutoscaler:
                     self.size = min(self.size, int(alive_fn()))
                 except Exception:
                     pass                         # scheduler poll hiccup
-            outstanding = ready + leased
-            want = -(-outstanding // max(self.backlog_per_worker, 1e-9))
-            desired = min(self.max_workers,
-                          max(self.min_workers, int(want)))
+            if self.signal == "cost":
+                desired, inputs = self._cost_decision(
+                    m, reader, now, ready, leased)
+            else:
+                outstanding = ready + leased
+                want = -(-outstanding
+                         // max(self.backlog_per_worker, 1e-9))
+                desired = min(self.max_workers,
+                              max(self.min_workers, int(want)))
+                inputs = {"ready": ready, "leased": leased}
             self.stats["ticks"] += 1
+            if m.enabled:
+                m.set_gauge("autoscaler_size", float(self.size))
+                m.set_gauge("autoscaler_desired", float(desired))
             if desired == self.size:
                 return
             if (self._last_action is not None
@@ -1159,22 +1333,30 @@ class FleetAutoscaler:
                     except OSError:
                         pass                     # already claimed: that
                                                  # worker really exited
-                if delta - revoked > 0:
+                if delta - revoked > 0 and self.pool is not None:
                     self.pool.grow(delta - revoked)
                 self.stats["scale_ups"] += 1
+                if m.enabled:
+                    m.inc("autoscaler_scale_ups_total")
             else:
-                for _ in range(self.size - desired):
-                    path = os.path.join(
-                        self.mq_dir, TASKS_DIR,
-                        f"zzzstop-{os.getpid():x}-{self._poison_seq:04d}"
-                        f"{POISON_SUFFIX}")
-                    self._poison_seq += 1
-                    try:
-                        atomic_write_text(path, "stop\n")
-                        self._poisons.append(path)
-                    except OSError:
-                        break
+                if self.mq_dir is not None:
+                    for _ in range(self.size - desired):
+                        path = os.path.join(
+                            self.mq_dir, TASKS_DIR,
+                            f"zzzstop-{os.getpid():x}-"
+                            f"{self._poison_seq:04d}{POISON_SUFFIX}")
+                        self._poison_seq += 1
+                        try:
+                            atomic_write_text(path, "stop\n")
+                            self._poisons.append(path)
+                        except OSError:
+                            break
                 self.stats["scale_downs"] += 1
+                if m.enabled:
+                    m.inc("autoscaler_scale_downs_total")
+            if m.enabled:
+                m.event("autoscale", signal=self.signal, size=self.size,
+                        desired=desired, **inputs)
             self.size = desired
             self.stats["peak_workers"] = max(self.stats["peak_workers"],
                                              desired)
@@ -1192,11 +1374,14 @@ class FleetAutoscaler:
             return self
         if self.mq_dir is None:
             self.mq_dir = getattr(self.pool, "mq_dir", None)
-        if self.mq_dir is None:
+        if self.mq_dir is None and self.signal != "cost":
+            # cost mode may run off the metrics bus alone (gauges
+            # published by whoever scans); depth has nothing else
             raise ValueError(
                 "FleetAutoscaler.start: pool has no mq_dir bound")
         with self._lock:
-            self.size = int(self.pool.num_workers)
+            if self.pool is not None:
+                self.size = int(self.pool.num_workers)
             self.stats["peak_workers"] = max(self.stats["peak_workers"],
                                              self.size)
         self._stop_evt.clear()
@@ -1362,6 +1547,10 @@ class QueueBackend(PureCallbackBridge):
         self._step_hook = step_hook
         self.stats = {"jobs": 0, "retries": 0, "timeouts": 0,
                       "lease_requeues": 0, "streamed": 0, "jobs_pruned": 0}
+        # EMA of measured per-task cost (duration / chunk size), fed by
+        # stream_result and published as the mq_cost_per_task_seconds
+        # gauge the cost-signal autoscaler reads; guarded by _lock
+        self._cost_per_task: Optional[float] = None
         #: _lock guards stats and all job-tracking state below; every
         #: ``stats[...] += 1`` in this class already sits inside it
         self._lock = threading.Lock()
@@ -1465,6 +1654,15 @@ class QueueBackend(PureCallbackBridge):
             tr.track(enqueue(i, chunk, attempt, 0))
             return attempt
 
+        m = _metrics.get_registry()
+        if m.enabled:
+            # before the files land: replayed timelines must order the
+            # enqueue ahead of the claims it enables
+            m.inc("mq_jobs_total", run=self.run_id)
+            m.inc("mq_chunks_enqueued_total", float(len(chunks)),
+                  run=self.run_id)
+            m.event("enqueue", run=self.run_id, job=job,
+                    chunks=len(chunks), genomes=int(n))
         # the whole batch hits the queue up front — idle workers start
         # pulling immediately, in cost order (priciest chunks first)
         for i, chunk in enumerate(chunks):
@@ -1472,6 +1670,20 @@ class QueueBackend(PureCallbackBridge):
 
         def stream_result(i, tr, fit, dur):
             tr.done = (np.asarray(fit, np.float32), dur)
+            m = _metrics.get_registry()
+            if m.enabled:
+                m.inc("mq_results_streamed_total", run=self.run_id)
+                m.observe("mq_chunk_duration_seconds", dur)
+                per = dur / max(1, int(sizes[i]))
+                with self._lock:
+                    prev = self._cost_per_task
+                    self._cost_per_task = per if prev is None \
+                        else 0.7 * prev + 0.3 * per
+                    cpt = self._cost_per_task
+                m.set_gauge("mq_cost_per_task_seconds", cpt,
+                            run=self.run_id)
+                m.event("result", run=self.run_id, job=job, chunk=i,
+                        duration=round(dur, 6))
             if self.cost_ema is not None and perm_np is not None:
                 # mid-flight EMA update: this chunk's slots learn NOW,
                 # while other chunks of the same batch are still running
@@ -1547,6 +1759,14 @@ class QueueBackend(PureCallbackBridge):
                     tr.track(new)
                     with self._lock:
                         self.stats["lease_requeues"] += 1
+                    m = _metrics.get_registry()
+                    if m.enabled:
+                        m.inc("mq_lease_requeues_total", run=self.run_id)
+                        m.observe("mq_lease_age_seconds", now_w - beat)
+                        m.event("lease_requeue", run=self.run_id,
+                                task=os.path.basename(claimed),
+                                requeued_as=new,
+                                age_s=round(now_w - beat, 4))
 
         resolve_fail = resolve_fail_path(self.mq_dir, self.run_id)
 
@@ -1572,6 +1792,11 @@ class QueueBackend(PureCallbackBridge):
                         and time.monotonic() - tr.t_exec > timeout_s):
                     with self._lock:
                         self.stats["timeouts"] += 1
+                    m = _metrics.get_registry()
+                    if m.enabled:
+                        m.inc("mq_timeouts_total", run=self.run_id)
+                        m.event("timeout", run=self.run_id, job=job,
+                                chunk=i, delivery=tr.delivery)
                     raise TimeoutError(
                         f"chunk {i} straggled past {timeout_s}s "
                         f"(delivery {tr.delivery})")
@@ -1580,6 +1805,11 @@ class QueueBackend(PureCallbackBridge):
         def on_retry(i, attempt, exc):
             with self._lock:
                 self.stats["retries"] += 1
+            m = _metrics.get_registry()
+            if m.enabled:
+                m.inc("mq_retries_total", run=self.run_id)
+                m.event("retry", run=self.run_id, job=job, chunk=i,
+                        attempt=attempt)
 
         try:
             outs = run_chunks_retry(chunks, submit, wait,
@@ -1621,6 +1851,9 @@ class QueueBackend(PureCallbackBridge):
             active = set(self._active_jobs)
             keep_by_job = {j: set(w) for j, w in self._job_winners.items()}
         self._gc_sweep(active, keep_by_job)
+        m = _metrics.get_registry()
+        if m.enabled:
+            m.event("job_done", run=self.run_id, job=job)
 
     def _gc_sweep(self, active: set, keep_by_job: Dict[int, set]) -> None:
         """Remove every queue file of a non-active job that is not a

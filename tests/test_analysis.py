@@ -533,6 +533,32 @@ class TestTmpInvisible:
             """})
         assert run_analysis([root], [check_tmp_invisible]) == []
 
+    def test_obs_exporter_listing_flagged(self, tmp_path):
+        # the rule extends past the queue protocol into repro.obs: the
+        # metric textfiles live in the SAME polled broker dirs, so a
+        # scraper listing without a suffix filter would read an atomic
+        # write's .tmp sibling
+        root = make_tree(tmp_path, {"repro/obs/dashboard.py": """
+            import os
+
+            def scrape_all(metrics_dir):
+                return [open(os.path.join(metrics_dir, n)).read()
+                        for n in os.listdir(metrics_dir)]
+            """})
+        findings = run_analysis([root], [check_tmp_invisible])
+        assert rules(findings) == ["tmp-invisible"]
+
+    def test_obs_exporter_filtered_listing_clean(self, tmp_path):
+        root = make_tree(tmp_path, {"repro/obs/dashboard.py": """
+            import os
+
+            def scrape_all(metrics_dir):
+                return [open(os.path.join(metrics_dir, n)).read()
+                        for n in os.listdir(metrics_dir)
+                        if n.endswith(".prom")]
+            """})
+        assert run_analysis([root], [check_tmp_invisible]) == []
+
     def test_lease_body_read_flagged_metadata_poll_clean(self, tmp_path):
         root = make_tree(tmp_path, {"repro/runtime/mq.py": """
             import os

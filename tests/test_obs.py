@@ -1,0 +1,412 @@
+"""Observability plane (repro.obs): registry semantics (label
+cardinality cap, histogram buckets, snapshot atomicity under real and
+sanitizer-instrumented threads), Prometheus textfile round-trip with
+stale-tmp invisibility, the HTTP endpoint, event-log replay, the
+metrics-only cost-signal autoscaler acceptance test, and the
+zero-cost-when-disabled pin: runtime/ never imports repro.obs.
+"""
+import json
+import os
+import subprocess
+import sys
+import threading
+import urllib.request
+
+import numpy as np
+import pytest
+
+from repro.obs import (EventLog, MetricsRegistry, MetricsHTTPServer,
+                       PROM_FILENAME, TextfileExporter, iter_events,
+                       load_metrics_dir, parse_prometheus_text,
+                       queue_depth_timeline, render_prometheus,
+                       replay_events)
+from repro.runtime import metrics as runtime_metrics
+from repro.runtime.mq import FleetAutoscaler, LocalWorkerPool, QueueBackend
+
+
+# ---------------------------------------------------------------------------
+# Registry semantics
+# ---------------------------------------------------------------------------
+
+class TestRegistry:
+    def test_counter_gauge_label_identity(self):
+        reg = MetricsRegistry()
+        reg.inc("c", run="a", job="1")
+        reg.inc("c", 2.0, job="1", run="a")     # kwarg order irrelevant
+        reg.inc("c", run="b")
+        reg.set_gauge("g", 1.5, slot="0")
+        reg.set_gauge("g", 2.5, slot="0")       # overwrite, not add
+        snap = reg.snapshot()
+        key = ("c", (("job", "1"), ("run", "a")))
+        assert snap["counters"][key] == 3.0
+        assert snap["counters"][("c", (("run", "b"),))] == 1.0
+        assert snap["gauges"][("g", (("slot", "0"),))] == 2.5
+        assert reg.counter_total("c") == 4.0
+        assert reg.gauge_value("g", slot="0") == 2.5
+        assert reg.gauge_value("g", slot="9") is None
+        assert reg.agg_gauge("missing", "mean", 7.0) == 7.0
+
+    def test_histogram_buckets_and_declare(self):
+        reg = MetricsRegistry()
+        reg.declare_histogram("h", [0.1, 1.0])   # +inf appended
+        for v in (0.05, 0.5, 0.5, 5.0):
+            reg.observe("h", v)
+        h = reg.snapshot()["histograms"][("h", ())]
+        assert h["buckets"] == [0.1, 1.0, float("inf")]
+        assert h["counts"] == [1, 2, 1]          # per-bucket, not cum
+        assert h["count"] == 4 and h["sum"] == pytest.approx(6.05)
+
+    def test_series_cap_degrades_to_dropped_counter(self):
+        reg = MetricsRegistry(max_series=4)
+        for i in range(10):
+            reg.inc("c", task=str(i))            # task id as label: bad
+        snap = reg.snapshot()
+        assert len(snap["counters"]) == 4
+        assert snap["dropped_series"] == 6
+        # existing series keep counting past the cap
+        reg.inc("c", 5.0, task="0")
+        assert reg.gauge_value("g") is None
+        assert reg.snapshot()["counters"][("c", (("task", "0"),))] == 6.0
+
+    def test_snapshot_consistent_under_threads(self):
+        # observe() updates counts/sum/count under one lock; snapshot()
+        # copies under the same lock — every cut must satisfy
+        # sum == count * v and cumsum(counts) == count, never a torn
+        # partial update
+        reg = MetricsRegistry()
+        stop = threading.Event()
+        bad = []
+
+        def writer():
+            while not stop.is_set():
+                reg.observe("h", 1.0)
+                reg.inc("c")
+
+        def reader():
+            for _ in range(200):
+                snap = reg.snapshot()
+                h = snap["histograms"].get(("h", ()))
+                if h is None:
+                    continue
+                if h["sum"] != pytest.approx(h["count"] * 1.0) or \
+                        sum(h["counts"]) != h["count"]:
+                    bad.append(h)
+
+        ts = [threading.Thread(target=writer) for _ in range(3)]
+        rd = threading.Thread(target=reader)
+        for t in ts + [rd]:
+            t.start()
+        rd.join()
+        stop.set()
+        for t in ts:
+            t.join()
+        assert not bad, bad[:3]
+
+    def test_registry_race_free_under_sanitizer(self):
+        # same contract under the thread sanitizer's instrumented
+        # threading: concurrent emitters on a shared series leave no
+        # lockset/happens-before race on the tracked tables
+        from repro.analysis.sanitize import (Tracer, detect_races,
+                                             instrumented, track_dict)
+        tracer = Tracer()
+        with instrumented(tracer):
+            reg = MetricsRegistry()              # lock built instrumented
+            reg._counters = track_dict(reg._counters, "reg.counters",
+                                       tracer)
+
+            def emit():
+                for _ in range(20):
+                    reg.inc("c", run="r")
+                    reg.observe("h", 0.01)
+
+            ts = [threading.Thread(target=emit) for _ in range(3)]
+            for t in ts:
+                t.start()
+            for t in ts:
+                t.join()
+        assert detect_races(tracer.events) == []
+        assert reg.counter_total("c") == 60.0
+
+    def test_event_ring_and_sink(self, tmp_path):
+        log_path = str(tmp_path / "ev.jsonl")
+        with EventLog(log_path) as log:
+            reg = MetricsRegistry(events=log, event_ring=4)
+            for i in range(6):
+                reg.event("tick", i=i)
+        ring = reg.recent_events()
+        assert [e["i"] for e in ring] == [2, 3, 4, 5]   # bounded ring
+        disk = list(iter_events(log_path))
+        assert [e["i"] for e in disk] == list(range(6))  # sink keeps all
+        assert all(e["kind"] == "tick" and "t" in e for e in disk)
+
+
+# ---------------------------------------------------------------------------
+# Exporters: text round-trip, atomic textfile, HTTP endpoint
+# ---------------------------------------------------------------------------
+
+class TestExport:
+    def _populated(self):
+        reg = MetricsRegistry()
+        reg.inc("mq_claims_total", 3.0, run='we"ird\nrun')
+        reg.set_gauge("mq_ready_total", 8.0)
+        reg.declare_histogram("dur", [0.1, 1.0])
+        for v in (0.05, 0.5, 5.0):
+            reg.observe("dur", v, run="a")
+        return reg
+
+    def test_render_parse_round_trip(self):
+        reg = self._populated()
+        text = render_prometheus(reg.snapshot())
+        parsed = parse_prometheus_text(text)
+        # label escaping survives the round trip
+        assert parsed[("mq_claims_total",
+                       (("run", 'we"ird\nrun'),))] == 3.0
+        assert parsed[("mq_ready_total", ())] == 8.0
+        # buckets are CUMULATIVE with le= labels, +Inf last
+        assert parsed[("dur_bucket", (("run", "a"), ("le", "0.1")))] == 1
+        assert parsed[("dur_bucket", (("run", "a"), ("le", "1")))] == 2
+        assert parsed[("dur_bucket", (("run", "a"), ("le", "+Inf")))] == 3
+        assert parsed[("dur_count", (("run", "a"),))] == 3
+        assert parsed[("dur_sum", (("run", "a"),))] == \
+            pytest.approx(5.55)
+        assert parsed[("obs_dropped_series_total", ())] == 0
+
+    def test_textfile_atomic_and_stale_tmp_invisible(self, tmp_path):
+        reg = self._populated()
+        prom = str(tmp_path / PROM_FILENAME)
+        TextfileExporter(reg, prom).write_once()
+        # a crashed writer's tmp sibling and unrelated broker files must
+        # be invisible to the scraper
+        (tmp_path / (PROM_FILENAME + ".123.tmp")).write_text(
+            "mq_ready_total 999\n")
+        (tmp_path / "task-00.npz").write_text("not metrics")
+        merged = load_metrics_dir(str(tmp_path))
+        assert merged[("mq_ready_total", ())] == 8.0
+        assert ("mq_ready_total", ()) in merged and \
+            merged[("mq_ready_total", ())] != 999
+
+    def test_exporter_background_loop(self, tmp_path):
+        reg = self._populated()
+        prom = str(tmp_path / PROM_FILENAME)
+        with TextfileExporter(reg, prom, interval_s=0.01):
+            pass                                 # stop() does final write
+        assert parse_prometheus_text(
+            open(prom).read())[("mq_ready_total", ())] == 8.0
+
+    def test_http_metrics_endpoint(self):
+        reg = self._populated()
+        with MetricsHTTPServer(reg, port=0) as srv:
+            url = f"http://127.0.0.1:{srv.port}/metrics"
+            body = urllib.request.urlopen(url, timeout=5).read().decode()
+        parsed = parse_prometheus_text(body)
+        assert parsed[("mq_ready_total", ())] == 8.0
+
+    def test_grafana_dashboard_importable_json(self, tmp_path):
+        from repro.obs import write_grafana_dashboard
+        path = str(tmp_path / "dash.json")
+        write_grafana_dashboard(path)
+        dash = json.load(open(path))
+        assert dash["schemaVersion"] >= 30 and dash["panels"]
+        exprs = [p["targets"][0]["expr"] for p in dash["panels"]]
+        assert "mq_ready_total" in exprs
+
+
+# ---------------------------------------------------------------------------
+# Event log replay
+# ---------------------------------------------------------------------------
+
+class TestEventReplay:
+    def test_torn_tail_tolerated(self, tmp_path):
+        path = str(tmp_path / "ev.jsonl")
+        with EventLog(path) as log:
+            log.emit({"t": 1.0, "kind": "enqueue", "chunks": 2})
+            log.emit({"t": 2.0, "kind": "claim"})
+        with open(path, "a") as f:
+            f.write('{"t": 3.0, "kind": "cl')     # writer died mid-append
+        assert [e["kind"] for e in iter_events(path)] == \
+            ["enqueue", "claim"]
+        assert [e["kind"] for e in replay_events(path, ["claim"])] == \
+            ["claim"]
+
+    def test_synthetic_depth_timeline(self):
+        evts = [
+            {"t": 1.0, "kind": "enqueue", "chunks": 3},
+            {"t": 2.0, "kind": "claim"},
+            {"t": 3.0, "kind": "claim"},
+            {"t": 4.0, "kind": "lease_requeue"},
+            {"t": 5.0, "kind": "result"},         # not a depth event
+            {"t": 6.0, "kind": "claim"},
+        ]
+        assert queue_depth_timeline(evts) == [
+            (1.0, 3), (2.0, 2), (3.0, 1), (4.0, 2), (6.0, 1)]
+
+    def test_real_dispatch_replay_reconstructs_depth(self, tmp_path):
+        # a real thread-mode mq dispatch with the bus installed: the
+        # replayed event log must show peak depth == enqueued chunks
+        # minus early claims, and drain back to exactly zero
+        log = EventLog(str(tmp_path / "ev.jsonl"))
+        reg = MetricsRegistry(events=log)
+        runtime_metrics.set_registry(reg)
+        try:
+            backend = QueueBackend(
+                fn_spec="repro.fitness.hostsim:sphere", num_workers=4,
+                mq_dir=str(tmp_path / "mq"), run_id="replay",
+                lease_s=10.0, poll_interval_s=0.002,
+                worker_pool=LocalWorkerPool(num_workers=2, mode="thread",
+                                            poll_s=0.002))
+            g = np.random.default_rng(0).uniform(
+                -1.0, 1.0, (16, 4)).astype(np.float32)
+            out = backend._host_eval(g)
+            backend.close()
+        finally:
+            runtime_metrics.set_registry(None)
+            log.close()
+        assert out.shape == (16, 1)
+        evts = list(iter_events(str(tmp_path / "ev.jsonl")))
+        depth = queue_depth_timeline(evts)
+        assert depth[-1][1] == 0                 # drained
+        assert 1 <= max(d for _, d in depth) <= 4
+        n_claims = sum(1 for e in evts if e["kind"] == "claim")
+        assert n_claims == 4                     # one per chunk
+        assert reg.counter_total("mq_claims_total") == 4.0
+        assert reg.counter_total("mq_results_streamed_total") == 4.0
+        # measured spans landed in the histograms
+        snap = reg.snapshot()
+        hists = {n for (n, _) in snap["histograms"]}
+        assert {"mq_claim_latency_seconds",
+                "mq_chunk_duration_seconds"} <= hists
+
+
+# ---------------------------------------------------------------------------
+# Cost-signal autoscaler: decisions purely from planted metrics
+# ---------------------------------------------------------------------------
+
+class TestCostSignalAutoscaler:
+    def test_decisions_from_metrics_bus_alone(self):
+        # NO worker fleet, NO broker directory: every input is a gauge
+        # planted on the bus, every output is size/stats/gauges/events
+        reg = MetricsRegistry()
+        scaler = FleetAutoscaler(None, min_workers=1, max_workers=16,
+                                 signal="cost", metrics=reg,
+                                 cost_horizon_s=0.5, cooldown_s=0.0,
+                                 default_cost_s=0.1)
+        reg.set_gauge("mq_ready_total", 8.0)
+        reg.set_gauge("mq_leased_total", 0.0)
+        reg.set_gauge("mq_cost_per_task_seconds", 0.5, run="r")
+        reg.set_gauge("mq_worker_utilization", 0.2)
+        scaler._tick(1.0)
+        # 8 tasks x 0.5 s = 4 s outstanding / 0.5 s horizon -> 8 workers
+        assert scaler.size == 8
+        snap = scaler.stats_snapshot()
+        assert snap["scale_ups"] == 1 and snap["peak_workers"] == 8
+        assert reg.gauge_value("mq_outstanding_cost_seconds") == \
+            pytest.approx(4.0)
+        assert reg.gauge_value("autoscaler_desired") == 8.0
+        assert reg.counter_total("autoscaler_scale_ups_total") == 1.0
+        evts = [e for e in reg.recent_events()
+                if e["kind"] == "autoscale"]
+        assert evts and evts[-1]["signal"] == "cost"
+        assert evts[-1]["outstanding_s"] == pytest.approx(4.0)
+
+        # drained queue: predicted cost 0 -> clamp to the floor
+        reg.set_gauge("mq_ready_total", 0.0)
+        scaler._tick(2.0)
+        assert scaler.size == 1
+        assert scaler.stats_snapshot()["scale_downs"] == 1
+
+        # saturated-fleet escape hatch: tiny cost estimate says 1
+        # worker, but utilization >= util_high with work queued grows
+        # the fleet anyway
+        reg.set_gauge("mq_ready_total", 2.0)
+        reg.set_gauge("mq_cost_per_task_seconds", 0.01, run="r")
+        reg.set_gauge("mq_worker_utilization", 0.95)
+        scaler._tick(3.0)
+        assert scaler.size == 2
+
+    def test_cost_mode_starts_without_broker_dir(self):
+        scaler = FleetAutoscaler(None, signal="cost",
+                                 metrics=MetricsRegistry())
+        scaler.start()
+        scaler.stop()
+
+    def test_depth_mode_still_requires_broker_dir(self):
+        with pytest.raises(ValueError):
+            FleetAutoscaler(None, signal="depth").start()
+
+    def test_default_cost_seeds_cold_bus(self):
+        # an empty bus: no gauges at all — default_cost_s drives sizing
+        reg = MetricsRegistry()
+        scaler = FleetAutoscaler(None, min_workers=1, max_workers=8,
+                                 signal="cost", metrics=reg,
+                                 cost_horizon_s=1.0, cooldown_s=0.0,
+                                 default_cost_s=0.5)
+        reg.set_gauge("mq_ready_total", 6.0)
+        scaler._tick(1.0)                        # 6 x 0.5 / 1.0 -> 3
+        assert scaler.size == 3
+
+    def test_invalid_signal_rejected(self):
+        with pytest.raises(ValueError):
+            FleetAutoscaler(None, signal="vibes")
+
+
+# ---------------------------------------------------------------------------
+# Broker stats merge (satellite: autoscaler snapshot in backend_stats)
+# ---------------------------------------------------------------------------
+
+class TestBrokerStatsMerge:
+    def test_autoscaler_keys_merged(self):
+        from repro.core.broker import Broker
+
+        class FakeBackend:
+            num_workers = 1
+            autoscaler = FleetAutoscaler(None, signal="cost",
+                                         metrics=MetricsRegistry())
+
+            def stats_snapshot(self):
+                return {"jobs": 2}
+
+        stats = Broker(backend=FakeBackend()).backend_stats()
+        assert stats["jobs"] == 2
+        assert stats["autoscaler_ticks"] == 0
+        assert stats["autoscaler_peak_workers"] == 1
+
+
+# ---------------------------------------------------------------------------
+# Zero-cost seam: runtime/ never imports repro.obs
+# ---------------------------------------------------------------------------
+
+class TestNullSeam:
+    def test_null_registry_is_inert_default(self):
+        reg = runtime_metrics.get_registry()
+        assert reg.enabled is False
+        # every write is a no-op, no storage grows
+        reg.inc("c", run="r")
+        reg.set_gauge("g", 1.0)
+        reg.observe("h", 0.5)
+        reg.event("kind", a=1)
+
+    def test_set_registry_swaps_and_restores(self):
+        live = MetricsRegistry()
+        runtime_metrics.set_registry(live)
+        try:
+            assert runtime_metrics.get_registry() is live
+        finally:
+            runtime_metrics.set_registry(None)
+        assert runtime_metrics.get_registry() is runtime_metrics.NULL
+
+    def test_runtime_does_not_import_obs(self):
+        # import-graph pin: loading every instrumented runtime module
+        # (and the CLI wiring) must not pull in repro.obs — emission
+        # goes through the null seam until someone OPTS IN
+        code = ("import sys, repro.runtime.mq, repro.runtime.batchq, "
+                "repro.core.broker, repro.core.hostbridge, "
+                "repro.launch.ga_run; "
+                "bad = [m for m in sys.modules "
+                "if m.startswith('repro.obs')]; "
+                "assert not bad, bad; print('clean')")
+        env = dict(os.environ)
+        src = os.path.join(os.path.dirname(__file__), os.pardir, "src")
+        env["PYTHONPATH"] = os.path.abspath(src)
+        out = subprocess.run([sys.executable, "-c", code], env=env,
+                             capture_output=True, text=True)
+        assert out.returncode == 0 and "clean" in out.stdout, out.stderr
