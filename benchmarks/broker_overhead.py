@@ -25,6 +25,17 @@ burst of work on a 1-worker floor: the ``FleetAutoscaler`` sees the
 queue depth, ramps the fleet to max_workers, and drains back to the
 floor afterwards.
 
+Transport rows (file broker vs socket broker, the same queue contract
+over both): ``file_broker_claims_hb`` vs ``socket_broker_claims_hb``
+hammers the bare worker protocol — claim, lease, a burst of heartbeats,
+release, no fitness evaluation at all — with a high simulated worker
+count (32 concurrent protocol loops), isolating pure transport cost:
+directory scans + atomic renames + mtime touches on the file broker vs
+length-prefixed RPC frames over persistent TCP connections into one
+asyncio event loop on the socket broker. ``file_broker_result_latency``
+vs ``socket_broker_result_latency`` times one full task round trip
+(enqueue -> claim -> lease -> publish -> fetched), median of 30.
+
 ``mq_dispatch_sanitizer_absent`` vs ``mq_dispatch_sanitizer_loaded``
 pins the thread sanitizer's zero-cost-when-disabled seam: importing
 ``repro.analysis.sanitize`` must leave the threading factories stock
@@ -506,6 +517,130 @@ def run(csv: bool = True):
         if csv:
             print(f"{name},{wall * 1e6:.0f},us_per_evaluate_peak_{peak}"
                   f"_workers")
+
+    # file broker vs socket broker: the SAME queue contract over its two
+    # transports at a high simulated worker count. 32 "workers" each run
+    # the bare protocol — claim, lease, 64 heartbeats, release — with no
+    # fitness evaluation, so the throughput rows isolate transport cost
+    # alone; the latency rows time one full task round trip end to end
+    import os
+
+    from repro.runtime import mq as mq_proto
+    from repro.runtime.fsatomic import atomic_savez
+    from repro.runtime.netbroker import BrokerClient, BrokerServer
+
+    nb_w, nb_hb, nb_reps = 32, 64, 30
+    nb_g = np.random.default_rng(7).uniform(-1, 1, (8, 4)).astype(
+        np.float32)
+    nb_fit = np.asarray(hostsim.sphere(nb_g), np.float32).reshape(
+        len(nb_g), -1)
+    nb_spec = "repro.fitness.hostsim:sphere"
+
+    def _nb_hammer(enqueue, workers):
+        """claims+heartbeats/sec over nb_w concurrent protocol loops."""
+        for i in range(nb_w):
+            enqueue(mq_proto.task_name("a", 0, i, 0, 0))
+        go = threading.Event()
+        threads = [threading.Thread(target=w, args=(go,), daemon=True)
+                   for w in workers]
+        for t in threads:
+            t.start()
+        t0 = time.perf_counter()
+        go.set()
+        for t in threads:
+            t.join()
+        return nb_w * (1 + nb_hb) / (time.perf_counter() - t0)
+
+    # -- file transport: protocol functions against a shared directory
+    nb_dir = tempfile.mkdtemp(prefix="chambga-nbbench-")
+    mq_proto.make_broker_dirs(nb_dir)
+    mq_proto.register_run(nb_dir, "a", fn_spec=nb_spec)
+
+    def _file_enqueue(name):
+        atomic_savez(os.path.join(nb_dir, mq_proto.TASKS_DIR, name),
+                     genomes=nb_g)
+
+    def _file_worker(go):
+        go.wait()
+        name = None
+        while name is None:
+            name = mq_proto.claim_next(nb_dir)
+        lease = mq_proto.write_lease(nb_dir, name)
+        for _ in range(nb_hb):
+            os.utime(lease, None)
+        mq_proto.release_claim(nb_dir, name)
+
+    rate = _nb_hammer(_file_enqueue, [_file_worker] * nb_w)
+    rows.append(("file_broker_claims_hb", rate))
+    if csv:
+        print(f"file_broker_claims_hb,{rate:.0f},claims_plus_heartbeats_"
+              f"per_sec_{nb_w}_workers")
+    lats = []
+    for i in range(nb_reps):
+        name = mq_proto.task_name("a", 1, i, 0, 0)
+        t0 = time.perf_counter()
+        _file_enqueue(name)
+        got = mq_proto.claim_next(nb_dir)
+        mq_proto.write_lease(nb_dir, got)
+        mq_proto.publish_result(nb_dir, got, nb_fit, 0.01)
+        with np.load(mq_proto.mq_result_path(nb_dir, got)) as z:
+            z["fitness"]
+        lats.append(time.perf_counter() - t0)
+        mq_proto.release_claim(nb_dir, got)
+        os.remove(mq_proto.mq_result_path(nb_dir, got))
+    us = float(np.median(lats)) * 1e6
+    rows.append(("file_broker_result_latency", us))
+    if csv:
+        print(f"file_broker_result_latency,{us:.0f},"
+              f"us_enqueue_to_fetched_median")
+    shutil.rmtree(nb_dir, ignore_errors=True)
+
+    # -- socket transport: the same protocol as RPC frames, one
+    #    persistent connection per simulated worker
+    with BrokerServer() as nb_server:
+        nb_mgr = BrokerClient(nb_server.addr)
+        nb_mgr.register_run("a", fn_spec=nb_spec)
+        nb_clients = [BrokerClient(nb_server.addr) for _ in range(nb_w)]
+
+        def _net_worker(c):
+            def w(go):
+                go.wait()
+                name = None
+                while name is None:
+                    reply, _ = c.claim()
+                    name = reply["name"]
+                c.lease(name)
+                for _ in range(nb_hb):
+                    c.heartbeat(name)
+                c.release(name)
+            return w
+
+        rate = _nb_hammer(lambda name: nb_mgr.enqueue(name, nb_g),
+                          [_net_worker(c) for c in nb_clients])
+        rows.append(("socket_broker_claims_hb", rate))
+        if csv:
+            print(f"socket_broker_claims_hb,{rate:.0f},"
+                  f"claims_plus_heartbeats_per_sec_{nb_w}_workers")
+        lats = []
+        for i in range(nb_reps):
+            name = mq_proto.task_name("a", 1, i, 0, 0)
+            t0 = time.perf_counter()
+            nb_mgr.enqueue(name, nb_g)
+            reply, _ = nb_mgr.claim()
+            got = reply["name"]
+            nb_mgr.lease(got)
+            nb_mgr.result(got, nb_fit, 0.01)
+            assert nb_mgr.result_fetch(got) is not None
+            lats.append(time.perf_counter() - t0)
+            nb_mgr.release(got)
+        us = float(np.median(lats)) * 1e6
+        rows.append(("socket_broker_result_latency", us))
+        if csv:
+            print(f"socket_broker_result_latency,{us:.0f},"
+                  f"us_enqueue_to_fetched_median")
+        for c in nb_clients:
+            c.close()
+        nb_mgr.close()
 
     # engine loop: synchronous metric reads every epoch vs the pipelined
     # (async D2H + deferred device_get) path — async must be no slower

@@ -7,6 +7,7 @@
 #   scripts/ci.sh verify-protocol # broker-contract model check, no tests
 #   scripts/ci.sh sanitize        # dynamic thread sanitizer, no tests
 #   scripts/ci.sh obs-smoke       # metrics bus + exporter smoke, no tests
+#   scripts/ci.sh netbroker-smoke # socket broker end-to-end smoke, no tests
 #
 # The verify-protocol lane model-checks the broker queue contract
 # (src/repro/analysis/proto/): a bounded, deterministic (BFS order,
@@ -45,13 +46,22 @@
 # rather than a failure when the index is unreachable; the custom pass
 # has no dependencies and always runs.
 #
+# The netbroker-smoke lane boots an in-process socket BrokerServer,
+# attaches a thread-mode NetWorkerPool plus a SocketQueueBackend over
+# TCP (`python -m repro.runtime.netbroker --smoke`), evaluates a real
+# batch end to end, and asserts the queue drained to done — tasks,
+# claimed, results, and runs all empty after close. A broken frame
+# codec, RPC handler, or worker loop fails in seconds; it runs in the
+# fast lane right after obs-smoke, before any test suite starts.
+#
 # The fast lane names tests/backend_conformance.py FIRST: the unified
 # DispatchBackend contract suite (eager/jit parity, padded-broker
 # compose, pickled fitness, drain-before-close, timeout -> re-queue ->
-# retry) parametrized over all four decoupled backends — HostPool,
-# slurm-mock, k8s-mock, and the message queue — so a contract regression
-# fails before the backend-specific suites start. (pytest de-duplicates
-# the explicit path against the tests/ directory collection.)
+# retry) parametrized over all five decoupled backends — HostPool,
+# slurm-mock, k8s-mock, and the message queue over BOTH its transports
+# (file broker and socket broker) — so a contract regression fails
+# before the backend-specific suites start. (pytest de-duplicates the
+# explicit path against the tests/ directory collection.)
 #
 # Multi-tenant + elastic mq coverage (all thread-mode, fast lane):
 #   tests/test_mq_multitenant.py — two concurrent ga_run invocations
@@ -114,22 +124,31 @@ run_obs_smoke() {
     python -m repro.obs --smoke
 }
 
+# Socket broker smoke: in-process BrokerServer + thread NetWorkerPool +
+# SocketQueueBackend over real TCP, asserts drain-to-done (see
+# repro/runtime/netbroker.py `_smoke`).
+run_netbroker_smoke() {
+    python -m repro.runtime.netbroker --smoke
+}
+
 LANE="${1:-full}"
 case "$LANE" in
     lint)      run_lint ;;
     verify-protocol) run_verify_protocol ;;
     sanitize)  run_sanitize ;;
     obs-smoke) run_obs_smoke ;;
+    netbroker-smoke) run_netbroker_smoke ;;
     fast)      run_lint
                run_verify_protocol
                run_sanitize
                run_obs_smoke
+               run_netbroker_smoke
                exec python -m pytest -x -q -m "not slow" \
                     tests/backend_conformance.py tests ;;
     durations) exec python -m pytest -q -m "not slow" --durations=15 \
                     tests/backend_conformance.py tests ;;
     full)      exec python -m pytest -x -q ;;
     *)         echo "unknown lane: $LANE" >&2
-               echo "want: fast|durations|full|lint|verify-protocol|sanitize" >&2
+               echo "want: fast|durations|full|lint|verify-protocol|sanitize|obs-smoke|netbroker-smoke" >&2
                exit 2 ;;
 esac

@@ -29,6 +29,7 @@ RULE = "atomic-write"
 PROTOCOL_MODULES = (
     "repro.runtime.mq",
     "repro.runtime.batchq",
+    "repro.runtime.netbroker",
     "repro.core.hostbridge",
     "repro.runtime.fsatomic",
 )

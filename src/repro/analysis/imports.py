@@ -32,7 +32,8 @@ from repro.analysis.core import Finding, module_matches
 
 RULE = "worker-purity"
 
-WORKER_ENTRYPOINTS = ("repro.runtime.mq", "repro.runtime.batchq")
+WORKER_ENTRYPOINTS = ("repro.runtime.mq", "repro.runtime.batchq",
+                      "repro.runtime.netbroker")
 
 #: top-level import names that disqualify the worker startup path
 HEAVY_DEPS = frozenset(

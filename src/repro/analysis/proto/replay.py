@@ -40,9 +40,24 @@ counters, and the final directory state.
 Worker ``claim`` steps claim a SPECIFIC expected name and assert they
 got it — a schedule replays exactly or fails loudly, it cannot silently
 drift into a different interleaving.
+
+Transports
+----------
+The harness replays the SAME corpus against both broker transports.
+With ``client=None`` every step executes the file broker's protocol
+functions directly against ``mq_dir``. Passing a
+:class:`repro.runtime.netbroker.BrokerClient` (duck-typed — anything
+with the same op methods) reroutes every step through the socket
+broker's RPC ops instead: ``claim`` keeps the task payload from the
+CLAIM reply for the later ``eval`` (payloads travel in frames, not
+files), ``env.expire`` becomes the server-side ``BACKDATE_LEASE`` op,
+``env.torn`` the ``TORN_RESULT`` injection, ``env.janitor`` the
+``JANITOR`` op. Zero contract divergence between the two replays is
+the transport-swap acceptance criterion.
 """
 from __future__ import annotations
 
+import io
 import os
 import threading
 import time
@@ -136,21 +151,31 @@ class Replayer:
     ``fn`` is the fitness the inline worker steps evaluate with. Worker
     state (claimed name per worker id) is tracked so ``eval``/``publish``
     steps know their task, mirroring the model's per-worker program
-    counter."""
+    counter. With ``client`` set, every step goes through the socket
+    broker's RPC ops instead of the file broker's functions (see
+    Transports in the module docstring)."""
 
-    def __init__(self, mq_dir: str, fn: Callable, *, lease_s: float):
+    def __init__(self, mq_dir: Optional[str], fn: Callable, *,
+                 lease_s: float, client=None):
         self.mq_dir = mq_dir
         self.fn = fn
         self.lease_s = lease_s
+        self.client = client
         self.held: dict = {}          # worker id -> claimed task name
         self.evaled: dict = {}        # worker id -> (fit, duration)
+        self.blobs: dict = {}         # worker id -> CLAIM payload (socket)
 
     # -- step executors ------------------------------------------------
     def worker_step(self, wid: str, action: str,
                     name: Optional[str] = None) -> None:
         from repro.runtime import mq
         if action == "claim":
-            got = mq.claim_next(self.mq_dir)
+            if self.client is not None:
+                reply, blob = self.client.claim()
+                got = reply.get("name")
+                self.blobs[wid] = blob
+            else:
+                got = mq.claim_next(self.mq_dir)
             assert got is not None, f"{wid}.claim: nothing claimable"
             if name is not None:
                 assert got == name, (
@@ -160,43 +185,72 @@ class Replayer:
         task = self.held.get(wid)
         assert task is not None, f"{wid}.{action}: holds no claim"
         if action == "lease":
-            mq.write_lease(self.mq_dir, task)
+            if self.client is not None:
+                self.client.lease(task)
+            else:
+                mq.write_lease(self.mq_dir, task)
         elif action == "eval":
-            claimed = os.path.join(self.mq_dir, mq.CLAIMED_DIR, task)
-            genomes = np.load(claimed)["genomes"]
+            if self.client is not None:
+                genomes = np.load(io.BytesIO(self.blobs[wid]))["genomes"]
+            else:
+                claimed = os.path.join(self.mq_dir, mq.CLAIMED_DIR, task)
+                genomes = np.load(claimed)["genomes"]
             fit = np.asarray(self.fn(genomes),
                              np.float32).reshape(len(genomes), -1)
             self.evaled[wid] = fit
         elif action == "publish":
-            mq.publish_result(self.mq_dir, task, self.evaled[wid], 0.01)
+            if self.client is not None:
+                self.client.result(task, self.evaled[wid], 0.01)
+            else:
+                mq.publish_result(self.mq_dir, task, self.evaled[wid],
+                                  0.01)
         elif action == "publish_conflict":
             # a conflicting value from a superseded delivery — the
             # first-result-wins assertion detects if it is ever accepted
-            fit = self.evaled[wid]
-            mq.publish_result(self.mq_dir, task,
-                              np.full_like(fit, 1e9), 0.01)
+            conflict = np.full_like(self.evaled[wid], 1e9)
+            if self.client is not None:
+                self.client.result(task, conflict, 0.01)
+            else:
+                mq.publish_result(self.mq_dir, task, conflict, 0.01)
         elif action == "publish_fail":
-            mq.publish_fail(self.mq_dir, task, "injected failure\n")
+            if self.client is not None:
+                self.client.fail(task, "injected failure\n")
+            else:
+                mq.publish_fail(self.mq_dir, task, "injected failure\n")
         elif action == "release":
-            mq.release_claim(self.mq_dir, task)
+            if self.client is not None:
+                self.client.release(task)
+            else:
+                mq.release_claim(self.mq_dir, task)
         elif action == "tombstone":
-            mq.clean_if_run_closed(self.mq_dir, task)
+            if self.client is not None:
+                self.client.tombstone(task)
+            else:
+                mq.clean_if_run_closed(self.mq_dir, task)
             del self.held[wid]
         elif action == "crash":
             # kill -9: drop all worker-local state, touch no files
             self.held.pop(wid, None)
             self.evaled.pop(wid, None)
+            self.blobs.pop(wid, None)
         else:
             raise ValueError(f"unknown worker action {action!r}")
 
     def env_step(self, action: str, name: Optional[str] = None) -> None:
         from repro.runtime import mq
         if action == "expire":
+            if self.client is not None:
+                self.client.backdate_lease(name,
+                                           10 * 3600 + self.lease_s)
+                return
             lease = os.path.join(self.mq_dir, mq.CLAIMED_DIR,
                                  name + mq.LEASE_SUFFIX)
             past = time.time() - 10 * 3600 - self.lease_s
             os.utime(lease, (past, past))
         elif action == "torn":
+            if self.client is not None:
+                self.client.torn_result(name)
+                return
             from repro.runtime.fsatomic import TMP_SUFFIX
             path = mq.mq_result_path(self.mq_dir, name) + TMP_SUFFIX
             # deliberately torn: this WRITES the crashed-mid-write
@@ -204,7 +258,10 @@ class Replayer:
             with open(path, "w") as f:
                 f.write("torn")
         elif action == "janitor":
-            mq.janitor_sweep(self.mq_dir, max_age_s=0.0)
+            if self.client is not None:
+                self.client.janitor(0.0)
+            else:
+                mq.janitor_sweep(self.mq_dir, max_age_s=0.0)
         else:
             raise ValueError(f"unknown env action {action!r}")
 

@@ -17,6 +17,8 @@ model step              real code modelled
 ``w*.release``          ``mq.release_claim`` (claim + lease removal, quiet)
 ``w*.tombstone``        ``mq.clean_if_run_closed`` (late-publish self-clean)
 ``w*.crash[_torn]``     kill -9 at a step boundary / mid-atomic-write
+``w*.crash_frame``      kill -9 mid-RESULT frame (``rpc_broker``: the
+                        socket server discards the torn frame whole)
 ``m.enqueue``           ``QueueBackend._host_eval_inner`` enqueue loop
 ``m.accept``            pump: first existing result of any issued name wins
 ``m.fail``              pump fail-marker check + ``run_chunks_retry`` retry
@@ -65,6 +67,15 @@ untrustworthy — see ``tests/test_proto_model.py``):
   late publish from a superseded delivery leaks a result file past the
   close sweep (quiescence leak — the counterexample that motivated
   ``mq.clean_if_run_closed``).
+
+One variant is NOT a seeded bug: ``rpc_broker`` models the socket
+transport (:mod:`repro.runtime.netbroker`), where every step is an RPC
+frame executed whole by the broker server's event loop. The only
+operational difference from ``good`` is the crash-mid-publish story: a
+worker killed mid-``RESULT`` tears the FRAME, not a file — the server
+dispatches only complete frames, so nothing lands (no ``*.tmp``
+dropping; the worker just dies unreported, ``w*.crash_frame``). It
+must sweep clean: the socket transport satisfies the same contract.
 """
 from __future__ import annotations
 
@@ -77,9 +88,9 @@ from repro.analysis.proto.fsmodel import (FRESH, STALE, TORN, Fs,
                                           fail_file, lease_file,
                                           result_file, task_file)
 
-VARIANTS = ("good", "copy_claim", "release_before_publish",
-            "requeue_no_bump", "requeue_burns_retry", "torn_publish",
-            "no_tombstone")
+VARIANTS = ("good", "rpc_broker", "copy_claim",
+            "release_before_publish", "requeue_no_bump",
+            "requeue_burns_retry", "torn_publish", "no_tombstone")
 
 #: worker program counters (small-step positions inside worker_loop /
 #: process_task); "dead" is a crashed worker
@@ -291,11 +302,22 @@ def successors(state: State, cfg: SpecConfig):
                 steps.append((f"w{i}.publish {w.task}",
                               nxt.with_worker(i, Worker(W_PUBLISHED, w.task))))
                 if state.crashes < cfg.max_crashes:
-                    nxt = state.clone()
-                    nxt.fs.torn(f"results/{result_file(w.task)}")
-                    nxt.crashes += 1
-                    steps.append((f"w{i}.crash_torn {w.task}",
-                                  nxt.with_worker(i, Worker(W_DEAD, w.task))))
+                    if cfg.variant == "rpc_broker":
+                        # socket transport: a worker killed mid-RESULT
+                        # tears the FRAME, which the server discards
+                        # whole — nothing lands, the worker just dies
+                        nxt = state.clone()
+                        nxt.crashes += 1
+                        steps.append((f"w{i}.crash_frame {w.task}",
+                                      nxt.with_worker(i,
+                                                      Worker(W_DEAD, w.task))))
+                    else:
+                        nxt = state.clone()
+                        nxt.fs.torn(f"results/{result_file(w.task)}")
+                        nxt.crashes += 1
+                        steps.append((f"w{i}.crash_torn {w.task}",
+                                      nxt.with_worker(i,
+                                                      Worker(W_DEAD, w.task))))
         elif w.pc == W_TORN_OPEN:
             nxt = state.clone()
             nxt.fs.write_raw(f"results/{result_file(w.task)}",

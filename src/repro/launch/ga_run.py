@@ -86,6 +86,41 @@ Message queue (--dispatch-backend mq|mq-mock):
   of killed workers included — and the sweep is run-aware: it never
   touches another run's files in a shared directory.
 
+Network transport (--dispatch-backend mq-net):
+  The SAME queue contract as mq — cross-run priority claims, leases
+  with delivery-bump re-queue, at-least-once delivery, first-result-
+  wins, run-scoped GC — but spoken to a TCP broker SERVICE instead of
+  a shared directory: the paper's central message broker as a
+  standalone microservice. No shared volume anywhere; workers hold one
+  persistent connection each, task payloads arrive in the claim reply,
+  and results stream back inline as length-prefixed frames.
+
+    # broker service (prints its bound address)
+    python -m repro.runtime.netbroker --serve --port 7077
+    # workers, anywhere with a route to the broker
+    python -m repro.runtime.netbroker --worker --broker-addr host:7077
+    # managers, sharing the fleet exactly like Fleet sharing below
+    ga_run --fitness sphere --dispatch-backend mq-net \\
+        --broker-addr host:7077 --mq-priority 10
+
+  Without --broker-addr the run is self-contained: an in-process
+  server plus thread workers (CI / single box). Failure semantics: a
+  connection dropped mid-frame never corrupts queue state — a torn
+  RESULT frame is discarded whole by the server and the chunk is
+  re-queued via lease expiry; workers reconnect and resume claiming
+  with no duplicate winner; lease age is measured on the server's
+  clock, so manager/worker clock skew cannot fake a stale lease. The
+  broker's state is private to the server process: if the server dies,
+  managers fail their chunks through the normal retry budget. Prefer
+  the file broker (mq) when a durable shared volume exists and no
+  extra service is wanted; prefer mq-net for cloud deployments without
+  a shared filesystem and for large fleets, where every claim/
+  heartbeat/result is one TCP round-trip instead of a shared-FS
+  metadata op. --mq-autoscale is file-broker only (poison-ticket
+  scale-down); --mq-dir does not apply. The conformance suite and the
+  protocol replay corpus run against BOTH transports
+  (tests/backend_conformance.py, tests/test_proto_replay.py).
+
 Fleet sharing (multi-tenant message queue):
   Several GA runs — parameter sweeps, the meta-GA, multi-stage HVDC
   workflows — can share ONE persistent worker fleet. Every run registers
@@ -224,7 +259,7 @@ def main(argv=None):
     ap.add_argument("--dispatch-backend", default="inline",
                     choices=("inline", "host-thread", "host-process",
                              "slurm", "slurm-mock", "k8s", "k8s-mock",
-                             "mq", "mq-mock"),
+                             "mq", "mq-mock", "mq-net"),
                     help="inline: fitness traced into the XLA program; "
                          "host-*: decoupled simulation backend on a host "
                          "executor pool (external/embedded simulators); "
@@ -232,8 +267,11 @@ def main(argv=None):
                          "k8s: Kubernetes indexed Jobs via kubectl; "
                          "mq: persistent-worker message queue (leased "
                          "tasks, streaming results; see Message queue "
-                         "below); *-mock: same path on local workers (no "
-                         "cluster needed; see Schedulers below)")
+                         "below); mq-net: the same queue contract over a "
+                         "TCP broker service — no shared volume (see "
+                         "Network transport below); *-mock: same path on "
+                         "local workers (no cluster needed; see "
+                         "Schedulers below)")
     ap.add_argument("--num-workers", type=int, default=None,
                     help="broker dispatch lanes (default: dp shards)")
     ap.add_argument("--spool-dir", default=None,
@@ -266,6 +304,14 @@ def main(argv=None):
                          "volume reachable by every worker; point several "
                          "invocations at the same directory to share one "
                          "fleet (see Fleet sharing below)")
+    ap.add_argument("--broker-addr", default=None, metavar="HOST:PORT",
+                    help="socket broker server address (mq-net backend; "
+                         "start one with `python -m "
+                         "repro.runtime.netbroker --serve` and its "
+                         "workers with `--worker --broker-addr`). "
+                         "Default: a self-contained in-process server "
+                         "plus thread workers (see Network transport "
+                         "below)")
     ap.add_argument("--lease-s", type=float, default=15.0,
                     help="mq task lease: workers heartbeat at lease/4; "
                          "the manager re-queues tasks whose lease goes "
@@ -408,6 +454,44 @@ def main(argv=None):
                              else timeout),
             min_chunk_cost_s=args.min_chunk_cost_s,
             keep_jobs=None if args.keep_jobs < 0 else args.keep_jobs)
+    elif args.dispatch_backend == "mq-net":
+        from repro.runtime.netbroker import (NetWorkerPool,
+                                             SocketQueueBackend)
+        from repro.fitness import hostsim
+        fn_spec = (f"repro.fitness.hostsim:{args.fitness}"
+                   if hasattr(hostsim, args.fitness) else None)
+        if args.mq_autoscale:
+            ap.error("--mq-autoscale is not wired for mq-net (the "
+                     "poison-ticket scale-down protocol is file-broker "
+                     "only); size the fleet with --num-mq-workers")
+        if args.mq_dir:
+            ap.error("mq-net has no broker directory — the server owns "
+                     "its state privately; use --broker-addr (or drop "
+                     "--mq-dir for a self-contained in-process server)")
+        if args.mq_fleet != "local":
+            ap.error("--mq-fleet does not apply to mq-net: attach to a "
+                     "shared fleet with --broker-addr, or launch workers "
+                     "with `python -m repro.runtime.netbroker --worker`")
+        pool = None
+        if args.broker_addr is None:
+            # self-contained: in-process server + thread workers (the
+            # single-box / CI shape; SocketQueueBackend starts its own
+            # server and binds the pool to it)
+            pool = NetWorkerPool(
+                num_workers=args.num_mq_workers or workers,
+                mode="thread", lease_s=args.lease_s)
+        backend = SocketQueueBackend(
+            fitness_fn, fn_spec=fn_spec,
+            num_objectives=cfg.num_objectives,
+            num_workers=workers,
+            broker_addr=args.broker_addr,
+            run_id=args.mq_run_id, priority=args.mq_priority,
+            lease_s=args.lease_s,
+            chunk_timeout_s=(300.0 if args.chunk_timeout_s is None
+                             else timeout),
+            min_chunk_cost_s=args.min_chunk_cost_s,
+            keep_jobs=None if args.keep_jobs < 0 else args.keep_jobs,
+            worker_pool=pool)
     elif args.dispatch_backend.startswith("mq"):
         from repro.runtime.mq import (FleetAutoscaler, LocalWorkerPool,
                                       MQWorkerFleet, QueueBackend)

@@ -135,8 +135,31 @@ Invariants asserted in every reachable state:
 The model's worst adversarial schedules replay step-locked against the
 real functions in this module (``repro.analysis.proto.replay``, tier-1
 ``tests/test_proto_replay.py``), so this docstring, the spec, and the
-implementation cannot drift apart; the planned socket broker must pass
-the identical schedule corpus before swapping transports.
+implementation cannot drift apart; the socket broker passes the
+identical schedule corpus (transport-parametrized replay) as its
+admission ticket.
+
+Network transport (``repro.runtime.netbroker``)
+-----------------------------------------------
+The queue contract above is TRANSPORT-NEUTRAL: every broker file op the
+manager performs is funneled through the ``QueueBackend._t_*`` seam
+(enqueue / result & fail fetch / lease state / requeue / resolve-fail /
+deregister / :func:`gc_sweep`), and the worker protocol steps are the
+module functions (:func:`claim_next`, :func:`write_lease`,
+:func:`publish_result`, :func:`publish_fail`, :func:`release_claim`,
+:func:`clean_if_run_closed`, :func:`janitor_sweep`). The socket
+transport (``python -m repro.runtime.netbroker --serve``, manager side
+``SocketQueueBackend``, ``ga_run --dispatch-backend mq-net``) keeps
+this module as the single source of contract truth: its BrokerServer
+executes these exact functions against a server-LOCAL broker directory
+and exposes them as length-prefixed RPC frames, so managers and
+workers need no shared volume — the deployment the paper's
+"central message broker" microservice implies. ``_t_lease_state``
+returns the lease age on the AUTHORITY's clock (file: local getmtime;
+socket: computed server-side), so manager/worker clock skew can never
+fake a stale lease. The file broker stays the zero-dependency fallback
+and the conformance oracle: ``tests/backend_conformance.py`` and the
+replay corpus run against BOTH transports.
 
 Race-checked (``python -m repro.analysis --sanitize``)
 ------------------------------------------------------
@@ -306,9 +329,14 @@ def parse_task_name(name: str):
     return (run,) + tuple(int(x) for x in m.groups()[1:])
 
 
+def result_name(name: str) -> str:
+    """Basename of a task's result file — pure name arithmetic, shared
+    with transports that have no broker directory of their own."""
+    return name[:-len(".npz")] + ".result.npz"
+
+
 def mq_result_path(mq_dir: str, name: str) -> str:
-    return os.path.join(mq_dir, RESULTS_DIR, name[:-len(".npz")]
-                        + ".result.npz")
+    return os.path.join(mq_dir, RESULTS_DIR, result_name(name))
 
 
 def mq_fail_path(mq_dir: str, name: str) -> str:
@@ -670,6 +698,40 @@ def janitor_sweep(mq_dir: str, *, max_age_s: float) -> int:
             except OSError:
                 pass
     return removed
+
+
+def gc_sweep(mq_dir: str, run_id: str, active: set,
+             keep_by_job: Dict[int, set]) -> None:
+    """Run-scoped job sweep (manager protocol step): remove every queue
+    file of ``run_id``'s non-active jobs that is not a retained winning
+    result — stale tasks from superseded deliveries, claimed files +
+    leases left by killed workers, and duplicate or late results from
+    at-least-once races. RUN-AWARE: only names inside ``run_id``'s own
+    namespace are eligible; another run's live queue in a shared broker
+    directory is invisible. Files that don't parse as task names are
+    foreign content and never touched. Shared by the file transport
+    (:meth:`QueueBackend._gc_sweep`) and the socket broker's ``GC_SWEEP``
+    op (``repro.runtime.netbroker``)."""
+    prefix = f"r{run_id}_"
+    job_re = re.compile(r"j(\d{6})_")
+    for d in (TASKS_DIR, CLAIMED_DIR, RESULTS_DIR):
+        try:
+            entries = os.listdir(os.path.join(mq_dir, d))
+        except OSError:
+            continue
+        for name in entries:
+            if not name.startswith(prefix):
+                continue
+            m = job_re.match(name[len(prefix):])
+            if m is None:
+                continue
+            j = int(m.group(1))
+            if j in active or name in keep_by_job.get(j, ()):
+                continue
+            try:
+                os.remove(os.path.join(mq_dir, d, name))
+            except OSError:
+                pass
 
 
 def process_task(mq_dir: str, name: str, fn: Callable, *,
@@ -1497,23 +1559,19 @@ class QueueBackend(PureCallbackBridge):
 
     name = "mq"
 
-    def __init__(self, fitness_fn: Optional[Callable] = None, *,
-                 fn_spec: Optional[str] = None,
-                 num_objectives: int = 1, num_workers: int = 4,
-                 mq_dir: Optional[str] = None,
-                 run_id: Optional[str] = None,
-                 priority: int = 0,
-                 lease_s: float = 15.0,
-                 chunk_timeout_s: Optional[float] = 300.0,
-                 max_retries: int = 2,
-                 poll_interval_s: float = 0.02,
-                 cost_ema=None,
-                 chunk_sizing: str = "cost",
-                 min_chunk_cost_s: float = 0.0,
-                 keep_jobs: Optional[int] = 4,
-                 worker_pool=None,
-                 autoscaler: Optional[FleetAutoscaler] = None,
-                 step_hook: Optional[Callable] = None):
+    def _init_manager(self, fitness_fn: Optional[Callable], *,
+                      fn_spec: Optional[str],
+                      num_objectives: int, num_workers: int,
+                      run_id: Optional[str], priority: int,
+                      lease_s: float, chunk_timeout_s: Optional[float],
+                      max_retries: int, poll_interval_s: float,
+                      cost_ema, chunk_sizing: str, min_chunk_cost_s: float,
+                      keep_jobs: Optional[int],
+                      step_hook: Optional[Callable]) -> None:
+        """Transport-neutral manager state — everything the streaming
+        pump / retry / GC logic needs that is not a broker file op.
+        Shared verbatim by the file transport (``__init__`` below) and
+        the socket transport (``repro.runtime.netbroker``)."""
         if fitness_fn is None and not fn_spec:
             raise ValueError("need fitness_fn (pickled) or fn_spec "
                              "(module:attr import path)")
@@ -1524,9 +1582,6 @@ class QueueBackend(PureCallbackBridge):
         self.fn_spec = fn_spec
         self.num_objectives = num_objectives
         self.num_workers = max(1, num_workers)
-        self._owns_dir = mq_dir is None
-        self.mq_dir = mq_dir or tempfile.mkdtemp(prefix="chambga-mq-")
-        make_broker_dirs(self.mq_dir)
         self.run_id = sanitize_run_id(
             run_id if run_id is not None
             else f"{os.getpid():x}-{os.urandom(3).hex()}")
@@ -1561,6 +1616,35 @@ class QueueBackend(PureCallbackBridge):
         self._done_jobs: List[int] = []
         self._active_jobs: set = set()
         self._job_winners: Dict[int, set] = {}
+
+    def __init__(self, fitness_fn: Optional[Callable] = None, *,
+                 fn_spec: Optional[str] = None,
+                 num_objectives: int = 1, num_workers: int = 4,
+                 mq_dir: Optional[str] = None,
+                 run_id: Optional[str] = None,
+                 priority: int = 0,
+                 lease_s: float = 15.0,
+                 chunk_timeout_s: Optional[float] = 300.0,
+                 max_retries: int = 2,
+                 poll_interval_s: float = 0.02,
+                 cost_ema=None,
+                 chunk_sizing: str = "cost",
+                 min_chunk_cost_s: float = 0.0,
+                 keep_jobs: Optional[int] = 4,
+                 worker_pool=None,
+                 autoscaler: Optional[FleetAutoscaler] = None,
+                 step_hook: Optional[Callable] = None):
+        self._init_manager(
+            fitness_fn, fn_spec=fn_spec, num_objectives=num_objectives,
+            num_workers=num_workers, run_id=run_id, priority=priority,
+            lease_s=lease_s, chunk_timeout_s=chunk_timeout_s,
+            max_retries=max_retries, poll_interval_s=poll_interval_s,
+            cost_ema=cost_ema, chunk_sizing=chunk_sizing,
+            min_chunk_cost_s=min_chunk_cost_s, keep_jobs=keep_jobs,
+            step_hook=step_hook)
+        self._owns_dir = mq_dir is None
+        self.mq_dir = mq_dir or tempfile.mkdtemp(prefix="chambga-mq-")
+        make_broker_dirs(self.mq_dir)
         # a reused directory may hold a previous invocation's sentinels;
         # the fleet-wide STOP is FLEET state: only an invocation that
         # owns workers (its own pool, or the whole temp dir) may clear
@@ -1603,6 +1687,82 @@ class QueueBackend(PureCallbackBridge):
     def results_dir(self) -> str:
         return os.path.join(self.mq_dir, RESULTS_DIR)
 
+    # -- transport seam -------------------------------------------------
+    # Every broker file op the manager performs lives behind one of
+    # these ``_t_*`` methods (plus ``_gc_sweep`` below). The socket
+    # transport (``repro.runtime.netbroker.SocketQueueBackend``)
+    # overrides exactly this surface with RPCs to a BrokerServer; the
+    # chunking / streaming pump / retry / GC logic is shared verbatim,
+    # which is what keeps both transports on ONE queue contract.
+
+    def _t_enqueue(self, name: str, chunk: np.ndarray) -> None:
+        """Publish one ready task (atomic: a worker claim never sees a
+        torn task file)."""
+        atomic_savez(os.path.join(self.tasks_dir, name),
+                     genomes=np.asarray(chunk, np.float32))
+
+    def _t_result_fetch(self, name: str):
+        """``(fitness, duration)`` of a landed result, else None. Only
+        the exact result path is read — a crashed publisher's ``*.tmp``
+        dropping is a different name and stays invisible."""
+        res = mq_result_path(self.mq_dir, name)
+        if not os.path.exists(res):
+            return None
+        with np.load(res) as d:
+            return d["fitness"], float(d["duration"])
+
+    def _t_fail_fetch(self, name: str) -> Optional[str]:
+        """Traceback text of a failure marker, else None."""
+        fp = mq_fail_path(self.mq_dir, name)
+        if not os.path.exists(fp):
+            return None
+        with open(fp) as f:
+            return f.read()
+
+    def _t_lease_state(self, name: str):
+        """``(claimed, age_s)`` of a task's claim, age on the lease
+        AUTHORITY's clock: seconds since the last heartbeat, or None
+        when the claim exists but no lease was written yet (the pump
+        falls back to its own first-seen wall time). The file
+        transport's authority clock is the local one; the socket
+        transport computes the age server-side, so manager/worker clock
+        skew can never fake a stale lease."""
+        claimed = os.path.join(self.claimed_dir, name)
+        if not os.path.exists(claimed):
+            return False, None
+        try:
+            return True, time.time() - os.path.getmtime(
+                claimed + LEASE_SUFFIX)
+        except OSError:
+            return True, None                    # claim seen, lease not yet
+
+    def _t_requeue(self, old: str, new: str) -> bool:
+        """Atomically move a stale claim back into the ready queue under
+        its bumped-delivery name. False means the rename lost — the
+        worker just finished, failed, or released it — and the sweep
+        should move on."""
+        claimed = os.path.join(self.claimed_dir, old)
+        try:
+            os.rename(claimed, os.path.join(self.tasks_dir, new))
+        except OSError:
+            return False
+        try:
+            os.remove(claimed + LEASE_SUFFIX)
+        except OSError:
+            pass
+        return True
+
+    def _t_resolve_fail_fetch(self) -> Optional[str]:
+        """This run's fitness-unresolvable marker text, else None."""
+        path = resolve_fail_path(self.mq_dir, self.run_id)
+        if not os.path.exists(path):
+            return None
+        with open(path) as f:
+            return f.read()
+
+    def _t_deregister_run(self) -> None:
+        deregister_run(self.mq_dir, self.run_id)
+
     # -- host-side evaluation ------------------------------------------
     def _host_eval(self, genomes: np.ndarray,
                    perm: Optional[np.ndarray] = None,
@@ -1644,8 +1804,7 @@ class QueueBackend(PureCallbackBridge):
 
         def enqueue(i, chunk, attempt, delivery) -> str:
             name = task_name(self.run_id, job, i, attempt, delivery)
-            atomic_savez(os.path.join(self.tasks_dir, name),
-                          genomes=np.asarray(chunk, np.float32))
+            self._t_enqueue(name, chunk)
             return name
 
         def submit(i, chunk, attempt):
@@ -1703,12 +1862,10 @@ class QueueBackend(PureCallbackBridge):
                 if tr.done is not None or tr.failed_msg is not None:
                     continue
                 for name in tr.all_names:
-                    res = mq_result_path(self.mq_dir, name)
-                    if not os.path.exists(res):
+                    got = self._t_result_fetch(name)
+                    if got is None:
                         continue
-                    with np.load(res) as d:
-                        fit = d["fitness"]
-                        dur = float(d["duration"])
+                    fit, dur = got
                     if fit.shape != (int(sizes[i]), self.num_objectives):
                         tr.failed_msg = (
                             f"result shape {fit.shape} != "
@@ -1722,39 +1879,29 @@ class QueueBackend(PureCallbackBridge):
                 # only the LATEST delivery's failure counts: an older
                 # delivery that crashed after being re-queued is already
                 # superseded by its replacement
-                fp = mq_fail_path(self.mq_dir, tr.latest)
-                if os.path.exists(fp):
-                    with open(fp) as f:
-                        tr.failed_msg = f.read()
+                msg = self._t_fail_fetch(tr.latest)
+                if msg is not None:
+                    tr.failed_msg = msg
                     continue
-                claimed = os.path.join(self.claimed_dir, tr.latest)
-                if not os.path.exists(claimed):
+                claimed, age = self._t_lease_state(tr.latest)
+                if not claimed:
                     continue                     # still queued (or racing)
                 if tr.t_exec is None:
                     tr.t_exec = time.monotonic()
                 if tr.seen_wall is None:
                     tr.seen_wall = now_w
-                lease = claimed + LEASE_SUFFIX
-                try:
-                    beat = os.path.getmtime(lease)
-                except OSError:
-                    beat = tr.seen_wall          # claim seen, lease not yet
-                if now_w - beat > self.lease_s:
+                if age is None:
+                    age = now_w - tr.seen_wall   # claim seen, lease not yet
+                if age > self.lease_s:
                     # dead worker: re-queue under a bumped delivery — the
                     # atomic rename means a worker that is merely slow
                     # either keeps the file (rename fails, we retry next
                     # sweep) or has already released it
+                    old = tr.latest
                     new = task_name(self.run_id, job, i, tr.attempt,
                                     tr.delivery + 1)
-                    try:
-                        os.rename(claimed,
-                                  os.path.join(self.tasks_dir, new))
-                    except OSError:
+                    if not self._t_requeue(old, new):
                         continue                 # it just finished/failed
-                    try:
-                        os.remove(lease)
-                    except OSError:
-                        pass
                     tr.delivery += 1
                     tr.track(new)
                     with self._lock:
@@ -1762,13 +1909,10 @@ class QueueBackend(PureCallbackBridge):
                     m = _metrics.get_registry()
                     if m.enabled:
                         m.inc("mq_lease_requeues_total", run=self.run_id)
-                        m.observe("mq_lease_age_seconds", now_w - beat)
+                        m.observe("mq_lease_age_seconds", age)
                         m.event("lease_requeue", run=self.run_id,
-                                task=os.path.basename(claimed),
-                                requeued_as=new,
-                                age_s=round(now_w - beat, 4))
-
-        resolve_fail = resolve_fail_path(self.mq_dir, self.run_id)
+                                task=old, requeued_as=new,
+                                age_s=round(age, 4))
 
         def wait(i, token, timeout_s):
             tr = tracks[i]
@@ -1779,15 +1923,15 @@ class QueueBackend(PureCallbackBridge):
                 if tr.failed_msg is not None:
                     raise ChunkFailure(
                         f"chunk {i} worker failed:\n{tr.failed_msg}")
-                if os.path.exists(resolve_fail):
+                unresolved = self._t_resolve_fail_fetch()
+                if unresolved is not None:
                     # a worker could not resolve THIS run's fitness (bad
                     # import spec / unpicklable callable): the condition
                     # is permanent for the run, so fail fast instead of
                     # waiting on tasks the fleet will never serve
-                    with open(resolve_fail) as f:
-                        raise ChunkFailure(
-                            "a worker failed to resolve the fitness "
-                            f"(chunk {i} waiting):\n{f.read()}")
+                    raise ChunkFailure(
+                        "a worker failed to resolve the fitness "
+                        f"(chunk {i} waiting):\n{unresolved}")
                 if (timeout_s is not None and tr.t_exec is not None
                         and time.monotonic() - tr.t_exec > timeout_s):
                     with self._lock:
@@ -1838,8 +1982,7 @@ class QueueBackend(PureCallbackBridge):
         winners = set()
         for tr in tracks:
             if tr.done_name:
-                winners.add(os.path.basename(
-                    mq_result_path(self.mq_dir, tr.done_name)))
+                winners.add(result_name(tr.done_name))
         with self._lock:
             self._active_jobs.discard(job)
             self._job_winners[job] = winners
@@ -1856,34 +1999,10 @@ class QueueBackend(PureCallbackBridge):
             m.event("job_done", run=self.run_id, job=job)
 
     def _gc_sweep(self, active: set, keep_by_job: Dict[int, set]) -> None:
-        """Remove every queue file of a non-active job that is not a
-        retained winning result: stale tasks from superseded deliveries,
-        claimed files + leases left by killed workers, and duplicate or
-        late results from at-least-once races. The sweep is RUN-AWARE:
-        only names in this backend's own ``run_id`` namespace are
-        eligible — another run's live queue in a shared broker directory
-        is invisible to it. Files that don't parse as task names are
-        foreign content and never touched."""
-        prefix = f"r{self.run_id}_"
-        job_re = re.compile(r"j(\d{6})_")
-        for d in (self.tasks_dir, self.claimed_dir, self.results_dir):
-            try:
-                entries = os.listdir(d)
-            except OSError:
-                continue
-            for name in entries:
-                if not name.startswith(prefix):
-                    continue
-                m = job_re.match(name[len(prefix):])
-                if m is None:
-                    continue
-                j = int(m.group(1))
-                if j in active or name in keep_by_job.get(j, ()):
-                    continue
-                try:
-                    os.remove(os.path.join(d, name))
-                except OSError:
-                    pass
+        """Run-scoped job sweep — see :func:`gc_sweep` (part of the
+        transport seam: the socket backend forwards this to the broker
+        server's ``GC_SWEEP`` op instead)."""
+        gc_sweep(self.mq_dir, self.run_id, active, keep_by_job)
 
     def stats_snapshot(self) -> Dict[str, int]:
         """Consistent copy of the counters — every increment in this
@@ -1922,8 +2041,13 @@ class QueueBackend(PureCallbackBridge):
             # files are garbage" signal (worker tombstones and the idle
             # janitor both key on it), so a deregistered run's retained
             # winners would not survive a live fleet
-            deregister_run(self.mq_dir, self.run_id)
+            self._t_deregister_run()
             self._gc_sweep(set(), {})
+        self._t_teardown(remove_dir)
+
+    def _t_teardown(self, remove_dir: Optional[bool]) -> None:
+        """Transport-specific tail of :meth:`close`: stop owned workers
+        (raising the fleet-wide STOP) and reclaim owned broker storage."""
         if self.worker_pool is not None:
             self.worker_pool.stop()              # raises fleet-wide STOP
         elif self._owns_dir:

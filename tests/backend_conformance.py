@@ -2,11 +2,12 @@
 
 Every decoupled backend — HostPool, the batch-scheduled spool behind the
 SLURM and Kubernetes mock schedulers, and the persistent-worker message
-queue — must behave identically behind the ``DispatchBackend`` protocol:
-eager and jitted evaluation matching inline fitness, composition with the
+queue over BOTH its transports (file broker and socket broker) — must
+behave identically behind the ``DispatchBackend`` protocol: eager and
+jitted evaluation matching inline fitness, composition with the
 broker's padded cost-balanced dispatch, pickled-fitness delivery,
 drain-before-close, and timeout -> re-queue -> retry-succeeds. This
-module holds that contract ONCE, parametrized over all four backends;
+module holds that contract ONCE, parametrized over all five backends;
 ``test_batchq.py`` and ``test_mq.py`` import :func:`run_conformance` /
 :func:`make_backend` for their backend-specific variants.
 
@@ -29,11 +30,14 @@ from repro.fitness import hostsim
 from repro.runtime.batchq import (KubernetesScheduler, LocalMockScheduler,
                                   MockKubectl, SlurmArrayBackend)
 from repro.runtime.mq import LocalWorkerPool, QueueBackend
+from repro.runtime.netbroker import NetWorkerPool, SocketQueueBackend
 
 SPEC = "repro.fitness.hostsim:sphere"
 
-#: the four decoupled execution substrates behind the ONE protocol
-BACKEND_KINDS = ("hostpool", "slurm-mock", "k8s-mock", "mq")
+#: the five decoupled execution substrates behind the ONE protocol —
+#: "mq-net" is the socket transport of the same queue contract, so the
+#: file and socket brokers pass the IDENTICAL contract suite
+BACKEND_KINDS = ("hostpool", "slurm-mock", "k8s-mock", "mq", "mq-net")
 
 
 def run_conformance(backend, n=29):
@@ -98,6 +102,15 @@ def make_backend(kind, tmp_path, *, fitness_fn=None, fn_spec=None,
                             chunk_timeout_s=chunk_timeout_s,
                             max_retries=max_retries,
                             poll_interval_s=0.005)
+    if kind == "mq-net":
+        pool = NetWorkerPool(num_workers=num_workers, mode="thread",
+                             lease_s=30.0, poll_s=0.005, fn=pool_fn)
+        return SocketQueueBackend(fitness_fn, fn_spec=fn_spec,
+                                  num_workers=num_workers,
+                                  worker_pool=pool,
+                                  chunk_timeout_s=chunk_timeout_s,
+                                  max_retries=max_retries,
+                                  poll_interval_s=0.005)
     raise ValueError(kind)
 
 

@@ -262,6 +262,103 @@ def test_two_runs_shared_fleet_bit_identical_to_dedicated(tmp_path):
                               np.asarray(pop_d.genomes))
 
 
+def test_two_runs_one_socket_broker_bit_identical_to_dedicated(tmp_path):
+    """The socket-transport acceptance case: two concurrent ``ga_run``s
+    attached to ONE ``BrokerServer`` (shared fleet, network transport,
+    no shared volume) finish bit-identical to dedicated file-broker
+    runs — sharing a broker service changes WHERE chunks run, never
+    what they compute, across transports too."""
+    from repro.launch.ga_run import main
+    from repro.runtime.netbroker import BrokerServer, NetWorkerPool
+    common = ["--fitness", "sphere", "--genes", "1", "--islands", "2",
+              "--pop", "8", "--epochs", "2", "--gens-per-epoch", "2"]
+    args_a = common + ["--seed", "3"]
+    args_b = common + ["--seed", "5"]
+    mq_args = ["--chunk-timeout-s", "60", "--keep-jobs", "2",
+               "--lease-s", "30"]
+    # dedicated references on the FILE broker: cross-transport equality
+    ded_a = main(args_a + ["--dispatch-backend", "mq-mock",
+                           "--mq-dir", str(tmp_path / "ded-a")] + mq_args)
+    ded_b = main(args_b + ["--dispatch-backend", "mq-mock",
+                           "--mq-dir", str(tmp_path / "ded-b")] + mq_args)
+    results = {}
+
+    def run(tag, argv):
+        results[tag] = main(argv)
+
+    with BrokerServer() as server:
+        host, port = server.addr
+        pool = NetWorkerPool(num_workers=3, mode="thread",
+                             addr=server.addr, lease_s=30.0,
+                             poll_s=0.005).start()
+        shared_args = ["--dispatch-backend", "mq-net",
+                       "--broker-addr", f"{host}:{port}"] + mq_args
+        threads = [
+            threading.Thread(target=run, args=(
+                "a", args_a + shared_args
+                + ["--mq-run-id", "run-a", "--mq-priority", "5"]),
+                daemon=True),
+            threading.Thread(target=run, args=(
+                "b", args_b + shared_args
+                + ["--mq-run-id", "run-b", "--mq-priority", "1"]),
+                daemon=True),
+        ]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(timeout=180)
+            assert not t.is_alive()
+        pool.stop()
+    for tag, (pop_d, hist_d) in (("a", ded_a), ("b", ded_b)):
+        pop_s, hist_s = results[tag]
+        assert len(hist_s) == len(hist_d) == 2
+        assert np.array_equal(np.asarray(pop_s.fitness),
+                              np.asarray(pop_d.fitness))
+        assert np.array_equal(np.asarray(pop_s.genomes),
+                              np.asarray(pop_d.genomes))
+
+
+def test_one_tenant_closing_leaves_socket_server_and_other_alive(tmp_path):
+    """Per-run teardown over the network transport: a tenant closing
+    against a shared ``BrokerServer`` deregisters only itself — the
+    server keeps running, the fleet-wide STOP stays down, the workers
+    stay alive, and the other tenant still evaluates."""
+    from repro.runtime.netbroker import (BrokerClient, BrokerServer,
+                                         NetWorkerPool,
+                                         SocketQueueBackend)
+    with BrokerServer() as server:
+        pool = NetWorkerPool(num_workers=2, mode="thread",
+                             addr=server.addr, lease_s=30.0,
+                             poll_s=0.005).start()
+        a = SocketQueueBackend(fn_spec=SPEC, num_workers=2, run_id="a",
+                               broker_addr=server.addr, **FAST)
+        b = SocketQueueBackend(fn_spec=SPEC, num_workers=2, run_id="b",
+                               broker_addr=server.addr, **FAST)
+        probe = BrokerClient(server.addr)
+        g = np.random.default_rng(0).uniform(-1, 1, (6, 3)).astype(
+            np.float32)
+        np.testing.assert_allclose(a._host_eval(g), hostsim.sphere(g),
+                                   rtol=1e-6)
+        a.close()
+        # run a deregistered itself but did NOT raise the fleet STOP
+        assert not probe.stop_get()
+        assert probe.run_info("a")[0]["stamp"] is None
+        assert probe.run_info("b")[0]["stamp"] is not None
+        assert pool.alive_workers() == 2
+        # ...and swept its own namespace on the way out
+        listing = probe.listdir()
+        for d in ("tasks", "claimed", "results"):
+            assert not [n for n in listing[d] if n.startswith("ra_")]
+        # the surviving tenant still evaluates on the same fleet
+        np.testing.assert_allclose(b._host_eval(g + 1.0),
+                                   hostsim.sphere(g + 1.0), rtol=1e-6)
+        b.close()
+        assert not probe.stop_get()
+        pool.stop()                      # the OWNER stops the fleet
+        assert probe.stop_get()
+        probe.close()
+
+
 def test_external_attach_never_clears_fleet_stop(tmp_path):
     """The fleet-wide STOP sentinel is fleet state: an externally
     attaching run (no owned pool, shared dir) must not resurrect a fleet

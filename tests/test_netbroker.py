@@ -1,0 +1,267 @@
+"""Socket broker frame protocol: properties and chaos.
+
+Three layers, matching the netbroker docstring's failure-semantics
+claims exactly:
+
+* frame codec properties — length-prefixed encode/recv round-trips for
+  arbitrary header shapes and payload sizes (property-style sweep via
+  the hypothesis stub), and the codec's protocol bounds;
+* torn/partial-frame chaos against a REAL server — a connection
+  dropped mid-prefix, mid-header, or mid-blob (including mid-RESULT,
+  the money case) must never corrupt queue state: the half-sent op
+  simply never happened, the claim stays recoverable via lease expiry,
+  and the task is never lost;
+* reconnect semantics — a worker whose connection dies mid-task
+  resumes claiming on a fresh connection without double-claiming its
+  own lost task or racing another claimant for the re-queued delivery
+  (claim exclusivity across reconnects).
+"""
+import io
+import socket
+import struct
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.fitness import hostsim
+from repro.runtime.mq import task_name
+from repro.runtime.netbroker import (MAX_BLOB, MAX_HEADER, BrokerClient,
+                                     BrokerError, BrokerServer,
+                                     encode_frame, recv_frame)
+
+SPEC = "repro.fitness.hostsim:sphere"
+
+
+# ---------------------------------------------------------------------------
+# Frame codec properties
+# ---------------------------------------------------------------------------
+
+def _round_trip(header, blob):
+    """Push one encoded frame through a real socket pair and decode."""
+    a, b = socket.socketpair()
+    try:
+        a.sendall(encode_frame(header, blob))
+        return recv_frame(b)
+    finally:
+        a.close()
+        b.close()
+
+
+@settings(max_examples=25, deadline=None)
+@given(blob_size=st.integers(min_value=0, max_value=1 << 17),
+       n_keys=st.integers(min_value=0, max_value=8),
+       seed=st.integers(min_value=0, max_value=2**31))
+def test_frame_round_trip_arbitrary_sizes(blob_size, n_keys, seed):
+    rng = np.random.default_rng(seed)
+    header = {"op": "X"}
+    for i in range(n_keys):
+        # JSON-representable soup: strings, ints, floats, None, lists
+        header[f"k{i}"] = [int(rng.integers(-1e9, 1e9)),
+                          float(rng.uniform(-1e6, 1e6)), None,
+                          "x" * int(rng.integers(0, 64))]
+    blob = rng.integers(0, 256, size=blob_size, dtype=np.uint8).tobytes()
+    got_header, got_blob = _round_trip(header, blob)
+    assert got_header == header
+    assert got_blob == blob
+
+
+def test_frame_boundary_sizes_round_trip():
+    # the sizes that break off-by-one length-prefix handling
+    for size in (0, 1, 2, 7, 8, 9, (1 << 16) - 1, 1 << 16, (1 << 16) + 1):
+        blob = bytes(size)
+        header, got = _round_trip({"op": "B", "size": size}, blob)
+        assert header["size"] == size and got == blob
+
+
+def test_frame_protocol_bounds_rejected_at_encode():
+    with pytest.raises(ValueError):
+        encode_frame({"op": "X", "pad": "y" * (MAX_HEADER + 1)})
+
+
+def test_recv_frame_rejects_corrupt_prefix():
+    # a garbage prefix claiming a multi-GB blob must fail fast, not
+    # allocate — ConnectionError, the drop-the-connection signal
+    a, b = socket.socketpair()
+    try:
+        a.sendall(struct.pack("!II", MAX_HEADER + 1, MAX_BLOB))
+        with pytest.raises(ConnectionError):
+            recv_frame(b)
+    finally:
+        a.close()
+        b.close()
+
+
+def test_recv_frame_short_read_is_connection_error():
+    a, b = socket.socketpair()
+    try:
+        frame = encode_frame({"op": "X"}, b"payload")
+        a.sendall(frame[: len(frame) - 3])       # torn mid-blob
+        a.close()
+        with pytest.raises(ConnectionError):
+            recv_frame(b)
+    finally:
+        b.close()
+
+
+# ---------------------------------------------------------------------------
+# Torn/partial frames against a real server: queue state never corrupts
+# ---------------------------------------------------------------------------
+
+@pytest.fixture
+def server():
+    with BrokerServer() as s:
+        yield s
+
+
+@pytest.fixture
+def mgr(server):
+    client = BrokerClient(server.addr)
+    client.register_run("a", fn_spec=SPEC)
+    yield client
+    client.close()
+
+
+def _enqueue_one(mgr, chunk=0, delivery=0):
+    name = task_name("a", 0, chunk, 0, delivery)
+    g = np.random.default_rng(chunk).uniform(-1, 1, (4, 3)).astype(
+        np.float32)
+    mgr.enqueue(name, g)
+    return name, g
+
+
+def _raw_conn(server):
+    s = socket.create_connection(server.addr, timeout=10.0)
+    s.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+    return s
+
+
+@pytest.mark.parametrize("cut", ["mid_prefix", "mid_header", "mid_blob",
+                                 "garbage_prefix"])
+def test_torn_request_frame_never_touches_queue_state(server, mgr, cut):
+    """A connection dropped partway through ANY request frame: the
+    server discards the partial frame whole — the enqueued task is
+    still there, still claimable, and a fresh client works."""
+    name, _ = _enqueue_one(mgr)
+    raw = _raw_conn(server)
+    frame = encode_frame({"op": "CLAIM", "bad_runs": {}, "poll_s": None})
+    if cut == "mid_prefix":
+        raw.sendall(frame[:3])
+    elif cut == "mid_header":
+        raw.sendall(frame[:12])
+    elif cut == "mid_blob":
+        blob_frame = encode_frame({"op": "ENQUEUE",
+                                   "name": task_name("a", 0, 9, 0, 0)},
+                                  b"x" * 1024)
+        raw.sendall(blob_frame[: len(blob_frame) - 100])
+    else:
+        raw.sendall(struct.pack("!II", 0xFFFFFFFF, 0xFFFFFFFF))
+    raw.close()
+    # the queue is untouched: exactly the one enqueued task, claimable
+    listing = mgr.listdir()
+    assert listing["tasks"] == [name]
+    assert listing["claimed"] == []
+    reply, _ = mgr.claim()
+    assert reply["name"] == name
+    mgr.release(name)
+
+
+def test_connection_drop_mid_result_frame_is_not_a_lost_task(server, mgr):
+    """THE at-least-once money case: a worker dies mid-RESULT frame.
+    Nothing lands (no result, no torn dropping), the claim + lease
+    survive, and the normal stale-lease re-queue recovers the task —
+    released-or-expired, never lost."""
+    name, g = _enqueue_one(mgr)
+    w = BrokerClient(server.addr)
+    reply, blob = w.claim()
+    assert reply["name"] == name
+    w.lease(name)
+    fit = np.asarray(hostsim.sphere(np.load(io.BytesIO(blob))["genomes"]),
+                     np.float32)
+    # craft the worker's RESULT frame, send HALF of it, drop the socket
+    frame = encode_frame({"op": "RESULT", "name": name, "duration": 0.01,
+                          "busy": 0.01, "shape": list(fit.shape)},
+                         fit.tobytes())
+    w._sock.sendall(frame[: len(frame) // 2])
+    w._sock.close()
+    # nothing landed: no result, no fail, no torn dropping
+    assert mgr.result_fetch(name) is None
+    assert mgr.fail_fetch(name) is None
+    listing = mgr.listdir()
+    assert not [x for x in listing["results"] if x.startswith("ra_")]
+    # the claim + lease survived — the manager's recovery path works:
+    # the lease goes stale, the chunk is re-queued under a bumped
+    # delivery, and a live worker answers it
+    claimed, age = mgr.lease_state(name)
+    assert claimed
+    mgr.backdate_lease(name, 9999.0)
+    claimed, age = mgr.lease_state(name)
+    assert claimed and age > 9000
+    bumped = task_name("a", 0, 0, 0, 1)
+    assert mgr.requeue(name, bumped)
+    w2 = BrokerClient(server.addr)
+    reply2, blob2 = w2.claim()
+    assert reply2["name"] == bumped
+    w2.lease(bumped)
+    fit2 = np.asarray(
+        hostsim.sphere(np.load(io.BytesIO(blob2))["genomes"]),
+        np.float32).reshape(4, -1)
+    w2.result(bumped, fit2, 0.01)
+    w2.release(bumped)
+    w2.close()
+    got = mgr.result_fetch(bumped)
+    assert got is not None
+    np.testing.assert_allclose(got[0], hostsim.sphere(g), rtol=1e-6)
+
+
+def test_reconnecting_worker_resumes_without_duplicate_claim(server, mgr):
+    """A worker's connection dies mid-task; it reconnects and resumes
+    claiming. Exclusivity across the reconnect: it cannot re-claim its
+    own lost task (still leased in claimed/), and once the manager
+    re-queues, exactly ONE claimant wins the bumped delivery."""
+    name, g = _enqueue_one(mgr)
+    w = BrokerClient(server.addr)
+    reply, _ = w.claim()
+    assert reply["name"] == name
+    w.lease(name)
+    w._sock.close()                              # the cut, mid-task
+    w.connect()                                  # the worker's recovery
+    reply2, _ = w.claim()
+    assert reply2["name"] is None, \
+        "reconnected worker stole its own still-leased claim"
+    # manager-side recovery: stale lease -> delivery bump
+    mgr.backdate_lease(name, 9999.0)
+    bumped = task_name("a", 0, 0, 0, 1)
+    assert mgr.requeue(name, bumped)
+    # two live claimants race the re-queued task: one winner, exactly
+    reply_a, blob_a = w.claim()
+    w3 = BrokerClient(server.addr)
+    reply_b, _ = w3.claim()
+    winners = [r["name"] for r in (reply_a, reply_b)
+               if r["name"] is not None]
+    assert winners == [bumped], winners
+    fit = np.asarray(
+        hostsim.sphere(np.load(io.BytesIO(blob_a))["genomes"]),
+        np.float32).reshape(4, -1)
+    w.lease(bumped)
+    w.result(bumped, fit, 0.01)
+    w.release(bumped)
+    w.close()
+    w3.close()
+    got = mgr.result_fetch(bumped)
+    assert got is not None
+    np.testing.assert_allclose(got[0], hostsim.sphere(g), rtol=1e-6)
+    listing = mgr.listdir()
+    assert listing["claimed"] == []
+
+
+def test_server_error_reply_carries_traceback(server):
+    client = BrokerClient(server.addr)
+    try:
+        with pytest.raises(BrokerError, match="unknown op"):
+            client.call("NO_SUCH_OP")
+        # the connection survives an error reply — protocol errors are
+        # replies, not disconnects
+        client.ping()
+    finally:
+        client.close()

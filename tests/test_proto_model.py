@@ -122,6 +122,17 @@ def test_good_spec_single_chunk_sweeps_clean_and_complete():
     assert result.stop_reason == "exhausted"
 
 
+def test_rpc_broker_variant_sweeps_clean_and_complete():
+    """The socket transport's crash-mid-publish story (torn FRAME
+    discarded whole by the server, nothing lands) satisfies the same
+    contract — the transport swap is safe by the model, not by hope."""
+    result = explore(SpecConfig(chunks=1, variant="rpc_broker"),
+                     max_depth=80)
+    assert result.ok and result.complete, result.violation
+    assert result.states > 1_000
+    assert result.stop_reason == "exhausted"
+
+
 def test_bounded_sweep_reports_incomplete_not_clean():
     # "no violation found" under a bound must never read as a full pass
     result = explore(SpecConfig(), max_depth=80, max_states=50)

@@ -7,6 +7,13 @@ step-barrier (``QueueBackend(step_hook=...)`` + the extracted worker
 protocol helpers), as deterministic tier-1 regressions. Every schedule
 here replays a counterexample trace the explorer produced against the
 pre-fix protocol (or the good-spec race the contract clause is about).
+
+Every replay is parametrized over BOTH broker transports: the file
+broker (protocol functions against a shared directory) and the socket
+broker (the same steps as RPC frames against a ``BrokerServer``, via
+``Replayer(client=...)``). Bit-identical behavior across the corpus —
+same accepted fitness, same stats counters, same leftovers — is the
+transport-swap acceptance criterion.
 """
 import os
 import threading
@@ -20,9 +27,13 @@ from repro.analysis.proto.replay import Replayer, StepGate, to_replay_steps
 from repro.analysis.proto.spec import SpecConfig
 from repro.fitness import hostsim
 from repro.runtime.mq import (CLAIMED_DIR, RESULTS_DIR, TASKS_DIR,
-                              QueueBackend, mq_result_path)
+                              QueueBackend, result_name)
+from repro.runtime.netbroker import (BrokerClient, BrokerServer,
+                                     SocketQueueBackend)
 
 SPEC = "repro.fitness.hostsim:sphere"
+
+TRANSPORTS = ("file", "net")
 
 
 def _ra_files(mq_dir):
@@ -39,18 +50,32 @@ class _Run:
     ``lease_s=60`` means a lease can only go stale through the
     schedule's explicit ``env.expire`` backdating — wall-clock time
     cannot perturb the interleaving, which is what makes replay
-    deterministic."""
+    deterministic. ``transport="net"`` swaps in a ``BrokerServer`` +
+    ``SocketQueueBackend`` and reroutes every replay step through RPC
+    frames; the assertions stay byte-for-byte the same."""
 
-    def __init__(self, tmp_path, n=4, num_workers=2, **kw):
+    def __init__(self, tmp_path, transport="file", n=4, num_workers=2,
+                 **kw):
         self.gate = StepGate()
-        self.mq_dir = str(tmp_path)
+        self.transport = transport
         kw.setdefault("keep_jobs", 4)
-        self.qb = QueueBackend(
-            fn_spec=SPEC, num_workers=num_workers, run_id="a",
-            mq_dir=self.mq_dir, lease_s=60.0, chunk_timeout_s=None,
-            max_retries=0, poll_interval_s=0.005,
-            step_hook=self.gate.step, **kw)
-        self.replayer = Replayer(self.mq_dir, hostsim.sphere, lease_s=60.0)
+        common = dict(fn_spec=SPEC, num_workers=num_workers, run_id="a",
+                      lease_s=60.0, chunk_timeout_s=None, max_retries=0,
+                      poll_interval_s=0.005, step_hook=self.gate.step)
+        if transport == "file":
+            self.mq_dir = str(tmp_path)
+            self.server = self.probe = None
+            self.qb = QueueBackend(mq_dir=self.mq_dir, **common, **kw)
+            self.replayer = Replayer(self.mq_dir, hostsim.sphere,
+                                     lease_s=60.0)
+        else:
+            self.server = BrokerServer().start()
+            self.mq_dir = None
+            self.qb = SocketQueueBackend(server=self.server, **common,
+                                         **kw)
+            self.probe = BrokerClient(self.server.addr)
+            self.replayer = Replayer(None, hostsim.sphere, lease_s=60.0,
+                                     client=self.probe)
         self.g = np.random.default_rng(0).uniform(
             -1, 1, (n, 3)).astype(np.float32)
         self.out = {}
@@ -66,6 +91,18 @@ class _Run:
         self.thread = threading.Thread(target=manager, daemon=True)
         self.thread.start()
 
+    def ra_files(self):
+        """This run's files across the queue dirs — via listdir on the
+        file broker, via the LIST debug op on the socket broker."""
+        if self.transport == "file":
+            return _ra_files(self.mq_dir)
+        listing = self.probe.listdir()
+        return sorted(f"{d}/{n}" for d in ("tasks", "claimed", "results")
+                      for n in listing[d] if n.startswith("ra_"))
+
+    def result_exists(self, task):
+        return f"results/{result_name(task)}" in self.ra_files()
+
     def replay(self, steps):
         self.replayer.run(self.gate, steps)
 
@@ -78,12 +115,35 @@ class _Run:
             raise self.out["exc"]
         return self.out["fit"]
 
+    def shutdown(self):
+        self.gate.open()
+        self.qb.close()                       # idempotent
+        if self.probe is not None:
+            self.probe.close()
+        if self.server is not None:
+            self.server.stop()
 
-def test_stale_lease_requeue_first_result_wins(tmp_path):
+
+@pytest.fixture(params=TRANSPORTS)
+def make_run(request, tmp_path):
+    runs = []
+
+    def factory(n=4, num_workers=2, **kw):
+        run = _Run(tmp_path, transport=request.param, n=n,
+                   num_workers=num_workers, **kw)
+        runs.append(run)
+        return run
+
+    yield factory
+    for run in runs:
+        run.shutdown()
+
+
+def test_stale_lease_requeue_first_result_wins(make_run):
     """Delivery 1 answers a re-queued chunk; the superseded delivery 0
     then lands a CONFLICTING value. First-result-wins: the accepted
     fitness is delivery 1's, and the conflict is swept with the job."""
-    run = _Run(tmp_path)
+    run = make_run()
     run.replay(sched.stale_lease_requeue_conflicting_late_publish())
     fit = run.finish()
     np.testing.assert_allclose(
@@ -94,31 +154,30 @@ def test_stale_lease_requeue_first_result_wins(tmp_path):
     assert run.qb.stats["retries"] == 0, \
         "a lease re-queue burned the retry budget"
     run.qb.close()
-    assert _ra_files(run.mq_dir) == []
+    assert run.ra_files() == []
 
 
-def test_crash_after_publish_result_accepted_orphan_reaped(tmp_path):
+def test_crash_after_publish_result_accepted_orphan_reaped(make_run):
     """A worker killed between publish and release: the chunk is not
     lost (its published result is accepted) and the job epilogue GC
     reaps the dead worker's orphan claim + lease."""
-    run = _Run(tmp_path)
+    run = make_run()
     run.replay(sched.crash_after_publish_orphan_claim())
     fit = run.finish()
     np.testing.assert_allclose(
         fit.reshape(hostsim.sphere(run.g).shape), hostsim.sphere(run.g),
         rtol=1e-6)
     # the orphan claim/lease of job 0 are gone (non-active job sweep)
-    assert not [p for p in _ra_files(run.mq_dir)
-                if p.startswith(f"{CLAIMED_DIR}/")]
+    assert not [p for p in run.ra_files() if p.startswith("claimed/")]
     run.qb.close()
-    assert _ra_files(run.mq_dir) == []
+    assert run.ra_files() == []
 
 
-def test_torn_publish_never_read_and_janitor_reaps(tmp_path):
+def test_torn_publish_never_read_and_janitor_reaps(make_run):
     """A publisher killed mid-atomic-write leaves only the torn ``*.tmp``
     sibling: the manager must never read it (delivery 1 answers the
     chunk instead) and the janitor reaps the aged dropping."""
-    run = _Run(tmp_path)
+    run = make_run()
     run.replay(sched.torn_publish_invisible_then_reaped())
     fit = run.finish()
     np.testing.assert_allclose(
@@ -126,36 +185,36 @@ def test_torn_publish_never_read_and_janitor_reaps(tmp_path):
         rtol=1e-6)
     assert run.qb.stats["lease_requeues"] == 1
     run.qb.close()
-    leftovers = _ra_files(run.mq_dir)
+    leftovers = run.ra_files()
     assert not [p for p in leftovers if p.endswith(".tmp")], leftovers
     assert leftovers == []
 
 
-def test_late_publish_after_close_tombstone_prevents_leak(tmp_path):
+def test_late_publish_after_close_tombstone_prevents_leak(make_run):
     """THE model-checker counterexample (no_tombstone variant): a
     superseded delivery publishes after ``close()`` already swept the
     run's namespace. Without ``clean_if_run_closed`` the result leaks
     forever in a shared broker dir; the tombstone removes it."""
-    run = _Run(tmp_path)
+    run = make_run()
     run.replay(sched.late_publish_after_close_prefix())
     fit = run.finish()
     np.testing.assert_allclose(
         fit.reshape(hostsim.sphere(run.g).shape), hostsim.sphere(run.g),
         rtol=1e-6)
     run.qb.close()
-    assert _ra_files(run.mq_dir) == []           # close swept everything
+    assert run.ra_files() == []                  # close swept everything
     # ...and only now does the slow worker land its superseded result
     suffix = sched.late_publish_after_close_suffix()
     run.replayer.worker_step(*suffix[0])         # w0.publish
-    leaked = mq_result_path(run.mq_dir, sched.tname(0))
-    assert os.path.exists(leaked), "setup: the late publish must land"
+    assert run.result_exists(sched.tname(0)), \
+        "setup: the late publish must land"
     for step in suffix[1:]:                      # w0.release, w0.tombstone
         run.replayer.worker_step(*step)
-    assert _ra_files(run.mq_dir) == [], \
+    assert run.ra_files() == [], \
         "late publish after close leaked past the tombstone"
 
 
-def test_explorer_counterexample_translates_and_replays(tmp_path):
+def test_explorer_counterexample_translates_and_replays(make_run):
     """Close the loop LIVE: run the explorer on the pre-fix protocol
     (``no_tombstone``), translate its minimal counterexample schedule
     with ``to_replay_steps``, and replay it against the real (fixed)
@@ -172,7 +231,7 @@ def test_explorer_counterexample_translates_and_replays(tmp_path):
     prefix = to_replay_steps(labels[:cut])
     suffix = to_replay_steps(labels[cut:])
     assert prefix and suffix, (prefix, suffix)
-    run = _Run(tmp_path, n=4, num_workers=1)     # 1 chunk, like the model
+    run = make_run(n=4, num_workers=1)           # 1 chunk, like the model
     run.replay(prefix)
     fit = run.finish()
     np.testing.assert_allclose(
@@ -187,5 +246,5 @@ def test_explorer_counterexample_translates_and_replays(tmp_path):
                                   else None)
         else:
             run.replayer.worker_step(*step)
-    assert _ra_files(run.mq_dir) == [], \
+    assert run.ra_files() == [], \
         "the explorer's leak schedule leaked against the real mq"
